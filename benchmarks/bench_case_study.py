@@ -1,0 +1,41 @@
+"""Paper Table 3 + §5.3 case study: the deployment plan the scheduler
+discovers, per workload — GPU-type -> phase affinity (A40 FLOPS-rich ->
+prefill, 3090Ti bandwidth-rich -> decode), replica counts vs the in-house
+8xA100 reference (4 replicas) at the same price budget."""
+from collections import Counter
+
+from benchmarks.common import CFG, SLO, cloud, plan_for, row
+from repro.core.workload import CODING, CONVERSATION
+
+
+def run(quick: bool = False):
+    rows = []
+    cluster = cloud()
+    for wl in (CODING, CONVERSATION):
+        plan = plan_for(wl, 2.0)
+        n_pre, n_dec = len(plan.prefill_replicas), len(plan.decode_replicas)
+        # GPU-type affinity to phases
+        aff = {"prefill": Counter(), "decode": Counter()}
+        for r in plan.replicas:
+            for i in r.devices:
+                aff[r.phase][cluster.devices[i].type_name] += 1
+        a40_pre = aff["prefill"].get("A40", 0)
+        a40_dec = aff["decode"].get("A40", 0)
+        ti_pre = aff["prefill"].get("3090Ti", 0)
+        ti_dec = aff["decode"].get("3090Ti", 0)
+        rows.append(row(
+            f"case_study_{wl.name}", (n_pre + n_dec) * 1e6,
+            f"replicas={n_pre + n_dec}(P{n_pre}/D{n_dec});"
+            f"A40_prefill={a40_pre};A40_decode={a40_dec};"
+            f"3090Ti_prefill={ti_pre};3090Ti_decode={ti_dec};"
+            f"paper=12_replicas_vs_4_inhouse"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

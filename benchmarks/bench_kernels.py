@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: wall-time of the jnp reference path on CPU (the
+runtime path this container executes) + the roofline-projected v5e time for
+the Pallas kernel at the same shape (from analytic FLOPs/bytes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import ops
+from repro.roofline.hw import TPU_V5E
+
+
+def _proj_flash(BH, Sq, Sk, hd, causal):
+    flops = 4.0 * BH * Sq * Sk * hd * (0.5 if causal else 1.0)
+    bytes_ = 2.0 * (BH * Sq * hd + 2 * (BH * Sk * hd) + BH * Sq * hd)
+    return max(flops / TPU_V5E.peak_flops, bytes_ / TPU_V5E.hbm_bw)
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    shapes = [(8, 512, 512, 64, True), (16, 1024, 1024, 128, True)]
+    if quick:
+        shapes = shapes[:1]
+    for BH, Sq, Sk, hd, causal in shapes:
+        q = jax.random.normal(key, (BH, Sq, hd), jnp.bfloat16)
+        k = jax.random.normal(key, (BH, Sk, hd), jnp.bfloat16)
+        v = jax.random.normal(key, (BH, Sk, hd), jnp.bfloat16)
+        fn = lambda: ops.flash_attention(q, k, v, causal=causal,
+                                         backend="ref").block_until_ready()
+        fn()
+        _, dt = timed(fn, repeat=3)
+        proj = _proj_flash(BH, Sq, Sk, hd, causal)
+        rows.append(row(f"flash_{BH}x{Sq}x{Sk}x{hd}", dt * 1e6,
+                        f"cpu_ms={dt*1e3:.1f};v5e_roofline_us={proj*1e6:.1f}"))
+    # decode attention
+    B, Hkv, g, S, hd = 8, 8, 4, 4096, 128
+    q = jax.random.normal(key, (B, Hkv, g, hd), jnp.bfloat16)
+    kc = jax.random.normal(key, (B, Hkv, S, hd), jnp.bfloat16)
+    vc = jax.random.normal(key, (B, Hkv, S, hd), jnp.bfloat16)
+    kl = jnp.full((B,), S, jnp.int32)
+    fn = lambda: ops.decode_attention(q, kc, vc, kl,
+                                      backend="ref").block_until_ready()
+    fn()
+    _, dt = timed(fn, repeat=3)
+    kv_bytes = 2 * B * Hkv * S * hd * 2
+    proj = kv_bytes / TPU_V5E.hbm_bw
+    rows.append(row(f"decode_attn_{B}x{Hkv*g}h_{S}ctx", dt * 1e6,
+                    f"cpu_ms={dt*1e3:.1f};v5e_roofline_us={proj*1e6:.1f}"))
+    # int4 pack
+    x = jax.random.normal(key, (16384, 128), jnp.bfloat16)
+    fn = lambda: ops.kv_quant(x, backend="ref")[0].block_until_ready()
+    fn()
+    _, dt = timed(fn, repeat=3)
+    proj = (x.size * 2 * 1.5) / TPU_V5E.hbm_bw
+    rows.append(row("kv_quant_16k_rows", dt * 1e6,
+                    f"cpu_ms={dt*1e3:.1f};v5e_roofline_us={proj*1e6:.1f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

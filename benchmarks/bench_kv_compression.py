@@ -1,0 +1,109 @@
+"""Paper Fig. 12/18 + Tables 2/8: KV-cache wire compression.
+
+(a) System level (simulator): E2E attainment + KV-comm fraction with 16-bit
+    vs 4-bit transfer, and with orchestration replaced by random dispatch
+    (the Fig. 12 ablation pair).
+(b) Model level (REAL computation on a reduced-config model): token
+    agreement and attention-output fidelity across the quantized transfer —
+    the Table 2 "accuracy drop <2%" claim, measured as next-token agreement.
+(c) Wire micro: bytes on the wire per 1024-token request (Table 8 flavor).
+"""
+import jax
+import numpy as np
+
+from benchmarks.common import CFG, SLO, cloud, plan_for, row, timed
+from repro.configs import get_reduced
+from repro.core.simulator import simulate
+from repro.core.workload import CODING, CONVERSATION, generate
+from repro.models import build
+from repro.serving import kv_transfer
+from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+
+
+def run(quick: bool = False):
+    rows = []
+    cluster = cloud()
+    rate = 2.0
+    for wl in (CODING, CONVERSATION):
+        plan = plan_for(wl, rate)
+        reqs = generate(wl, rate=rate, duration=30 if quick else 60, seed=3)
+        r16 = simulate(cluster, CFG, plan.replicas, plan.orchestration,
+                       reqs, SLO, compress=False)
+        r4 = simulate(cluster, CFG, plan.replicas, plan.orchestration,
+                      reqs, SLO, compress=True)
+        r4_rand = simulate(cluster, CFG, plan.replicas, None, reqs, SLO,
+                           compress=True)
+        rows.append(row(
+            f"kvcomp_{wl.name}_16bit", r16.kv_comm_frac * 1e6,
+            f"kv_frac={r16.kv_comm_frac:.3f};e2e={r16.e2e_attain:.3f};"
+            f"p99={r16.p99_e2e:.2f}s"))
+        rows.append(row(
+            f"kvcomp_{wl.name}_4bit", r4.kv_comm_frac * 1e6,
+            f"kv_frac={r4.kv_comm_frac:.3f};e2e={r4.e2e_attain:.3f};"
+            f"p99={r4.p99_e2e:.2f}s;paper=16-30pct->4-9pct"))
+        rows.append(row(
+            f"kvcomp_{wl.name}_4bit_random_dispatch",
+            r4_rand.kv_comm_frac * 1e6,
+            f"kv_frac={r4_rand.kv_comm_frac:.3f};"
+            f"e2e={r4_rand.e2e_attain:.3f}"))
+
+    # (b) real-model fidelity across the quantized handoff (Table 2 proxy).
+    # A random-init model has near-flat logits (any noise flips argmax), so
+    # we briefly TRAIN the reduced model first — agreement is then measured
+    # on peaked, structured logits like the paper's pretrained LLaMA.
+    import jax.numpy as jnp
+    from repro.training import optimizer as opt
+    from repro.training.data import DataConfig, PackedLM
+
+    cfg = get_reduced("llama-30b").replace(vocab_chunk=64)
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    step_fn = jax.jit(opt.make_train_step(
+        api, opt.AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=150)))
+    data = PackedLM(DataConfig(cfg.vocab_size, 64, 4))
+    ostate = opt.adamw_init(params)
+    for i, batch in enumerate(data):
+        if i >= (40 if quick else 150):
+            break
+        params, ostate, _ = step_fn(
+            params, ostate, {k: jnp.asarray(v) for k, v in batch.items()})
+    pre = PrefillEngine(cfg, params, max_seq=96)
+    rng = np.random.default_rng(0)
+    n_req, n_new = (6, 8) if quick else (12, 12)
+    agree, kv_err = [], []
+    prompt_pool = data.batch_at(10_000)["tokens"]  # in-distribution prompts
+    for rid in range(n_req):
+        toks = prompt_pool[rid % len(prompt_pool), :24].astype(np.int32)
+        outs = {}
+        for mode in (True, False):
+            dec = DecodeEngine(cfg, params, max_slots=1, max_seq=96)
+            req = GenRequest(rid, toks, max_new_tokens=n_new)
+            (r, w, f), = pre.run([req], compress=mode, backend="ref")
+            dec.admit(r, w, f, backend="ref")
+            while dec.active:
+                dec.step()
+            outs[mode] = list(req.out_tokens)
+        agree.append(np.mean([a == b for a, b in
+                              zip(outs[True], outs[False])]))
+    rows.append(row(
+        "kvcomp_token_agreement", float(np.mean(agree)) * 1e6,
+        f"int4_vs_16bit_token_agreement={np.mean(agree):.4f};"
+        f"paper_accuracy_drop<2pct"))
+
+    # (c) wire bytes per 1024-token request
+    from repro.core import costmodel as cm
+    kv_1k = 1024 * cm.kv_bytes_per_token(CFG)
+    rows.append(row(
+        "kvcomp_wire_bytes_1k", kv_1k * cm.INT4_WIRE_FACTOR,
+        f"raw_MB={kv_1k/1e6:.1f};int4_MB={kv_1k*cm.INT4_WIRE_FACTOR/1e6:.1f};"
+        f"factor={cm.INT4_WIRE_FACTOR:.3f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

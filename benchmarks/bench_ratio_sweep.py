@@ -1,0 +1,73 @@
+"""Paper Fig. 6 + Fig. 14: throughput / SLO attainment as a function of the
+prefill:decode replica ratio, per workload and cluster size (8/12/16 GPUs of
+one type, 2 GPUs per replica — the paper's A5000 setup with LLaMA-13B)."""
+import numpy as np
+
+from benchmarks.common import SLO, row
+from repro.configs.base import ModelConfig
+
+# the paper runs this experiment with LLaMA-13B (fits 2xA5000 = 48 GB)
+CFG = ModelConfig(name="llama-13b", family="dense", num_layers=40,
+                  d_model=5120, num_heads=40, num_kv_heads=40, d_ff=13824,
+                  vocab_size=32000)
+from repro.core import costmodel as cm
+from repro.core import orchestrator as orch
+from repro.core import parallel as par
+from repro.core.cluster import _build
+from repro.core.simulator import simulate
+from repro.core.workload import CODING, CONVERSATION, generate
+
+
+def _uniform_cluster(n):
+    return _build([("A5000", 4)] * (n // 4), intra_bw=12e9, inter_bw=0.6e9,
+                  seed=0, jitter=0.1)
+
+
+def run(quick: bool = False):
+    rows = []
+    sizes = (8, 16) if quick else (8, 12, 16)
+    for n in sizes:
+        cluster = _uniform_cluster(n)
+        n_rep = n // 2
+        groups = [[2 * i, 2 * i + 1] for i in range(n_rep)]
+        for wl in (CODING, CONVERSATION):
+            reqs = generate(wl, rate=1.0 * n / 8,
+                            duration=30 if quick else 60, seed=5)
+            best = (None, -1.0, None)
+            results = {}
+            for n_pre in range(1, n_rep):
+                replicas = []
+                for gi, g in enumerate(groups):
+                    phase = "prefill" if gi < n_pre else "decode"
+                    got = par.deduce(cluster, CFG, g, phase,
+                                     mean_ctx=int(wl.mean_in + wl.mean_out))
+                    if got is None:
+                        break
+                    replicas.append(orch.ReplicaPlan(g, phase, *got))
+                else:
+                    pre = [r for r in replicas if r.phase == "prefill"]
+                    dec = [r for r in replicas if r.phase == "decode"]
+                    o = orch.orchestrate(cluster, CFG, pre, dec, wl,
+                                         1.0 * n / 8, SLO)
+                    res = simulate(cluster, CFG, replicas, o, reqs, SLO)
+                    ratio = f"{n_pre}:{n_rep - n_pre}"
+                    results[ratio] = res
+                    if res.throughput_tokens > best[1]:
+                        best = (ratio, res.throughput_tokens, res)
+            for ratio, res in results.items():
+                mark = "*best*" if ratio == best[0] else ""
+                rows.append(row(
+                    f"ratio_{wl.name}_{n}gpu_{ratio.replace(':', 'to')}",
+                    res.throughput_tokens,
+                    f"thpt={res.throughput_tokens:.0f};"
+                    f"e2e={res.e2e_attain:.3f}{mark}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

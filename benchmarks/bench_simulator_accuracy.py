@@ -1,0 +1,53 @@
+"""Paper Fig. 19 (Appendix J): accuracy of the analytic SLO estimator and
+alpha-beta KV model against the event simulator ("measured" stand-in on this
+CPU-only container): correlation + mean relative error across operating
+points."""
+import numpy as np
+
+from benchmarks.common import CFG, SLO, cloud, plan_for, row
+from repro.core import costmodel as cm
+from repro.core import orchestrator as orch
+from repro.core.simulator import simulate
+from repro.core.workload import CONVERSATION, generate
+
+
+def run(quick: bool = False):
+    rows = []
+    cluster = cloud()
+    plan = plan_for(CONVERSATION, 2.0)
+    est, meas = [], []
+    scales = (1.0, 2.0, 4.0) if quick else (1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+    solver_slo = [SLO.scaled(s) for s in scales]
+    for slo_s in solver_slo:
+        o = orch.orchestrate(cluster, CFG, plan.prefill_replicas,
+                             plan.decode_replicas, CONVERSATION, 2.0, slo_s)
+        est.append(o.attainment)
+        reqs = generate(CONVERSATION, rate=2.0,
+                        duration=30 if quick else 60, seed=17)
+        meas.append(simulate(cluster, CFG, plan.replicas, o, reqs,
+                             slo_s).e2e_attain)
+    est, meas = np.array(est), np.array(meas)
+    corr = float(np.corrcoef(est, meas)[0, 1]) if len(est) > 2 else 1.0
+    mre = float(np.mean(np.abs(est - meas) / np.maximum(meas, 0.05)))
+    rows.append(row("simulator_estimator_corr", corr * 1e6,
+                    f"pearson={corr:.3f};mean_rel_err={mre:.3f};"
+                    f"points={len(est)}"))
+    # alpha-beta KV transfer model vs bytes/bandwidth first principles
+    t_model = cm.kv_transfer_time(cluster, CFG, [0], [8], 1024,
+                                  compress=True)
+    kv_bytes = 1024 * cm.kv_bytes_per_token(CFG) * cm.INT4_WIRE_FACTOR
+    beta = cluster.min_bw_between([0], [8])
+    t_first = cluster.alpha + kv_bytes / beta
+    rows.append(row("alphabeta_kv_model", t_model * 1e6,
+                    f"model_s={t_model:.4f};first_principles_s={t_first:.4f};"
+                    f"rel_err={abs(t_model-t_first)/t_first:.4f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

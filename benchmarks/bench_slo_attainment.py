@@ -1,0 +1,67 @@
+"""Paper Figs. 7-8: SLO attainment vs SLO scale, ThunderServe vs baselines.
+
+Cloud setting: ThunderServe vs HexGen-like on the heterogeneous 32-GPU pool.
+In-house setting (same price budget): vLLM-like and DistServe-like on
+8xA100. Metric: minimum SLO scale reaching 90% E2E attainment (lower is
+better), per workload x arrival rate.
+"""
+from benchmarks.common import CFG, SLO, cloud, plan_for, row
+from repro.core import baselines
+from repro.core.simulator import min_slo_scale_for, simulate
+from repro.core.workload import CODING, CONVERSATION, generate
+
+
+def run(quick: bool = False):
+    rows = []
+    cluster = cloud()
+    rates = (1.0, 2.0) if quick else (1.0, 2.0, 4.0)
+    for wl in (CODING, CONVERSATION):
+        for rate in rates:
+            reqs = generate(wl, rate=rate, duration=30 if quick else 60,
+                            seed=11)
+            plan = plan_for(wl, rate)
+            systems = {
+                "thunderserve": (cluster, plan.replicas, plan.orchestration,
+                                 False, True),
+            }
+            hx = baselines.hexgen_like(cluster, CFG, wl, rate, SLO)
+            systems["hexgen"] = (cluster, hx.replicas, hx.orchestration,
+                                 True, False)
+            vl = baselines.vllm_like(CFG, wl, rate, SLO)
+            systems["vllm"] = (vl.cluster, vl.replicas, vl.orchestration,
+                               True, False)
+            ds = baselines.distserve_like(CFG, wl, rate, SLO)
+            systems["distserve"] = (ds.cluster, ds.replicas,
+                                    ds.orchestration, False, False)
+            scales = {}
+            for name, (cl, reps, o, colo, comp) in systems.items():
+                import functools
+                from repro.core import simulator as S
+
+                def sim_at(scale, cl=cl, reps=reps, o=o, colo=colo,
+                           comp=comp):
+                    return simulate(cl, CFG, reps, o, reqs,
+                                    SLO.scaled(scale), compress=comp,
+                                    colocated=colo)
+                s = float("inf")
+                for sc in (1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0):
+                    if sim_at(sc).e2e_attain >= 0.9:
+                        s = sc
+                        break
+                scales[name] = s
+            base = scales["thunderserve"]
+            for name, s in scales.items():
+                speedup = (s / base) if base > 0 and s < float("inf") else 0
+                rows.append(row(
+                    f"slo_scale_{wl.name}_r{rate:g}_{name}", s * 1e6,
+                    f"min_scale_for_90pct={s:g};vs_thunderserve={speedup:.2f}x"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Fig. 9: system throughput (tokens/s), ThunderServe vs baselines,
+both workloads, same price budget."""
+from benchmarks.common import CFG, SLO, cloud, plan_for, row
+from repro.core import baselines
+from repro.core.simulator import simulate
+from repro.core.workload import CODING, CONVERSATION, generate
+
+
+def run(quick: bool = False):
+    rows = []
+    cluster = cloud()
+    rate = 4.0
+    for wl in (CODING, CONVERSATION):
+        reqs = generate(wl, rate=rate, duration=30 if quick else 60, seed=9)
+        plan = plan_for(wl, rate)
+        res = simulate(cluster, CFG, plan.replicas, plan.orchestration,
+                       reqs, SLO)
+        thpt = {"thunderserve": res.throughput_tokens}
+        hx = baselines.hexgen_like(cluster, CFG, wl, rate, SLO)
+        thpt["hexgen"] = simulate(cluster, CFG, hx.replicas,
+                                  hx.orchestration, reqs, SLO,
+                                  colocated=True,
+                                  compress=False).throughput_tokens
+        vl = baselines.vllm_like(CFG, wl, rate, SLO)
+        thpt["vllm"] = simulate(vl.cluster, CFG, vl.replicas,
+                                vl.orchestration, reqs, SLO, colocated=True,
+                                compress=False).throughput_tokens
+        ds = baselines.distserve_like(CFG, wl, rate, SLO)
+        thpt["distserve"] = simulate(ds.cluster, CFG, ds.replicas,
+                                     ds.orchestration, reqs, SLO,
+                                     compress=False).throughput_tokens
+        for name, t in thpt.items():
+            ratio = thpt["thunderserve"] / max(t, 1e-9)
+            rows.append(row(f"throughput_{wl.name}_{name}", t,
+                            f"tokens_per_s={t:.0f};"
+                            f"thunderserve_speedup={ratio:.2f}x"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

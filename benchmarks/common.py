@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: cached plans, timing helpers, CSV rows."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.core import baselines, scheduler
+from repro.core.cluster import make_inhouse, make_paper_cloud
+from repro.core.orchestrator import SloSpec
+from repro.core.workload import CODING, CONVERSATION, Workload, generate
+
+CFG = get_config("llama-30b")
+SLO = SloSpec(ttft_s=2.0, tpot_s=0.15, e2e_s=30.0)
+_PLAN_CACHE: dict = {}
+
+
+def cloud():
+    return make_paper_cloud()
+
+
+def plan_for(wl: Workload, rate: float, *, n_step: int = 40, seed: int = 0,
+             cluster=None, compress: bool = True):
+    key = (wl.name, rate, n_step, seed, id(cluster), compress)
+    if key not in _PLAN_CACHE:
+        _PLAN_CACHE[key] = scheduler.schedule(
+            cluster if cluster is not None else cloud(), CFG, wl, rate, SLO,
+            n_step=n_step, seed=seed, compress=compress)
+    return _PLAN_CACHE[key]
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

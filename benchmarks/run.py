@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` trims durations.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only slo,throughput]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (bench_case_study, bench_kernels,
+                            bench_kv_compression, bench_network_effect,
+                            bench_ratio_sweep, bench_rescheduling,
+                            bench_scheduling_time, bench_simulator_accuracy,
+                            bench_slo_attainment, bench_throughput)
+
+    suites = {
+        "slo": (bench_slo_attainment, "Fig 7-8 SLO attainment"),
+        "throughput": (bench_throughput, "Fig 9 throughput"),
+        "sched_time": (bench_scheduling_time, "Fig 10 scheduling time"),
+        "resched": (bench_rescheduling, "Fig 11/Table 4 rescheduling"),
+        "kvcomp": (bench_kv_compression, "Fig 12/18, Tables 2/8 KV comp"),
+        "ratio": (bench_ratio_sweep, "Fig 6/14 prefill:decode ratio"),
+        "network": (bench_network_effect, "Table 5 network effect"),
+        "sim_acc": (bench_simulator_accuracy, "Fig 19 simulator accuracy"),
+        "case": (bench_case_study, "Table 3 case study"),
+        "kernels": (bench_kernels, "kernel micro + v5e roofline"),
+    }
+    only = {s for s in args.only.split(",") if s}
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, (mod, desc) in suites.items():
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        try:
+            for r in mod.run(quick=args.quick):
+                print(r, flush=True)
+            print(f"# {key} ({desc}): {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"# {key} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.sharded import (load_checkpoint, save_checkpoint,  # noqa: F401
+                                      AsyncCheckpointer, latest_step)

@@ -1,0 +1,9 @@
+"""ThunderServe core: two-level scheduling of phase-split LLM serving over
+heterogeneous device pools (the paper's contribution).
+
+Pipeline: ClusterSpec -> tabu search (group construction + phase designation)
+x { parallel-config deduction + TSTP orchestration } -> DeploymentPlan ->
+event simulator (SLO attainment) / serving runtime.
+"""
+from repro.core.cluster import ClusterSpec, DeviceSpec, make_paper_cloud  # noqa: F401
+from repro.core.scheduler import DeploymentPlan, schedule  # noqa: F401

@@ -1,0 +1,209 @@
+"""Analytic cost model for replica latency/throughput (HexGen-style, paper
+Appendix B) with alpha-beta communication terms (Eq. 1).
+
+All estimates are roofline-based per stage: max(compute, HBM) + TP collective
++ PP transfer. Used by (a) Alg. 2 parallel-config deduction, (b) the SLO
+simulator, (c) the TSTP orchestration matrix.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.cluster import ClusterSpec
+
+BYTES = 2  # bf16/fp16 weights+activations
+
+# efficiency knobs (calibrated once; only relative accuracy matters)
+MFU = 0.5                # achievable fraction of peak flops, prefill
+HBM_EFF = 0.75           # achievable fraction of HBM bandwidth, decode
+KERNEL_OVERHEAD = 8e-6   # fixed per-layer launch/dispatch overhead (s)
+
+# int4 wire format: 4 bits/elem + (scale+zero = 8B f32) per 128-elem group
+INT4_WIRE_FACTOR = (4.0 / 16.0) + 8.0 / (128 * BYTES)
+
+
+@dataclass
+class ParallelConfig:
+    tp: int
+    pp: int
+    stages: List[List[int]]          # device idxs per stage (len == pp)
+    layer_partition: List[int]       # layers per stage (sums to num_layers)
+
+    def describe(self) -> str:
+        return f"TP={self.tp},PP={self.pp}"
+
+
+def model_bytes(cfg: ModelConfig) -> float:
+    return cfg.param_count() * BYTES
+
+
+_KV_CACHE: dict = {}
+_STATE_CACHE: dict = {}
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> float:
+    """KV (or recurrent-state amortized) bytes per token across all layers."""
+    hit = _KV_CACHE.get(cfg)
+    if hit is not None:
+        return hit
+    att_layers = sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l)
+                     and cfg.family != "ssm")
+    _KV_CACHE[cfg] = 2 * att_layers * cfg.kv_dim * BYTES
+    return _KV_CACHE[cfg]
+
+
+def state_bytes(cfg: ModelConfig, batch: int) -> float:
+    """Recurrent state bytes (SSM/hybrid archs): O(1) in sequence length."""
+    hit = _STATE_CACHE.get(cfg)
+    if hit is None:
+        total = 0.0
+        kinds = cfg.layer_kinds()
+        for l in range(cfg.num_layers):
+            kind = kinds[l]
+            if "mamba" in kind:
+                total += cfg.mamba_d_inner * (cfg.mamba_d_state * 4
+                                              + (cfg.mamba_d_conv - 1) * BYTES)
+            elif "mlstm" in kind:
+                dh = 2 * cfg.d_model // cfg.num_heads
+                total += cfg.num_heads * (dh * dh + dh + 1) * 4
+            elif "slstm" in kind:
+                total += 4 * cfg.d_model * 4
+        _STATE_CACHE[cfg] = total
+        hit = total
+    return hit * batch
+
+
+@dataclass
+class ReplicaCost:
+    """Latency/throughput estimates for one (group, parallel cfg, phase)."""
+    prefill_latency_1k: float    # TTFT for one 1024-token request (s)
+    decode_tpot: float           # per-token decode latency at ref batch (s)
+    max_decode_batch: int
+    prefill_tokens_per_s: float
+    decode_tokens_per_s: float
+
+
+def _stage_devices(cluster: ClusterSpec, stage: Sequence[int]):
+    return [cluster.devices[i] for i in stage]
+
+
+def _intra_bw(cluster: ClusterSpec, stage: Sequence[int]) -> float:
+    if len(stage) <= 1:
+        return float("inf")
+    return min(cluster.bw[i, j] for i in stage for j in stage if i != j)
+
+
+def _allreduce_time(nbytes: float, n: int, bw: float, alpha: float) -> float:
+    if n <= 1:
+        return 0.0
+    return alpha * math.log2(max(n, 2)) + 2.0 * nbytes * (n - 1) / (n * bw)
+
+
+def prefill_latency(cluster: ClusterSpec, cfg: ModelConfig,
+                    pc: ParallelConfig, tokens: int) -> float:
+    """TTFT for a prompt batch of `tokens` total tokens (latency mode)."""
+    n_act = cfg.active_param_count()
+    total = 0.0
+    d = cfg.d_model
+    for s, stage in enumerate(pc.stages):
+        devs = _stage_devices(cluster, stage)
+        layers = pc.layer_partition[s]
+        frac = layers / cfg.num_layers
+        flops = 2.0 * n_act * frac * tokens
+        # attention quadratic term (cheap estimate, causal halved)
+        eff_ctx = min(tokens, cfg.sliding_window or tokens)
+        flops += 2.0 * layers * tokens * eff_ctx * cfg.q_dim
+        peak = sum(dv.chip.peak_flops for dv in devs) * MFU
+        t_comp = flops / peak
+        t_mem = (n_act * frac * BYTES) / (
+            sum(dv.chip.hbm_bw for dv in devs) * HBM_EFF)
+        # TP collectives: 2 all-reduces of activations per layer
+        bw = _intra_bw(cluster, stage)
+        t_tp = layers * 2 * _allreduce_time(tokens * d * BYTES, pc.tp, bw,
+                                            cluster.alpha)
+        total += max(t_comp, t_mem) + t_tp + layers * KERNEL_OVERHEAD
+        if s + 1 < len(pc.stages):
+            link = cluster.min_bw_between(stage, pc.stages[s + 1])
+            total += cluster.alpha + tokens * d * BYTES / link
+    return total
+
+
+def decode_step_latency(cluster: ClusterSpec, cfg: ModelConfig,
+                        pc: ParallelConfig, batch: int, ctx: int) -> float:
+    """One decode step (one token per sequence, batch sequences)."""
+    n_act = cfg.active_param_count()
+    kv_tok = kv_bytes_per_token(cfg)
+    eff_ctx = min(ctx, cfg.sliding_window or ctx)
+    d = cfg.d_model
+    total = 0.0
+    for s, stage in enumerate(pc.stages):
+        devs = _stage_devices(cluster, stage)
+        layers = pc.layer_partition[s]
+        frac = layers / cfg.num_layers
+        hbm = sum(dv.chip.hbm_bw for dv in devs) * HBM_EFF
+        bytes_params = n_act * frac * BYTES
+        bytes_kv = batch * eff_ctx * kv_tok * frac
+        bytes_state = state_bytes(cfg, batch) * frac
+        t_mem = (bytes_params + bytes_kv + bytes_state) / hbm
+        flops = 2.0 * n_act * frac * batch
+        t_comp = flops / (sum(dv.chip.peak_flops for dv in devs) * MFU)
+        bw = _intra_bw(cluster, stage)
+        t_tp = layers * 2 * _allreduce_time(batch * d * BYTES, pc.tp, bw,
+                                            cluster.alpha)
+        total += max(t_comp, t_mem) + t_tp + layers * KERNEL_OVERHEAD
+        if s + 1 < len(pc.stages):
+            link = cluster.min_bw_between(stage, pc.stages[s + 1])
+            total += cluster.alpha + batch * d * BYTES / link
+    return total
+
+
+def max_decode_batch(cluster: ClusterSpec, cfg: ModelConfig,
+                     pc: ParallelConfig, ctx: int) -> int:
+    """Largest batch whose KV fits in the group's remaining memory."""
+    per_seq = (min(ctx, cfg.sliding_window or ctx) * kv_bytes_per_token(cfg)
+               + state_bytes(cfg, 1))
+    worst = math.inf
+    for s, stage in enumerate(pc.stages):
+        devs = _stage_devices(cluster, stage)
+        mem = sum(dv.chip.hbm_bytes for dv in devs) * 0.9
+        frac = pc.layer_partition[s] / cfg.num_layers
+        avail = mem - cfg.active_param_count() * frac * BYTES \
+            - cfg.vocab_size * cfg.d_model * BYTES
+        worst = min(worst, avail / max(per_seq * frac, 1.0))
+    return max(1, int(worst))
+
+
+def kv_transfer_time(cluster: ClusterSpec, cfg: ModelConfig,
+                     src: Sequence[int], dst: Sequence[int],
+                     n_tokens: int, *, compress: bool = True) -> float:
+    """Paper Eq. 1: T = alpha + 2*b*s*h*N_bytes / beta, with one-shot int4
+    compression shrinking N_bytes 4x (+small scale overhead)."""
+    kv = n_tokens * kv_bytes_per_token(cfg)
+    if cfg.family in ("ssm",):
+        kv = state_bytes(cfg, 1)          # recurrent snapshot, not KV
+    if cfg.family == "hybrid":
+        kv = n_tokens * kv_bytes_per_token(cfg) + state_bytes(cfg, 1)
+    if compress:
+        kv *= INT4_WIRE_FACTOR
+    beta = cluster.min_bw_between(list(src), list(dst))
+    return cluster.alpha + kv / beta
+
+
+def replica_cost(cluster: ClusterSpec, cfg: ModelConfig, pc: ParallelConfig,
+                 *, mean_ctx: int = 1024) -> ReplicaCost:
+    lat1k = prefill_latency(cluster, cfg, pc, 1024)
+    bmax = max_decode_batch(cluster, cfg, pc, mean_ctx * 2)
+    bref = max(1, min(bmax, 64))
+    tpot = decode_step_latency(cluster, cfg, pc, bref, mean_ctx)
+    # pipeline throughput: pp microbatches in flight amortize stages
+    pp_boost = min(pc.pp, 2.0) if pc.pp > 1 else 1.0
+    return ReplicaCost(
+        prefill_latency_1k=lat1k,
+        decode_tpot=tpot / pp_boost,
+        max_decode_batch=bmax,
+        prefill_tokens_per_s=1024.0 / lat1k * pp_boost,
+        decode_tokens_per_s=bref / (tpot / pp_boost),
+    )

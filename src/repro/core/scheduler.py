@@ -1,0 +1,149 @@
+"""Two-level scheduling driver (paper §3): tabu (upper) x {Alg. 2 parallel
+deduction + TSTP orchestration} (lower) -> DeploymentPlan.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import costmodel as cm
+from repro.core import orchestrator as orch
+from repro.core import parallel as par
+from repro.core import tabu
+from repro.core.cluster import ClusterSpec
+from repro.core.workload import Workload
+
+
+@dataclass
+class DeploymentPlan:
+    solution: tabu.Solution
+    replicas: List[orch.ReplicaPlan]
+    orchestration: Optional[orch.Orchestration]
+    score: float
+    search_seconds: float = 0.0
+    search_history: List[float] = field(default_factory=list)
+    evals: int = 0
+
+    @property
+    def prefill_replicas(self) -> List[orch.ReplicaPlan]:
+        return [r for r in self.replicas if r.phase == "prefill"]
+
+    @property
+    def decode_replicas(self) -> List[orch.ReplicaPlan]:
+        return [r for r in self.replicas if r.phase == "decode"]
+
+    def describe(self) -> str:
+        lines = []
+        for r in self.replicas:
+            types: Dict[str, int] = {}
+            lines.append(f"  {r.phase:8s} {r.pc.describe():12s} "
+                         f"devices={list(r.devices)}")
+        lines.append(f"  score={self.score:.4f} "
+                     f"(P:{len(self.prefill_replicas)} "
+                     f"D:{len(self.decode_replicas)})")
+        return "\n".join(lines)
+
+
+class LowerLevelSolver:
+    """Caches Alg. 2 deductions per (group, phase) — the tabu inner loop
+    re-visits the same groups constantly."""
+
+    def __init__(self, cluster: ClusterSpec, cfg: ModelConfig, wl: Workload,
+                 rate: float, slo: orch.SloSpec, *, compress: bool = True):
+        self.cluster, self.cfg = cluster, cfg
+        self.wl, self.rate, self.slo = wl, rate, slo
+        self.compress = compress
+        self._cache: Dict[Tuple, Optional[Tuple]] = {}
+
+    def deduce(self, group: Tuple[int, ...], phase: str):
+        key = (group, phase)
+        if key not in self._cache:
+            self._cache[key] = par.deduce(
+                self.cluster, self.cfg, list(group), phase,
+                mean_ctx=int(self.wl.mean_in + self.wl.mean_out))
+        return self._cache[key]
+
+    def solve(self, sol: tabu.Solution
+              ) -> Tuple[float, List[orch.ReplicaPlan],
+                         Optional[orch.Orchestration]]:
+        replicas: List[orch.ReplicaPlan] = []
+        for group, phase in zip(sol.groups, sol.phases):
+            got = self.deduce(group, phase)
+            if got is None:
+                return 0.0, [], None
+            pc, rc = got
+            replicas.append(orch.ReplicaPlan(list(group), phase, pc, rc))
+        pre = [r for r in replicas if r.phase == "prefill"]
+        dec = [r for r in replicas if r.phase == "decode"]
+        o = orch.orchestrate(self.cluster, self.cfg, pre, dec, self.wl,
+                             self.rate, self.slo, compress=self.compress)
+        if o is None:
+            return 0.0, replicas, None
+        return o.attainment, replicas, o
+
+    def score(self, sol: tabu.Solution) -> float:
+        return self.solve(sol)[0]
+
+
+def schedule(cluster: ClusterSpec, cfg: ModelConfig, wl: Workload,
+             rate: float, slo: orch.SloSpec, *, n_step: int = 100,
+             n_nghb: int = 10, n_mem: int = 5, seed: int = 0,
+             compress: bool = True, patience: int = 25) -> DeploymentPlan:
+    """Full scheduling from scratch (paper Fig. 3 workflow)."""
+    t0 = time.time()
+    solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress)
+    res = tabu.tabu_search(cluster, cfg, solver.score, n_step=n_step,
+                           n_nghb=n_nghb, n_mem=n_mem, seed=seed,
+                           patience=patience)
+    score, replicas, o = solver.solve(res.best)
+    return DeploymentPlan(solution=res.best, replicas=replicas,
+                          orchestration=o, score=score,
+                          search_seconds=time.time() - t0,
+                          search_history=res.history, evals=res.evals)
+
+
+def reschedule_lightweight(cluster: ClusterSpec, cfg: ModelConfig,
+                           plan: DeploymentPlan, wl: Workload, rate: float,
+                           slo: orch.SloSpec, *, n_step: int = 30,
+                           n_nghb: int = 8, seed: int = 1,
+                           compress: bool = True,
+                           init_solution: Optional[tabu.Solution] = None
+                           ) -> DeploymentPlan:
+    """Paper §3.4: flip-only tabu + re-orchestration.
+
+    Group construction and parallel configurations are FROZEN (no parameter
+    reloading); only phase designation and the TSTP routing change. Handles
+    workload shifts and node failures (pass init_solution = drop_nodes(...)).
+    """
+    t0 = time.time()
+    solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress)
+    # freeze parallel configs: seed the deduction cache from the live plan
+    for r in plan.replicas:
+        for ph in ("prefill", "decode"):
+            solver._cache[(tuple(r.devices), ph)] = (r.pc, r.cost)
+    res = tabu.tabu_search(cluster, cfg, solver.score, n_step=n_step,
+                           n_nghb=n_nghb, seed=seed, moves=(tabu._flip,),
+                           init=init_solution or plan.solution, patience=10)
+    score, replicas, o = solver.solve(res.best)
+    return DeploymentPlan(solution=res.best, replicas=replicas,
+                          orchestration=o, score=score,
+                          search_seconds=time.time() - t0,
+                          search_history=res.history, evals=res.evals)
+
+
+def drop_nodes(cluster: ClusterSpec, plan: DeploymentPlan,
+               dead_devices: List[int]) -> tabu.Solution:
+    """Remove failed devices; groups losing devices are dissolved into the
+    survivors (their params would need reload — the paper instead drops the
+    affected replicas and reflows traffic)."""
+    dead = set(dead_devices)
+    groups, phases = [], []
+    for g, p in zip(plan.solution.groups, plan.solution.phases):
+        if not (set(g) & dead):
+            groups.append(g)
+            phases.append(p)
+    return tabu.Solution(tuple(groups), tuple(phases))

@@ -1,0 +1,182 @@
+"""Logical-axis sharding rules (flax-style) + per-param PartitionSpecs.
+
+Models annotate intermediates with *logical* axes ("batch", "seq", "embed",
+"heads", "kv_seq", ...). The launcher installs a mapping logical->mesh axis
+for the active mesh; outside a mesh context the annotations are no-ops, so
+smoke tests on one CPU device run the identical code path.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "kv_seq": "model",       # decode KV cache: sequence-sharded (flash-decode)
+    "experts": "model",
+    "mamba_inner": "model",
+    "state": None,
+}
+
+# Sequence-parallel variant: long-context activations shard seq over model.
+SEQPAR_RULES = dict(DEFAULT_RULES, seq="model", kv_seq="model")
+
+# MQA/GQA fix-up (heads % model != 0): shard attention on the QUERY sequence,
+# force-replicate the (tiny) KV — stops XLA sharding head_dim and emitting
+# partial-sum all-reduces per attention block. "qseq"/"kseq" are only
+# constrained inside attention; the rest of the model keeps DEFAULT rules.
+ATTN_QSEQ_RULES = dict(DEFAULT_RULES, qseq="model", kseq="force_replicated")
+
+
+def set_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    _state.mesh = mesh
+    _state.rules = dict(rules) if rules is not None else None
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    old = (getattr(_state, "mesh", None), getattr(_state, "rules", None))
+    set_rules(mesh, rules if rules is not None else DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        set_rules(*old)
+
+
+def _resolve(mesh, rules, logical_axes, ndim):
+    spec = [None] * ndim
+    forced = False
+    for i, ax in enumerate(logical_axes):
+        if ax is None:
+            continue
+        target = rules.get(ax)
+        if target == "force_replicated":
+            forced = True  # emit the constraint even if fully-None
+            continue
+        if target is None:
+            continue
+        names = target if isinstance(target, tuple) else (target,)
+        names = tuple(n for n in names if n in mesh.shape)
+        if names:
+            spec[i] = names if len(names) > 1 else names[0]
+    return P(*spec), forced
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint on a logical spec; no-op without rules.
+
+    A rule value of "force_replicated" pins the constraint even when every
+    dim resolves to None (explicit replication — used to stop XLA SPMD from
+    inventing partial-sum shardings, e.g. head_dim splits under MQA)."""
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", None)
+    if mesh is None or rules is None:
+        return x
+    spec, forced = _resolve(mesh, rules, logical_axes, x.ndim)
+    # per-axis divisibility: drop (replicate) any axis that does not divide
+    kept = []
+    for i, s in enumerate(spec):
+        if s is None:
+            kept.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        kept.append(s if x.shape[i] % size == 0 else None)
+    if forced or any(s is not None for s in kept):
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*kept)))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Per-parameter PartitionSpecs (pattern-matched on the param tree path)
+# ---------------------------------------------------------------------------
+
+# (regex on "/"-joined path, spec builder given leaf ndim). Specs are written
+# for the *unstacked* param; a leading scan/stack dim is padded with None.
+_PARAM_PATTERNS = [
+    (r"embed$",                lambda: P(None, "model")),            # (V, d)
+    (r"unembed$",              lambda: P(None, "model")),            # (d, V)
+    (r"pos_embed$",            lambda: P(None, None)),
+    (r"(wq|wk|wv)/w$",         lambda: P(None, "model")),            # col-par
+    (r"wo/w$",                 lambda: P("model", None)),            # row-par
+    (r"(wi|w_up|ffn_wi|w_in)/w$", lambda: P(None, "model")),
+    (r"(w_down|ffn_wo)/w$",    lambda: P("model", None)),
+    (r"moe/wi$",               lambda: P("model", None, None)),      # (E,d,f) EP
+    (r"moe/wo$",               lambda: P("model", None, None)),
+    (r"moe/router$",           lambda: P(None, None)),
+    (r"shared/wi/w$",          lambda: P(None, "model")),
+    (r"shared/wo/w$",          lambda: P("model", None)),
+    (r"in_proj/w$",            lambda: P(None, "model")),            # mamba
+    (r"conv_w$",               lambda: P(None, "model")),            # (K, di)
+    (r"conv_b$",               lambda: P("model",)),
+    (r"x_proj/w$",             lambda: P("model", None)),
+    (r"dt_proj/w$",            lambda: P(None, "model")),
+    (r"A_log$",                lambda: P("model", None)),
+    (r"D$",                    lambda: P("model",)),
+    (r"w_if/w$",               lambda: P(None, None)),               # tiny gates
+    (r"skip$",                 lambda: P("model",)),
+]
+
+
+def param_spec(path: str, ndim: int, n_stacked_dims: int = 0) -> P:
+    for pat, builder in _PARAM_PATTERNS:
+        if re.search(pat, path):
+            spec = builder()
+            if len(spec) + n_stacked_dims == ndim:
+                return P(*([None] * n_stacked_dims + list(spec)))
+            return P(*([None] * ndim))  # rank mismatch (e.g. bias): replicate
+    return P(*([None] * ndim))  # default: replicated
+
+
+def tree_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(tree_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(tree_paths(v, f"{prefix}/{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def params_pspec_tree(params, *, stacked_prefixes=("blocks",)):
+    """PartitionSpec pytree matching ``params``; block params get a leading
+    None for the scan-stacking dimension."""
+    def rec(tree, prefix="", stacked=False):
+        if isinstance(tree, dict):
+            return {k: rec(v, f"{prefix}/{k}" if prefix else str(k),
+                           stacked or k in stacked_prefixes)
+                    for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            t = type(tree)
+            return t(rec(v, f"{prefix}/{i}", stacked)
+                     for i, v in enumerate(tree))
+        n_stack = 1 if stacked else 0
+        return param_spec(prefix, tree.ndim if hasattr(tree, "ndim")
+                          else len(tree.shape), n_stack)
+    return rec(params)

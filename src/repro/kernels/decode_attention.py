@@ -1,0 +1,100 @@
+"""Flash-decode Pallas kernel: one query token per sequence against a long
+KV cache, GQA-aware.
+
+The g = Hq/Hkv query heads that share a KV head form the matmul's row block
+(g x hd @ hd x block_k), so the MXU tile is dense even at decode. Grid =
+(B, Hkv, nK) with the KV axis innermost; online-softmax state in VMEM
+scratch. Per-sequence valid lengths arrive as a scalar-prefetch operand so
+masked KV blocks are skipped entirely (ragged continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, sm_scale, block_k, n_k):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[b]
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (g, hd)
+        k = k_ref[0, 0].astype(jnp.float32)        # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)        # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, sm_scale=None, block_k=256,
+                     interpret=False):
+    """q: (B, Hkv, g, hd); k/v: (B, Hkv, S, hd); kv_len: (B,) int32.
+
+    Returns (B, Hkv, g, hd).
+    """
+    B, Hkv, g, hd = q.shape
+    S = k.shape[2]
+    sm_scale = sm_scale or 1.0 / math.sqrt(hd)
+    block_k = min(block_k, S)
+    assert S % block_k == 0, (S, block_k)
+    n_k = S // block_k
+
+    kernel = functools.partial(_decode_kernel, sm_scale=sm_scale,
+                               block_k=block_k, n_k=n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, ki, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ki, *_: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, ki, *_: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, ki, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

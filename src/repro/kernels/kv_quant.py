@@ -1,0 +1,85 @@
+"""int4 group-wise KV-cache quantization kernels (the paper's wire format).
+
+ThunderServe quantizes KV tensors to 4 bits ONLY for the prefill->decode
+transfer, then dequantizes on arrival; compute stays 16-bit (paper §4).
+These kernels implement the pack/unpack hot loop: per-group (last axis)
+min/max affine quantization, two nibbles packed per uint8.
+
+Tiling: rows are blocked (block_n x G tiles in VMEM); G (the quantization
+group, e.g. head_dim) sits in the lane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, scale_ref, zero_ref):
+    x = x_ref[...].astype(jnp.float32)               # (bn, G)
+    mn = x.min(axis=-1, keepdims=True)
+    mx = x.max(axis=-1, keepdims=True)
+    scale = jnp.maximum(mx - mn, 1e-8) / 15.0
+    q = jnp.clip(jnp.round((x - mn) / scale), 0, 15).astype(jnp.uint8)
+    bn, G = q.shape
+    q2 = q.reshape(bn, G // 2, 2)
+    q_ref[...] = (q2[..., 0] | (q2[..., 1] << 4)).astype(jnp.uint8)
+    scale_ref[...] = scale
+    zero_ref[...] = mn
+
+
+def _dequant_kernel(q_ref, scale_ref, zero_ref, x_ref, *, out_dtype):
+    p = q_ref[...]
+    lo = (p & 0xF).astype(jnp.float32)
+    hi = (p >> 4).astype(jnp.float32)
+    bn, Gh = p.shape
+    q = jnp.stack([lo, hi], axis=-1).reshape(bn, Gh * 2)
+    x_ref[...] = (q * scale_ref[...] + zero_ref[...]).astype(out_dtype)
+
+
+def kv_quant(x, *, block_n=256, interpret=False):
+    """x: (N, G) -> (packed (N, G//2) u8, scale (N,1) f32, zero (N,1) f32)."""
+    N, G = x.shape
+    assert G % 2 == 0
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((block_n, G), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_n, G // 2), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, G // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def kv_dequant(packed, scale, zero, *, out_dtype=jnp.bfloat16, block_n=256,
+               interpret=False):
+    """Inverse of kv_quant. Returns (N, G) in out_dtype."""
+    N, Gh = packed.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, Gh), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, Gh * 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, Gh * 2), out_dtype),
+        interpret=interpret,
+    )(packed, scale, zero)

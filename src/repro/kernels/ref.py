@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
+    """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd) with BH = BHkv * group."""
+    BH, Sq, hd = q.shape
+    BHkv, Sk, _ = k.shape
+    g = BH // BHkv
+    sm_scale = sm_scale or 1.0 / math.sqrt(hd)
+    qh = q.reshape(BHkv, g, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bgqd,bkd->bgqk", qh, k.astype(jnp.float32)) * sm_scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", w, v.astype(jnp.float32))
+    return o.reshape(BH, Sq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, *, kv_len=None, sm_scale=None):
+    """q: (B, Hkv, g, hd); k/v: (B, Hkv, S, hd); kv_len: (B,) valid lengths."""
+    B, Hkv, g, hd = q.shape
+    S = k.shape[2]
+    sm_scale = sm_scale or 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if kv_len is not None:
+        mask = jnp.arange(S)[None, None, None, :] < kv_len[:, None, None, None]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def kv_quant_ref(x):
+    """Group-wise int4 quantization over the last axis. x: (N, G).
+
+    Returns (packed (N, G//2) uint8, scale (N,1) f32, zero (N,1) f32)."""
+    xf = x.astype(jnp.float32)
+    mn = xf.min(axis=-1, keepdims=True)
+    mx = xf.max(axis=-1, keepdims=True)
+    scale = jnp.maximum(mx - mn, 1e-8) / 15.0
+    q = jnp.clip(jnp.round((xf - mn) / scale), 0, 15).astype(jnp.uint8)
+    lo, hi = q[..., 0::2], q[..., 1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale, mn
+
+
+def kv_dequant_ref(packed, scale, zero, dtype=jnp.bfloat16):
+    lo = (packed & 0xF).astype(jnp.float32)
+    hi = (packed >> 4).astype(jnp.float32)
+    q = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1]
+                                             + (packed.shape[-1] * 2,))
+    return (q * scale + zero).astype(dtype)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * r * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

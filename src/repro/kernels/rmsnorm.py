@@ -1,0 +1,32 @@
+"""Fused RMSNorm Pallas kernel (single pass: square-mean, rsqrt, scale)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)               # (bn, d)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x), axis=-1, keepdims=True) + eps)
+    o_ref[...] = (x * r * (1.0 + s_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, *, eps=1e-6, block_n=256, interpret=False):
+    """x: (N, d); scale: (d,)."""
+    N, d = x.shape
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

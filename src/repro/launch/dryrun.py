@@ -1,0 +1,268 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first two lines, before ANY other import: jax locks the
+# device count on first init.
+#
+# Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+# production meshes, record memory/cost analysis + roofline terms.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh multi
+#
+# Results are cached one JSON per cell under results/dryrun/ so reruns are
+# incremental (--force to recompute).
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ASSIGNED_ARCHS, all_cells, get_config
+from repro.distributed import sharding as shd
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import registry
+from repro.models.transformer import Runtime
+from repro.roofline import analysis
+from repro.training import optimizer as opt
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly
+# ---------------------------------------------------------------------------
+
+
+def _fits(shape, spec, mesh):
+    """Zero out spec axes that do not divide the dimension."""
+    out = []
+    for i, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        names = s if isinstance(s, tuple) else (s,)
+        size = 1
+        for nm in names:
+            size *= mesh.shape[nm]
+        out.append(s if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def ns(mesh, shape, spec):
+    return NamedSharding(mesh, _fits(shape, spec, mesh))
+
+
+def batch_shardings(mesh, specs):
+    dax = data_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        spec = [dax] + [None] * (len(v.shape) - 1)
+        out[k] = ns(mesh, v.shape, P(*spec))
+    return out
+
+
+def params_shardings(mesh, params_shapes):
+    pspecs = shd.params_pspec_tree(
+        params_shapes,
+        stacked_prefixes=("blocks", "enc_layers", "dec_layers"))
+    return jax.tree.map(
+        lambda leaf, spec: ns(mesh, leaf.shape, spec), params_shapes, pspecs)
+
+
+def cache_shardings(mesh, cache_shapes, cfg):
+    dax = data_axes(mesh)
+    paths = shd.tree_paths(cache_shapes)
+
+    def spec_for(path, leaf):
+        nd = len(leaf.shape)
+        if path.endswith("lengths"):
+            return P(dax)
+        tail = path.rsplit("/", 1)[-1]
+        if tail in ("k", "v") or tail in ("self_k", "self_v", "cross_k",
+                                          "cross_v"):
+            if cfg.decode_cache_layout == "hkv_s" and tail in ("k", "v"):
+                # (L, B, Hkv, S, hd): cache seq is dim 3
+                return P(None, dax, None, "model", None)
+            # (L, B, S, Hkv, hd): batch->data, cache seq->model
+            return P(None, dax, "model", None, None)
+        if tail == "ssm":      # (L, B, di, ds)
+            return P(None, dax, "model", None)
+        if tail == "conv":     # (L, B, K-1, di)
+            return P(None, dax, None, "model")
+        if tail in ("C",):     # (L, B, H, dh, dh)
+            return P(*([None, dax] + [None] * (nd - 2)))
+        return P(*([None, dax] + [None] * (nd - 2))) if nd >= 2 else P(None)
+
+    flat = {p: spec_for(p, l) for p, l in paths.items()}
+
+    def rec(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: rec(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            t = type(tree)
+            return t(rec(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return ns(mesh, tree.shape, flat[prefix])
+
+    return rec(cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, moe_shard_map=True,
+               rules=None, donate=True, inplace_decode=False,
+               kv_layout=None, overrides=None):
+    """Returns (lowered, aux_info). Everything abstract — no allocation."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ecfg = registry._effective_cfg(cfg, shape)
+    if kv_layout:
+        ecfg = ecfg.replace(decode_cache_layout=kv_layout)
+    if overrides:
+        ecfg = ecfg.replace(**overrides)
+    rt = Runtime(mesh=mesh, moe_shard_map=moe_shard_map and bool(
+        ecfg.moe_num_experts), inplace_decode=inplace_decode)
+    api = registry.build(ecfg, rt=rt)
+
+    specs = api.input_specs(shape)
+    b_shard = batch_shardings(mesh, specs)
+    p_shapes = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_shard = params_shardings(mesh, p_shapes)
+
+    with shd.use_rules(mesh, rules or shd.DEFAULT_RULES):
+        if shape.kind == "train":
+            ocfg = opt.AdamWConfig()
+            step_fn = opt.make_train_step(api, ocfg)
+            o_shapes = jax.eval_shape(opt.adamw_init, p_shapes)
+            o_shard = {"m": p_shard, "v": p_shard,
+                       "step": NamedSharding(mesh, P())}
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1) if donate else ())
+            args = (p_shapes, o_shapes, specs)
+        elif shape.kind == "prefill":
+            def prefill_fn(params, batch):
+                return api.prefill(params, batch, max_seq=shape.seq_len)
+            jitted = jax.jit(prefill_fn, in_shardings=(p_shard, b_shard))
+            args = (p_shapes, specs)
+        else:  # decode
+            c_shapes = api.cache_specs(shape)
+            c_shard = cache_shardings(mesh, c_shapes, ecfg)
+            def decode_fn(params, cache, batch):
+                return api.decode(params, cache, batch)
+            jitted = jax.jit(decode_fn,
+                             in_shardings=(p_shard, c_shard, b_shard),
+                             out_shardings=(None, c_shard),
+                             donate_argnums=(1,) if donate else ())
+            args = (p_shapes, c_shapes, specs)
+        lowered = jitted.lower(*args)
+    return lowered, {"cfg": ecfg, "shape": shape}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force=False,
+             moe_shard_map=True, rules=None, tag="baseline",
+             inplace_decode=False, kv_layout=None, overrides=None) -> dict:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS / f"{mesh_kind}_{arch}_{shape_name}_{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        lowered, info = lower_cell(arch, shape_name, mesh,
+                                   moe_shard_map=moe_shard_map, rules=rules,
+                                   inplace_decode=inplace_decode,
+                                   kv_layout=kv_layout, overrides=overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mf = analysis.model_flops_for(info["cfg"], info["shape"])
+        roof = analysis.analyze(
+            compiled, arch=arch, shape=shape_name,
+            mesh_desc=f"{mesh_kind}:{dict(mesh.shape)}", n_chips=n_chips,
+            model_flops=mf)
+        mem = {}
+        try:
+            ma = compiled.memory_analysis()
+            mem = {k: int(getattr(ma, k)) for k in
+                   ("temp_size_in_bytes", "argument_size_in_bytes",
+                    "output_size_in_bytes", "generated_code_size_in_bytes")
+                   if hasattr(ma, k)}
+        except Exception:
+            pass
+        rec = {"status": "ok", "arch": arch, "shape": shape_name,
+               "mesh": mesh_kind, "tag": tag, "n_chips": n_chips,
+               "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+               "memory_analysis": mem, **roof.to_json()}
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {"status": "error", "arch": arch, "shape": shape_name,
+               "mesh": mesh_kind, "tag": tag,
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-4000:]}
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--moe-dense", action="store_true",
+                    help="use the pjit MoE path instead of shard_map EP")
+    ap.add_argument("--inplace-decode", action="store_true",
+                    help="fori_loop in-place KV decode (§Perf optimization)")
+    ap.add_argument("--kv-layout", default=None,
+                    help="decode cache layout override, e.g. hkv_s")
+    args = ap.parse_args()
+
+    cells, skipped = all_cells()
+    if not args.all:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    ok = fail = 0
+    for arch, shape_name in cells:
+        t0 = time.time()
+        rec = run_cell(arch, shape_name, args.mesh, force=args.force,
+                       moe_shard_map=not args.moe_dense, tag=args.tag,
+                       inplace_decode=args.inplace_decode,
+                       kv_layout=args.kv_layout)
+        dt = time.time() - t0
+        if rec["status"] == "ok":
+            ok += 1
+            print(f"[ok]   {args.mesh:6s} {arch:28s} {shape_name:12s} "
+                  f"flops/dev={rec['hlo_flops']:.3e} "
+                  f"bytes/dev={rec['hlo_bytes']:.3e} "
+                  f"coll={rec['collective_wire']:.3e}B "
+                  f"bottleneck={rec['bottleneck']:10s} ({dt:.0f}s)",
+                  flush=True)
+        else:
+            fail += 1
+            print(f"[FAIL] {args.mesh:6s} {arch:28s} {shape_name:12s} "
+                  f"{rec['error']}", flush=True)
+    if args.all:
+        for arch, shape_name, why in skipped:
+            print(f"[skip] {arch:28s} {shape_name:12s} {why}")
+    print(f"done: {ok} ok, {fail} failed, {len(skipped) if args.all else 0} "
+          f"documented skips")
+    sys.exit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

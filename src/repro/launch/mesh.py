@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS for 512 host devices *before*
+importing jax; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def model_axis(mesh) -> str:
+    return "model"

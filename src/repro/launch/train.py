@@ -1,0 +1,79 @@
+"""Training launcher: data pipeline -> sharded train loop -> async
+checkpoints, with optional mesh (on a pod this runs under pjit with the
+same shardings the dry-run compiles).
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, load_checkpoint
+from repro.configs import get_reduced
+from repro.models import build
+from repro.training import optimizer as opt
+from repro.training.data import DataConfig, PackedLM
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-30b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch).replace(vocab_chunk=args.seq)
+    api = build(cfg)
+    print(f"{cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    params = api.init(jax.random.PRNGKey(0))
+    ocfg = opt.AdamWConfig(lr=args.lr, warmup_steps=10,
+                           total_steps=args.steps)
+    ostate = opt.adamw_init(params)
+    data = PackedLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    start = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, s, extra = load_checkpoint(args.ckpt_dir,
+                                          {"p": params, "o": ostate})
+        params, ostate = state["p"], state["o"]
+        data.restore(extra["data"])
+        start = s + 1
+        print(f"resumed from step {s}")
+
+    step_fn = jax.jit(opt.make_train_step(api, ocfg))
+    t0 = time.time()
+    losses = []
+    for i in range(start, args.steps):
+        batch = data.batch_at(i)
+        data.step = i + 1
+        params, ostate, stats = step_fn(
+            params, ostate, {k: jnp.asarray(v) for k, v in batch.items()})
+        losses.append(float(stats["loss"]))
+        if i % 10 == 0:
+            print(f"step {i:4d} loss={losses[-1]:.4f} "
+                  f"lr={float(stats['lr']):.2e}")
+        if ckpt and i and i % args.ckpt_every == 0:
+            ckpt.save({"p": params, "o": ostate}, i,
+                      extra={"data": data.state()})
+    if ckpt:
+        ckpt.wait()
+    dt = time.time() - t0
+    k = max(len(losses) // 5, 1)
+    print(f"{len(losses)} steps in {dt:.1f}s; "
+          f"loss {np.mean(losses[:k]):.3f} -> {np.mean(losses[-k:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

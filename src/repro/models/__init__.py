@@ -1,0 +1,1 @@
+from repro.models.registry import ModelApi, build, build_for_cell  # noqa: F401

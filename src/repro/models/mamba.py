@@ -1,0 +1,138 @@
+"""Mamba (selective SSM) layer — the recurrent half of the jamba hybrid.
+
+Prefill/train path: chunked associative scan over time (diagonal-A selective
+SSM is linear-recurrent, so `h_t = dA_t * h_{t-1} + dBx_t` composes
+associatively). Chunking bounds the materialized (chunk, d_inner, d_state)
+tensors so the memory roofline stays within VMEM-friendly tiles.
+
+Decode path: single-step recurrence over carried (conv_state, ssm_state) —
+O(1) per token, which is what makes the jamba long_500k cell runnable.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import causal_conv1d, dense, dense_init
+
+
+def mamba_init(cfg, key):
+    d, di = cfg.d_model, cfg.mamba_d_inner
+    ds, dc, dtr = cfg.mamba_d_state, cfg.mamba_d_conv, cfg.mamba_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_bias = jnp.log(jnp.exp(jnp.exp(
+        jax.random.uniform(ks[4], (di,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001)) + math.log(0.001))) - 1.0 + 1e-9)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32)
+                   / math.sqrt(dc)).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((di,), jnp.bfloat16),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds),
+        "dt_proj": {"w": (jax.random.normal(ks[3], (dtr, di), jnp.float32)
+                          * dtr ** -0.5).astype(jnp.bfloat16),
+                    "b": dt_bias.astype(jnp.float32)},
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _ssm_inputs(cfg, p, x):
+    """Shared front half: projections, conv, gate computation.
+
+    Returns (xc, z, dA, dBx, C, D) with dA/dBx: (B, S, di, ds) fp32.
+    """
+    ds, dtr = cfg.mamba_d_state, cfg.mamba_dt_rank
+    xz = dense(p["in_proj"], x)
+    x_, z = jnp.split(xz, 2, axis=-1)
+    return x_, z
+
+
+def _selective_terms(cfg, p, xc):
+    ds, dtr = cfg.mamba_d_state, cfg.mamba_dt_rank
+    proj = dense(p["x_proj"], xc).astype(jnp.float32)  # (B,S,dtr+2ds)
+    dt_r, Bmat, Cmat = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]["w"].astype(jnp.float32)
+                         + p["dt_proj"]["b"])          # (B,S,di)
+    A = -jnp.exp(p["A_log"])                           # (di, ds)
+    dA = jnp.exp(dt[..., None] * A)                    # (B,S,di,ds)
+    # dt*x (B,S,di) outer B (B,S,ds) -> (B,S,di,ds)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bmat[..., None, :]
+    return dA, dBx, Cmat
+
+
+def mamba_apply(cfg, p, x, *, chunk: int = 512, state=None):
+    """Full-sequence path. x: (B, S, d). state: optional carried
+    (conv_state, ssm_state) from a previous segment. Returns (y, new_state).
+    """
+    B, S, d = x.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    conv_state = state[0] if state is not None else None
+    h0 = (state[1] if state is not None
+          else jnp.zeros((B, di, ds), jnp.float32))
+
+    x_, z = _ssm_inputs(cfg, p, x)
+    xc, conv_state = causal_conv1d(x_, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    c = min(chunk, S)
+    n = -(-S // c)
+    pad = n * c - S
+    xcp = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    xcb = jnp.swapaxes(xcp.reshape(B, n, c, di), 0, 1)  # (n,B,c,di)
+
+    def chunk_step(h, xcb_i):
+        dA, dBx, Cmat = _selective_terms(cfg, p, xcb_i)  # (B,c,di,ds)x2,(B,c,ds)
+        # prepend carried state as an extra "step" with dA=1
+        ones = jnp.ones((B, 1, di, ds), jnp.float32)
+        a = jnp.concatenate([ones, dA], axis=1)
+        b = jnp.concatenate([h[:, None], dBx], axis=1)
+
+        def combine(lhs, rhs):
+            a1, b1 = lhs
+            a2, b2 = rhs
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = lax.associative_scan(combine, (a, b), axis=1)
+        h_new = hs[:, -1]
+        y = jnp.einsum("bcns,bcs->bcn", hs[:, 1:], Cmat)  # (B,c,di)
+        return h_new, y
+
+    h_final, yb = lax.scan(chunk_step, h0, xcb)
+    y = jnp.swapaxes(yb, 0, 1).reshape(B, n * c, di)[:, :S]
+    y = y + cfg_D(p) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(x.dtype))
+    return out, (conv_state, h_final)
+
+
+def cfg_D(p):
+    return p["D"]
+
+
+def mamba_decode_step(cfg, p, x, state):
+    """Single-token step. x: (B, 1, d); state=(conv_state, ssm_state)."""
+    B = x.shape[0]
+    conv_state, h = state
+    x_, z = _ssm_inputs(cfg, p, x)
+    xc, conv_state = causal_conv1d(x_, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    dA, dBx, Cmat = _selective_terms(cfg, p, xc)       # (B,1,di,ds)
+    h = dA[:, 0] * h + dBx[:, 0]                       # (B,di,ds)
+    y = jnp.einsum("bns,bs->bn", h, Cmat[:, 0])[:, None]  # (B,1,di)
+    y = y + cfg_D(p) * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = dense(p["out_proj"], y.astype(x.dtype))
+    return out, (conv_state, h)
+
+
+def mamba_state_init(cfg, batch: int, dtype=jnp.bfloat16):
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return (jnp.zeros((batch, dc - 1, di), dtype),
+            jnp.zeros((batch, di, ds), jnp.float32))

@@ -1,0 +1,144 @@
+"""Uniform model API over all families + abstract input specs for the dry-run.
+
+``build(cfg)`` returns a ``ModelApi`` with:
+  init(key) -> params
+  loss(params, batch) -> scalar            (train_4k)
+  prefill(params, batch) -> (logits, cache) (prefill_32k)
+  decode(params, cache, batch) -> (logits, cache) (decode_32k / long_500k)
+  input_specs(shape) -> batch of ShapeDtypeStructs (no allocation)
+  cache_specs(shape) -> abstract decode cache
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer, whisper
+
+
+@dataclass
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    input_specs: Callable
+    cache_specs: Callable
+
+
+def _effective_cfg(cfg: ModelConfig, shape: Optional[ShapeSpec]) -> ModelConfig:
+    """Per-cell adjustments (documented in DESIGN.md):
+
+    * jamba long_500k: its 4 attention layers fall back to SWA(4096) so the
+      decode state is bounded (Mamba layers already are O(1)).
+    """
+    if shape is None:
+        return cfg
+    if shape.name == "long_500k" and cfg.family == "hybrid" \
+            and not cfg.sliding_window:
+        return cfg.replace(sliding_window=4096)
+    return cfg
+
+
+def _token_specs(cfg, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"tokens": sds((B, S), i32),
+                    "targets": sds((B, S), i32),
+                    "frame_embeds": sds((B, cfg.encoder_seq, cfg.d_model),
+                                        jnp.bfloat16)}
+        if cfg.family == "vlm":
+            s_text = S - cfg.num_patches
+            return {"tokens": sds((B, s_text), i32),
+                    "targets": sds((B, s_text), i32),
+                    "patch_embeds": sds((B, cfg.num_patches, cfg.d_model),
+                                        jnp.bfloat16)}
+        return {"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"tokens": sds((B, S), i32),
+                    "frame_embeds": sds((B, cfg.encoder_seq, cfg.d_model),
+                                        jnp.bfloat16)}
+        if cfg.family == "vlm":
+            return {"tokens": sds((B, S - cfg.num_patches), i32),
+                    "patch_embeds": sds((B, cfg.num_patches, cfg.d_model),
+                                        jnp.bfloat16)}
+        return {"tokens": sds((B, S), i32)}
+    # decode: one new token; the KV/state cache is a separate argument
+    return {"tokens": sds((B, 1), i32)}
+
+
+def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
+          ) -> ModelApi:
+    rt = rt or transformer.Runtime()
+
+    if cfg.family == "audio":
+        def init(key):
+            return whisper.init_params(cfg, key)
+
+        def loss(params, batch):
+            return whisper.loss_fn(cfg, params, batch, rt=rt)
+
+        def prefill_fn(params, batch, *, max_seq=None):
+            return whisper.prefill(cfg, params, batch["tokens"],
+                                   batch["frame_embeds"],
+                                   max_seq=max_seq or batch["tokens"].shape[1],
+                                   rt=rt)
+
+        def decode_fn(params, cache, batch):
+            return whisper.decode_step(cfg, params, cache, batch["tokens"],
+                                       rt=rt)
+
+        def cache_init(batch_size, max_seq):
+            return whisper.init_cache(cfg, batch_size, max_seq)
+    else:
+        def init(key):
+            return transformer.init_params(cfg, key)
+
+        def loss(params, batch):
+            return transformer.loss_fn(cfg, params, batch, rt=rt)
+
+        def prefill_fn(params, batch, *, max_seq=None):
+            S = batch["tokens"].shape[1]
+            if cfg.family == "vlm" and "patch_embeds" in batch:
+                S += batch["patch_embeds"].shape[1]
+            return transformer.prefill(
+                cfg, params, batch["tokens"], max_seq=max_seq or S,
+                patch_embeds=batch.get("patch_embeds"), rt=rt)
+
+        def decode_fn(params, cache, batch):
+            return transformer.decode_step(cfg, params, cache,
+                                           batch["tokens"], rt=rt)
+
+        def cache_init(batch_size, max_seq):
+            return transformer.init_cache(cfg, batch_size, max_seq)
+
+    def input_specs(shape: ShapeSpec):
+        ecfg = _effective_cfg(cfg, shape)
+        return _token_specs(ecfg, shape)
+
+    def cache_specs(shape: ShapeSpec):
+        ecfg = _effective_cfg(cfg, shape)
+        init_fn = (whisper.init_cache if ecfg.family == "audio"
+                   else transformer.init_cache)
+        return jax.eval_shape(
+            lambda: init_fn(ecfg, shape.global_batch, shape.seq_len))
+
+    return ModelApi(cfg=cfg, init=init, loss=loss, prefill=prefill_fn,
+                    decode=decode_fn, input_specs=input_specs,
+                    cache_specs=cache_specs)
+
+
+def build_for_cell(cfg: ModelConfig, shape: ShapeSpec,
+                   rt: Optional[transformer.Runtime] = None) -> ModelApi:
+    """Model with per-cell config adjustments applied (see _effective_cfg)."""
+    return build(_effective_cfg(cfg, shape), rt=rt)

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs()``
+supplies precomputed frame embeddings (B, encoder_seq, d_model). The
+transformer backbone (encoder self-attn, decoder causal self-attn +
+cross-attn) is fully implemented. Sinusoidal absolute positions.
+
+Phase mapping for the serving system: "prefill" = encoder + cross-KV build +
+decoder prompt ingestion; "decode" = one decoder token against both caches.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+from repro.models import layers
+from repro.models.layers import (attention, attn_init, attn_qkv, dense,
+                                 mlp_apply, mlp_init, norm_apply, norm_init,
+                                 sinusoidal_pos)
+
+
+def _enc_layer_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": norm_init(cfg, cfg.d_model),
+            "attn": attn_init(cfg, k1),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "mlp": mlp_init(cfg, k2)}
+
+
+def _dec_layer_init(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": norm_init(cfg, cfg.d_model),
+            "self_attn": attn_init(cfg, k1),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "cross_attn": attn_init(cfg, k2),
+            "norm3": norm_init(cfg, cfg.d_model),
+            "mlp": mlp_init(cfg, k3)}
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.num_encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": (jax.random.normal(ks[2], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(jnp.bfloat16),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(cfg, k))(enc_keys),
+        "enc_norm": norm_init(cfg, cfg.d_model),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(cfg, k))(dec_keys),
+        "final_norm": norm_init(cfg, cfg.d_model),
+        "unembed": (jax.random.normal(ks[3], (cfg.d_model, cfg.vocab_size),
+                                      jnp.float32)
+                    / math.sqrt(cfg.d_model)).astype(jnp.bfloat16),
+    }
+
+
+def encode(cfg, params, frame_embeds):
+    """frame_embeds: (B, S_enc, d) from the stubbed frontend."""
+    B, S, d = frame_embeds.shape
+    x = frame_embeds.astype(jnp.bfloat16)
+    x = x + sinusoidal_pos(jnp.arange(S), d).astype(x.dtype)[None]
+    x = constrain(x, "batch", "seq", None)
+
+    def body(x, p):
+        h = norm_apply(cfg, p["norm1"], x)
+        o, _ = layers.attn_apply(cfg, p["attn"], h,
+                                 positions=jnp.broadcast_to(
+                                     jnp.arange(S)[None], (B, S)),
+                                 causal=False)
+        x = x + o
+        x = x + mlp_apply(cfg, p["mlp"], norm_apply(cfg, p["norm2"], x))
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return norm_apply(cfg, params["enc_norm"], x)
+
+
+def _cross_kv(cfg, p_layer, enc_out):
+    B, S, _ = enc_out.shape
+    k = dense(p_layer["cross_attn"]["wk"], enc_out).reshape(
+        B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = dense(p_layer["cross_attn"]["wv"], enc_out).reshape(
+        B, S, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def build_cross_cache(cfg, params, enc_out):
+    def body(_, p):
+        return None, _cross_kv(cfg, p, enc_out)
+    _, kv = lax.scan(body, None, params["dec_layers"])
+    return kv  # (k, v) each (L, B, S_enc, Hkv, hd)
+
+
+def _dec_layer(cfg, p, x, positions, *, self_kv, cross_kv, kv_len,
+               mode):
+    """One decoder layer. self_kv: (K, V) cache (mode=step) or None (full)."""
+    B, S, _ = x.shape
+    h = norm_apply(cfg, p["norm1"], x)
+    if mode == "full":
+        q, k_new, v_new = attn_qkv(cfg, p["self_attn"], h, positions)
+        o = attention(q, k_new, v_new, causal=True,
+                      chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+        new_self = (k_new, v_new)
+    else:
+        K, V = self_kv
+        q, k, v = attn_qkv(cfg, p["self_attn"], h, positions)
+        bidx = jnp.arange(B)
+        K = K.at[bidx, positions[:, 0]].set(k[:, 0])
+        V = V.at[bidx, positions[:, 0]].set(v[:, 0])
+        o = attention(q, K, V, causal=True, kv_len=positions[:, 0] + 1,
+                      q_offset=positions[:, 0], chunk_q=cfg.attn_chunk_q,
+                      chunk_kv=cfg.attn_chunk_kv)
+        new_self = (K, V)
+    x = x + dense(p["self_attn"]["wo"], o.reshape(B, S, cfg.q_dim))
+    # cross attention (bidirectional over encoder output)
+    h = norm_apply(cfg, p["norm2"], x)
+    q = dense(p["cross_attn"]["wq"], h).reshape(B, S, cfg.num_heads,
+                                                cfg.head_dim)
+    kc, vc = cross_kv
+    o = attention(q, kc, vc, causal=False, chunk_q=cfg.attn_chunk_q,
+                  chunk_kv=cfg.attn_chunk_kv)
+    x = x + dense(p["cross_attn"]["wo"], o.reshape(B, S, cfg.q_dim))
+    x = x + mlp_apply(cfg, p["mlp"], norm_apply(cfg, p["norm3"], x))
+    return x, new_self
+
+
+def forward(cfg, params, tokens, frame_embeds):
+    """Training forward: encoder + full decoder pass. Returns hidden (B,S,d)."""
+    enc_out = encode(cfg, params, frame_embeds)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = x + sinusoidal_pos(jnp.arange(S), cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        ckv = _cross_kv(cfg, p, enc_out)
+        x, _ = _dec_layer(cfg, p, x, positions, self_kv=None, cross_kv=ckv,
+                          kv_len=None, mode="full")
+        return x, None
+
+    x, _ = lax.scan(body, x, params["dec_layers"])
+    return norm_apply(cfg, params["final_norm"], x)
+
+
+def loss_fn(cfg, params, batch, *, rt=None):
+    x = forward(cfg, params, batch["tokens"], batch["frame_embeds"])
+    return layers.chunked_xent(x, params["unembed"], batch["targets"],
+                               chunk=cfg.vocab_chunk, mask=batch.get("mask"))
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    L = cfg.num_layers
+    return {
+        "self_k": jnp.zeros((L, batch, max_seq, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+        "self_v": jnp.zeros((L, batch, max_seq, cfg.num_kv_heads,
+                             cfg.head_dim), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                              cfg.head_dim), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.encoder_seq, cfg.num_kv_heads,
+                              cfg.head_dim), dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(cfg, params, tokens, frame_embeds, *, max_seq: int, rt=None):
+    enc_out = encode(cfg, params, frame_embeds)
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = x + sinusoidal_pos(jnp.arange(S), cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, p):
+        ckv = _cross_kv(cfg, p, enc_out)
+        x, new_self = _dec_layer(cfg, p, x, positions, self_kv=None,
+                                 cross_kv=ckv, kv_len=None, mode="full")
+        return x, (new_self, ckv)
+
+    x, (self_kv, cross_kv) = lax.scan(body, x, params["dec_layers"])
+    x = norm_apply(cfg, params["final_norm"], x)
+    cache = init_cache(cfg, B, max_seq)
+    cache["self_k"] = lax.dynamic_update_slice(
+        cache["self_k"], self_kv[0].astype(cache["self_k"].dtype),
+        (0, 0, 0, 0, 0))
+    cache["self_v"] = lax.dynamic_update_slice(
+        cache["self_v"], self_kv[1].astype(cache["self_v"].dtype),
+        (0, 0, 0, 0, 0))
+    cache["cross_k"] = cross_kv[0].astype(cache["cross_k"].dtype)
+    cache["cross_v"] = cross_kv[1].astype(cache["cross_v"].dtype)
+    cache["lengths"] = jnp.full((B,), S, jnp.int32)
+    logits = (x[:, -1:] @ params["unembed"]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, *, rt=None):
+    B = tokens.shape[0]
+    positions = cache["lengths"][:, None]
+    x = params["embed"][tokens]
+    x = x + jax.vmap(lambda p: sinusoidal_pos(p, cfg.d_model))(
+        cache["lengths"])[:, None].astype(x.dtype)
+
+    def body(x, xs):
+        p, sk, sv, ck, cv = xs
+        x, (K, V) = _dec_layer(cfg, p, x, positions, self_kv=(sk, sv),
+                               cross_kv=(ck, cv), kv_len=None, mode="step")
+        return x, (K, V)
+
+    x, (new_k, new_v) = lax.scan(
+        body, x, (params["dec_layers"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = (x @ params["unembed"]).astype(jnp.float32)
+    new_cache = dict(cache)
+    new_cache["self_k"], new_cache["self_v"] = new_k, new_v
+    new_cache["lengths"] = cache["lengths"] + 1
+    return logits, new_cache

@@ -1,0 +1,243 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, exact sequential recurrence).
+
+mLSTM is linear-recurrent with exponential gating, so prefill/train uses a
+chunkwise form: quadratic attention *within* a chunk + recurrent matrix-state
+carry *across* chunks, all in stabilized log-space (running max ``m``).
+Decode carries (C, n, m) per head — O(1) state, so long_500k runs.
+
+sLSTM has nonlinear recurrence (h feeds back through R) — inherently
+sequential; we scan over time. Exactness over speed: this matches the paper's
+own characterization (sLSTM is not parallelizable).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import causal_conv1d, dense, dense_init, rmsnorm
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(cfg, key):
+    d = cfg.d_model
+    di = 2 * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * di),
+        "conv_w": (jax.random.normal(ks[1], (4, di), jnp.float32) / 2.0
+                   ).astype(jnp.bfloat16),
+        "conv_b": jnp.zeros((di,), jnp.bfloat16),
+        "wq": dense_init(ks[2], di, di),
+        "wk": dense_init(ks[3], di, di),
+        "wv": dense_init(ks[4], di, di),
+        "w_if": dense_init(ks[5], di, 2 * H, bias=True),
+        "skip": jnp.ones((di,), jnp.float32),
+        "gn": {"scale": jnp.zeros((di,), jnp.float32)},
+        "w_down": dense_init(ks[6], di, d, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _mlstm_chunk(q, k, v, lf, li, state):
+    """One chunk, stabilized chunkwise-parallel mLSTM.
+
+    q,k,v: (B,H,L,dh); lf/li: (B,H,L) log forget/input gates.
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)). Returns (y, new_state).
+    """
+    B, H, L, dh = q.shape
+    C0, n0, m0 = state
+    b = jnp.cumsum(lf, axis=-1)                      # (B,H,L) cumulative decay
+    # score[t,s] = b_t - b_s + li_s  (decay s->t times input gate), s <= t
+    score = b[..., :, None] - b[..., None, :] + li[..., None, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    score = jnp.where(tri, score, -jnp.inf)
+    m_intra = score.max(-1)                          # (B,H,L)
+    m_t = jnp.maximum(m0[..., None] + b, m_intra)    # (B,H,L)
+    # intra-chunk weights & inter-chunk carry factor
+    w = jnp.exp(score - m_t[..., None])              # (B,H,L,L)
+    carry = jnp.exp(m0[..., None] + b - m_t)         # (B,H,L)
+    qs = q.astype(jnp.float32) / math.sqrt(dh)
+    sim = jnp.einsum("bhtd,bhsd->bhts", qs, k.astype(jnp.float32))
+    aw = w * sim                                     # gated attention weights
+    num = (jnp.einsum("bhts,bhsd->bhtd", aw, v.astype(jnp.float32))
+           + carry[..., None] * jnp.einsum("bhde,bhtd->bhte", C0, qs))
+    den = (aw.sum(-1) + carry * jnp.einsum("bhd,bhtd->bht", n0, qs))
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+    y = num / den[..., None]                         # (B,H,L,dh)
+    # chunk-end state
+    mL = m_t[..., -1]
+    wL = jnp.exp(b[..., -1:] - b + li - mL[..., None])  # (B,H,L)
+    C = (jnp.exp(m0 + b[..., -1] - mL)[..., None, None] * C0
+         + jnp.einsum("bhs,bhsd,bhse->bhde", wL, k.astype(jnp.float32),
+                      v.astype(jnp.float32)))
+    n = (jnp.exp(m0 + b[..., -1] - mL)[..., None] * n0
+         + jnp.einsum("bhs,bhsd->bhd", wL, k.astype(jnp.float32)))
+    return y, (C, n, mL)
+
+
+def mlstm_cell(cfg, q, k, v, lf, li, state, chunk: int):
+    """q,k,v: (B,S,H,dh). Scans chunks; returns (y (B,S,H,dh), state)."""
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    n = -(-S // c)
+    pad = n * c - S
+
+    def prep(x):
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+        x = x.reshape((B, n, c) + x.shape[2:])
+        return jnp.moveaxis(x, 1, 0)  # (n, B, c, ...)
+
+    qb, kb, vb = (jnp.swapaxes(prep(t), -2, -3) for t in (q, k, v))
+    # -> (n, B, H, c, dh)
+    lfb, lib = (jnp.swapaxes(prep(t), -1, -2) for t in (lf, li))  # (n,B,H,c)
+
+    def step(st, xs):
+        qi, ki, vi, lfi, lii = xs
+        y, st = _mlstm_chunk(qi, ki, vi, lfi, lii, st)
+        return st, y
+
+    state, yb = lax.scan(step, state, (qb, kb, vb, lfb, lib))
+    y = jnp.moveaxis(yb, 0, 1).reshape(B, n, H, c, dh).swapaxes(2, 3)
+    y = y.reshape(B, n * c, H, dh)[:, :S]
+    return y, state
+
+
+def mlstm_state_init(cfg, batch: int):
+    H = cfg.num_heads
+    dh = 2 * cfg.d_model // H
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def mlstm_apply(cfg, p, x, *, state=None, conv_state=None):
+    """Full mLSTM block. x: (B,S,d). Returns (out, (cell_state, conv_state))."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    di = 2 * d
+    dh = di // H
+    u = dense(p["w_up"], x)
+    xm, z = jnp.split(u, 2, axis=-1)
+    xc, conv_state = causal_conv1d(xm, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = dense(p["wq"], xc).reshape(B, S, H, dh)
+    k = dense(p["wk"], xc).reshape(B, S, H, dh)
+    v = dense(p["wv"], xm).reshape(B, S, H, dh)
+    gates = dense(p["w_if"], xm).astype(jnp.float32)   # (B,S,2H)
+    li, lfraw = jnp.split(gates, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(lfraw)
+    if state is None:
+        state = mlstm_state_init(cfg, B)
+    y, state = mlstm_cell(cfg, q, k, v, lf, li, state, cfg.xlstm_chunk)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y, p["gn"]["scale"])                   # per-block norm (GN-ish)
+    y = y + p["skip"].astype(y.dtype) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return dense(p["w_down"], y), (state, conv_state)
+
+
+def mlstm_decode_step(cfg, p, x, state, conv_state):
+    """x: (B,1,d). Single-step recurrence (no chunking)."""
+    B, _, d = x.shape
+    H, di = cfg.num_heads, 2 * cfg.d_model
+    dh = di // H
+    u = dense(p["w_up"], x)
+    xm, z = jnp.split(u, 2, axis=-1)
+    xc, conv_state = causal_conv1d(xm, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    q = dense(p["wq"], xc).reshape(B, H, dh).astype(jnp.float32) / math.sqrt(dh)
+    k = dense(p["wk"], xc).reshape(B, H, dh).astype(jnp.float32)
+    v = dense(p["wv"], xm).reshape(B, H, dh).astype(jnp.float32)
+    gates = dense(p["w_if"], xm)[:, 0].astype(jnp.float32)
+    li, lfraw = jnp.split(gates, 2, axis=-1)           # (B,H)
+    lf = jax.nn.log_sigmoid(lfraw)
+    C, n, m = state
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)[..., None]
+    iw = jnp.exp(li - m_new)[..., None]
+    C = fw[..., None] * C + iw[..., None] * k[..., None] * v[..., None, :]
+    n = fw * n + iw * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, di).astype(x.dtype)
+    y = rmsnorm(y, p["gn"]["scale"])
+    y = y + p["skip"].astype(y.dtype) * xc
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return dense(p["w_down"], y), (C, n, m_new), conv_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(cfg, key):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 5)
+    f_ff = int(d * 4 / 3 / 8) * 8 * 2  # GeGLU ffn at ~4/3 ratio (x2 for gate)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, bias=True),  # z,i,f,o preacts
+        "r": (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+              / math.sqrt(dh)).astype(jnp.float32),      # recurrent, per head
+        "gn": {"scale": jnp.zeros((d,), jnp.float32)},
+        "ffn_wi": dense_init(ks[2], d, f_ff),
+        "ffn_wo": dense_init(ks[3], f_ff // 2, d),
+    }
+
+
+def _slstm_step(p, carry, x_pre):
+    """carry: (c,n,h,m) each (B,H,dh); x_pre: (B,4,H,dh) input preacts."""
+    c, n, h, m = carry
+    r = p["r"]
+    rec = jnp.einsum("bhd,ghde->bghe", h, r)           # (B,4,H,dh)
+    za, ia, fa, oa = [x_pre[:, i] + rec[:, i] for i in range(4)]
+    z = jnp.tanh(za)
+    o = jax.nn.sigmoid(oa)
+    lf = jax.nn.log_sigmoid(fa)
+    m_new = jnp.maximum(lf + m, ia)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(ia - m_new)
+    c = fw * c + iw * z
+    n = fw * n + iw
+    h = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new), h
+
+
+def slstm_apply(cfg, p, x, *, state=None):
+    """x: (B,S,d). Sequential scan over time. Returns (out, state)."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    pre = dense(p["w_in"], x).astype(jnp.float32)      # (B,S,4d)
+    pre = pre.reshape(B, S, 4, H, dh)
+    if state is None:
+        state = slstm_state_init(cfg, B)
+    xs = jnp.moveaxis(pre, 1, 0)                       # (S,B,4,H,dh)
+    state, hs = lax.scan(lambda cr, xp: _slstm_step(p, cr, xp), state, xs)
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(y, p["gn"]["scale"])
+    # gated FFN
+    g, u = jnp.split(dense(p["ffn_wi"], y), 2, axis=-1)
+    out = dense(p["ffn_wo"], jax.nn.gelu(g) * u)
+    return out, state
+
+
+def slstm_state_init(cfg, batch: int):
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, H, dh), -1e30, jnp.float32))
+
+
+def slstm_decode_step(cfg, p, x, state):
+    out, state = slstm_apply(cfg, p, x, state=state)
+    return out, state

@@ -1,0 +1,194 @@
+"""Roofline terms from a compiled (AOT) artifact.
+
+``compute/memory`` come from ``compiled.cost_analysis()``; the collective
+term is parsed out of the post-SPMD HLO text (``compiled.as_text()``), since
+cost_analysis does not attribute communication. Post-partitioning HLO carries
+*per-device* shapes, so all three terms are per-device seconds directly.
+
+Wire-byte model per op (ring/bidirectional ICI):
+  all-reduce:          2 * size * (n-1)/n
+  all-gather:          out_size * (n-1)/n
+  reduce-scatter:      in_size  * (n-1)/n
+  all-to-all:          size * (n-1)/n
+  collective-permute:  size
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from repro.roofline.hw import ChipSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^=]*?\)|[\w\[\],{}\s]+?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes of every array literal in a (possibly tuple) shape."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    payload_bytes: Dict[str, float] = field(default_factory=dict)
+    wire_bytes: float = 0.0
+
+    def total_payload(self) -> float:
+        return sum(self.payload_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:60] and f"{op}-done" in line:
+            continue  # async pair: count only the -start
+        size = _shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            n = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else default_group
+        n = max(n, 2)
+        ring = (n - 1) / n
+        if op == "all-reduce":
+            wire = 2.0 * size * ring
+        elif op == "collective-permute":
+            wire = float(size)
+        else:  # all-gather / reduce-scatter / all-to-all
+            wire = size * ring
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.payload_bytes[op] = stats.payload_bytes.get(op, 0.0) + size
+        stats.wire_bytes += wire
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device HBM traffic
+    collective_payload: float   # per device payload bytes
+    collective_wire: float      # per device wire bytes
+    collective_counts: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float          # analytic useful FLOPs (global)
+    useful_ratio: float         # model_flops / (hlo_flops * n_chips)
+    step_s: float               # max of the three terms
+    roofline_frac: float        # compute_s / step_s (how compute-bound)
+    per_device_output_bytes: float = 0.0
+    memory_estimate_bytes: float = 0.0
+
+    def to_json(self) -> dict:
+        return asdict(self)
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_desc: str, n_chips: int,
+            model_flops: float, chip: ChipSpec = TPU_V5E,
+            n_links: int = 3) -> Roofline:
+    """Roofline terms via the trip-count-aware HLO walker (hlo_cost).
+
+    XLA's cost_analysis() counts while (scan) bodies once; the walker
+    multiplies them by known_trip_count, so flops/bytes/collectives reflect
+    the full step. Validated against cost_analysis on unrolled modules.
+    """
+    from repro.roofline import hlo_cost
+    c = hlo_cost.analyze_calibrated(compiled, default_group=n_chips)
+    flops, bytes_acc = c.flops, c.bytes
+    coll = CollectiveStats(counts=c.coll_counts,
+                           payload_bytes={"total": c.coll_payload},
+                           wire_bytes=c.wire)
+    compute_s = flops / chip.peak_flops
+    memory_s = bytes_acc / chip.hbm_bw
+    collective_s = coll.wire_bytes / (chip.link_bw * n_links)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mem_an = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem_an = {"temp": getattr(ma, "temp_size_in_bytes", 0),
+                      "arg": getattr(ma, "argument_size_in_bytes", 0),
+                      "out": getattr(ma, "output_size_in_bytes", 0)}
+    except Exception:
+        pass
+    total_flops = flops * n_chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_desc, n_chips=n_chips,
+        hlo_flops=flops, hlo_bytes=bytes_acc,
+        collective_payload=coll.total_payload(),
+        collective_wire=coll.wire_bytes, collective_counts=coll.counts,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        useful_ratio=(model_flops / total_flops) if total_flops else 0.0,
+        step_s=step_s,
+        roofline_frac=(compute_s / step_s) if step_s else 0.0,
+        memory_estimate_bytes=float(mem_an.get("temp", 0)
+                                    + mem_an.get("arg", 0)))
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs per step (global).
+
+    train:   6 * N_active * tokens      (fwd+bwd)
+    prefill: 2 * N_active * tokens  (+ attention-score term)
+    decode:  2 * N_active * batch   (+ KV-read dot products)
+    """
+    n_act = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    d_attn = 0.0
+    attn_layers = sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l)
+                      and cfg.family != "ssm")
+    if shape.kind == "train":
+        toks = B * S
+        eff_s = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        d_attn = 6 * attn_layers * 2 * B * S * eff_s * cfg.q_dim / 2
+        return 6.0 * n_act * toks + d_attn
+    if shape.kind == "prefill":
+        toks = B * S
+        eff_s = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        d_attn = 2 * attn_layers * 2 * B * S * eff_s * cfg.q_dim / 2
+        return 2.0 * n_act * toks + d_attn
+    # decode: one token per sequence
+    eff_s = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    d_attn = 2 * attn_layers * 2 * B * eff_s * cfg.q_dim
+    return 2.0 * n_act * B + d_attn

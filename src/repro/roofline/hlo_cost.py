@@ -1,0 +1,456 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports FLOPs/bytes/collectives for scan-based models by the trip
+count. This walker parses the post-SPMD HLO, multiplies loop bodies by their
+``known_trip_count`` (recorded by XLA in backend_config), and produces
+per-device totals:
+
+  flops            — dot ops (2 * prod(out) * prod(contracting))
+  bytes            — per top-level op: operand bytes + output bytes
+                     (fusion internals excluded — fused intermediates do not
+                     touch HBM)
+  collective wire  — ring-model wire bytes per collective (see analysis.py)
+
+Validated against cost_analysis() on fully-unrolled modules in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain",
+    "opt-barrier", "optimization-barrier", "rng-get-and-update-state",
+}
+
+_COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "all-to-all-start", "reduce-scatter-start",
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "%name = TYPE opcode(" — TYPE may be a tuple "(f32[..]{1,0}, s32[])" and
+# array types carry layout suffixes like {1,0}; non-greedy match up to the
+# first " opcode(" token.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s+->")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _ARRAY_RE.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def _shape_bytes_capped(shape_str: str, cap: int = 2) -> int:
+    """Byte size with per-element width capped (TPU-native bf16 operand
+    reads: the CPU backend promotes bf16 dot operands to f32, which a TPU
+    MXU would consume as bf16 directly)."""
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * min(_DTYPE_BYTES[dtype], cap)
+    return total
+
+
+_FREE_OPS = {"parameter", "constant", "convert", "bitcast", "copy",
+             "reshape", "transpose", "tuple", "get-tuple-element"}
+
+
+@dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    raw_operands: str = ""
+
+    @property
+    def param_index(self) -> int:
+        if self.opcode == "parameter":
+            try:
+                return int(self.raw_operands.strip())
+            except ValueError:
+                return -1
+        return -1
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    coll_payload: float = 0.0
+    coll_counts: Dict[str, int] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.wire += o.wire
+        self.coll_payload += o.coll_payload
+        for k, v in o.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.wire * f,
+                    self.coll_payload * f,
+                    {k: v * int(f) for k, v in self.coll_counts.items()})
+
+
+class HloModule:
+    def __init__(self, text: str, default_group: int = 1,
+                 force_trip_one: bool = False):
+        self.computations: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self.default_group = default_group
+        self.force_trip_one = force_trip_one
+        self._parse(text)
+        self._memo: Dict[Tuple[str, str], Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and line.endswith("{"):
+                cur = hdr.group(2)
+                self.computations[cur] = []
+                if hdr.group(1):
+                    self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            d = _DEF_RE.match(line)
+            if not d:
+                continue
+            name, shape, opcode = d.group(1), d.group(2), d.group(3)
+            rest = line[d.end():]
+            depth, i = 1, 0
+            while i < len(rest) and depth:
+                if rest[i] == "(":
+                    depth += 1
+                elif rest[i] == ")":
+                    depth -= 1
+                i += 1
+            operand_str, attrs = rest[:i - 1], rest[i:]
+            operands = _OPERANDS_RE.findall(operand_str)
+            self.computations[cur].append(
+                Op(name, shape, opcode, operands, attrs, operand_str))
+
+    # -- helpers ------------------------------------------------------------
+
+    def _sym(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.shape for op in self.computations.get(comp, [])}
+
+    def _group_size(self, op: Op) -> int:
+        m = _GROUPS_RE.search(op.attrs)
+        if m:
+            return max(2, len(m.group(1).split(",")))
+        m = _GROUPS_IOTA_RE.search(op.attrs)
+        if m:
+            return max(2, int(m.group(2)))
+        return max(2, self.default_group)
+
+    def _dot_flops(self, op: Op, sym: Dict[str, str]) -> float:
+        out = _shape_dims(op.shape)
+        lhs_shape = sym.get(op.operands[0], "") if op.operands else ""
+        lhs = _shape_dims(lhs_shape)
+        m = _LHS_CONTRACT_RE.search(op.attrs)
+        contract = 1
+        if m and lhs:
+            for idx in m.group(1).split(","):
+                if idx:
+                    contract *= lhs[int(idx)]
+        n_out = 1
+        for d in out:
+            n_out *= d
+        return 2.0 * n_out * contract
+
+    def _collective(self, op: Op, sym: Dict[str, str]) -> Cost:
+        base = op.opcode.replace("-start", "")
+        out_b = _shape_bytes(op.shape)
+        in_b = sum(_shape_bytes(sym.get(o, "")) for o in op.operands)
+        n = self._group_size(op)
+        ring = (n - 1) / n
+        size = max(out_b, in_b)
+        if base == "all-reduce":
+            wire = 2.0 * size * ring
+        elif base == "collective-permute":
+            wire = float(out_b)
+        elif base == "all-gather":
+            wire = out_b * ring
+        elif base == "reduce-scatter":
+            wire = in_b * ring
+        else:  # all-to-all
+            wire = size * ring
+        return Cost(flops=0.0, bytes=in_b + out_b, wire=wire,
+                    coll_payload=size, coll_counts={base: 1})
+
+    def _op_bytes(self, op: Op, sym: Dict[str, str]) -> float:
+        """HBM bytes for one op, utilization-aware for slicing ops.
+
+        dynamic-slice / gather read only the addressed region;
+        dynamic-update-slice / scatter are in-place (read+write the update
+        region only). Without this, scan xs/ys slicing of stacked per-layer
+        params/caches would be charged the full stacked buffer per iteration
+        (a ~num_layers x inflation).
+        """
+        out_b = _shape_bytes(op.shape)
+        oc = op.opcode
+        if oc == "convert":
+            return 0.0  # CPU-backend dtype normalization; free on TPU
+        if oc in ("dynamic-slice", "gather"):
+            return 2.0 * out_b
+        if oc == "dynamic-update-slice":
+            upd = _shape_bytes(sym.get(op.operands[1], "")) if \
+                len(op.operands) > 1 else out_b
+            return 2.0 * upd
+        if oc == "scatter":
+            # aliased in-place update: read+write the update region only
+            upd = _shape_bytes(sym.get(op.operands[2], "")) if \
+                len(op.operands) > 2 else out_b
+            return 2.0 * upd
+        if oc == "dot":
+            # operand reads at TPU-native width (bf16), f32 accumulate out
+            in_b = sum(_shape_bytes_capped(sym.get(o, ""))
+                       for o in op.operands)
+            return in_b + out_b
+        if oc == "fusion":
+            m = _CALLS_RE.search(op.attrs)
+            if m:
+                return self._fusion_bytes(op, sym, m.group(1))
+        in_b = sum(_shape_bytes(sym.get(o, "")) for o in op.operands)
+        return in_b + out_b
+
+    def _fusion_bytes(self, op: Op, sym: Dict[str, str], comp: str) -> float:
+        """Utilization-aware fusion traffic.
+
+        * A fusion operand consumed ONLY through dynamic-slice ops is charged
+          the slice sizes, not the full buffer (scan xs of stacked params).
+        * A root dynamic-update-slice aliases its target buffer: charge the
+          update region, not a full rewrite (scan ys / in-place cache write).
+        """
+        ops = self.computations.get(comp, [])
+        sub_sym = self._sym(comp)
+        out_b = _shape_bytes(op.shape)
+        # convert-only fusion (dtype-normalization plumbing): free on TPU
+        if ops and all(o.opcode in _FREE_OPS for o in ops):
+            return 0.0
+        root = ops[-1] if ops else None
+        # walk through trailing converts/bitcasts to the real root
+        seen = {o.name: o for o in ops}
+        r = root
+        while r is not None and r.opcode in ("convert", "bitcast", "copy") \
+                and r.operands and r.operands[0] in seen:
+            r = seen[r.operands[0]]
+        dus_target = None
+        if r is not None and r.opcode in ("dynamic-update-slice", "scatter"):
+            # in-place root: charge the update region, alias the target
+            upd_idx = 1 if r.opcode == "dynamic-update-slice" else 2
+            upd = r.operands[upd_idx] if len(r.operands) > upd_idx else None
+            out_b = 2.0 * _shape_bytes_capped(sub_sym.get(upd, "")) \
+                if upd else out_b
+            # identify which fusion param feeds the target (aliased)
+            t = r.operands[0]
+            while t in seen and seen[t].opcode in ("convert", "bitcast",
+                                                   "copy") and seen[t].operands:
+                t = seen[t].operands[0]
+            dus_target = t
+        params_unordered = [o for o in ops if o.opcode == "parameter"]
+        by_idx = {p.param_index: p for p in params_unordered}
+        params = [by_idx.get(i) for i in range(len(op.operands))]
+        uses: Dict[str, List[str]] = {p.name: [] for p in params_unordered}
+        for o2 in ops:
+            for src in o2.operands:
+                if src in uses:
+                    uses[src].append(o2.opcode)
+        # bf16-output fusions: f32 intermediates are CPU-backend dtype
+        # plumbing; charge sliced reads at native (bf16) width. f32-output
+        # fusions (e.g. optimizer-state updates) keep full f32 widths.
+        out_native_2b = op.shape.strip().startswith(("bf16", "f16"))
+        size_fn = _shape_bytes_capped if out_native_2b else _shape_bytes
+
+        def chase(name):
+            """Follow convert/bitcast chains to the op consuming `name`."""
+            consumers = []
+            for o2 in ops:
+                if name in o2.operands:
+                    if o2.opcode in ("convert", "bitcast"):
+                        consumers.extend(chase(o2.name))
+                    else:
+                        consumers.append(o2)
+            return consumers
+
+        in_b = 0.0
+        for i, operand in enumerate(op.operands):
+            pname = params[i].name if i < len(params) and params[i] else None
+            if pname is not None and pname == dus_target:
+                continue  # aliased in-place target
+            if pname is not None:
+                cons = chase(pname)
+                if cons and all(c.opcode == "dynamic-slice" for c in cons):
+                    for c in cons:
+                        in_b += size_fn(c.shape)
+                    continue
+            in_b += size_fn(sym.get(operand, ""))
+        return in_b + out_b
+
+    def _root_op(self, comp: str) -> Optional[Op]:
+        ops = self.computations.get(comp, [])
+        return ops[-1] if ops else None
+
+    def _fusion_flops(self, comp: str) -> float:
+        """Dot flops inside a fused computation (bytes counted at call site)."""
+        total = 0.0
+        sym = self._sym(comp)
+        for op in self.computations.get(comp, []):
+            if op.opcode == "dot":
+                total += self._dot_flops(op, sym)
+            elif op.opcode == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                if m:
+                    total += self._fusion_flops(m.group(1))
+        return total
+
+    # -- main walk ----------------------------------------------------------
+
+    def comp_cost(self, comp: str) -> Cost:
+        if ("cost", comp) in self._memo:
+            return self._memo[("cost", comp)]
+        total = Cost()
+        sym = self._sym(comp)
+        for op in self.computations.get(comp, []):
+            oc = op.opcode
+            if oc in _SKIP_OPS:
+                continue
+            if oc == "while":
+                trip = 1
+                m = _TRIP_RE.search(op.attrs)
+                if m and not self.force_trip_one:
+                    trip = int(m.group(1))
+                body = _BODY_RE.search(op.attrs)
+                cond = _COND_RE.search(op.attrs)
+                if body:
+                    total += self.comp_cost(body.group(1)).scaled(trip)
+                if cond:
+                    total += self.comp_cost(cond.group(1)).scaled(trip)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES_RE.search(op.attrs)
+                if m:
+                    branches = _OPERANDS_RE.findall(m.group(1))
+                    costs = [self.comp_cost(b) for b in branches]
+                    if costs:
+                        total += max(costs, key=lambda c: c.flops + c.bytes)
+                continue
+            if oc == "call":
+                m = _TO_APPLY_RE.search(op.attrs)
+                if m:
+                    total += self.comp_cost(m.group(1))
+                continue
+            if oc in _COLLECTIVE_OPS:
+                total += self._collective(op, sym)
+                continue
+            if oc.endswith("-done") or oc.endswith("-update"):
+                continue  # async pair tail: counted at -start
+            byt = self._op_bytes(op, sym)
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.attrs)
+                fl = self._fusion_flops(m.group(1)) if m else 0.0
+                total += Cost(flops=fl, bytes=byt)
+                continue
+            if oc == "dot":
+                total += Cost(flops=self._dot_flops(op, sym), bytes=byt)
+                continue
+            # generic op (copy, broadcast, reduce, dynamic-slice, ...)
+            total += Cost(bytes=byt)
+        self._memo[("cost", comp)] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(text: str, default_group: int = 1) -> Cost:
+    return HloModule(text, default_group=default_group).entry_cost()
+
+
+def analyze_calibrated(compiled, default_group: int = 1) -> Cost:
+    """Trip-corrected cost; FLOPs calibrated against XLA's cost_analysis.
+
+    Both XLA's cost_analysis() and our trip1 walk count loop bodies once on
+    the identical module, so the ratio (xla / parsed_trip1) isolates any
+    dot-counting delta; applying it to the trip-corrected walk yields
+    XLA-methodology FLOPs at full trip counts. Bytes are NOT calibrated to
+    XLA: the walker deliberately models TPU-native traffic (bf16 dot
+    operands, in-place DUS/scatter, free converts), which the CPU-backend
+    cost analysis does not.
+    """
+    text = compiled.as_text()
+    full = HloModule(text, default_group=default_group).entry_cost()
+    once = HloModule(text, default_group=default_group,
+                     force_trip_one=True).entry_cost()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    f_ratio = (xla_flops / once.flops) if once.flops else 1.0
+    # clamp: calibration should be a modest correction, never a rescale
+    f_ratio = min(max(f_ratio, 0.25), 2.0)
+    return Cost(flops=full.flops * f_ratio, bytes=full.bytes,
+                wire=full.wire, coll_payload=full.coll_payload,
+                coll_counts=full.coll_counts)

@@ -1,0 +1,150 @@
+"""Serving engines: a prefill engine and a continuous-batching decode engine
+around one model replica each (the in-process realization of the paper's
+"model serving group").
+
+The decode engine owns a slotted cache (capacity = max_slots sequences);
+requests join/leave slots between steps — classic continuous batching without
+page tables (TPU-idiomatic fixed layout + length masks, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.serving import kv_transfer
+from repro.serving.kv_transfer import KVWire
+
+
+@dataclass
+class GenRequest:
+    rid: int
+    tokens: np.ndarray              # prompt token ids (1D)
+    max_new_tokens: int
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+    out_tokens: List[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = -1.0
+    t_done: float = -1.0
+    wire: Optional[KVWire] = None
+
+
+class PrefillEngine:
+    """Latency-oriented: processes one prompt batch at a time."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
+                 rt=None):
+        self.cfg = cfg
+        self.params = params
+        self.api = registry.build(cfg, rt=rt)
+        self.max_seq = max_seq
+        self._jits: Dict[Tuple[int, int], Callable] = {}
+
+    def _prefill_fn(self, batch_shape: Tuple[int, int]) -> Callable:
+        if batch_shape not in self._jits:
+            self._jits[batch_shape] = jax.jit(
+                lambda p, b: self.api.prefill(p, b, max_seq=self.max_seq))
+        return self._jits[batch_shape]
+
+    def run(self, reqs: List[GenRequest], *, compress: bool = True,
+            backend: str = "auto") -> List[Tuple[GenRequest, KVWire, int]]:
+        """Prefill a batch; returns per-request (req, wire, first_token).
+
+        Requests are internally grouped by prompt length so no padding
+        tokens ever enter attention (exact-length batching)."""
+        if not reqs:
+            return []
+        by_len: Dict[int, List[GenRequest]] = {}
+        for r in reqs:
+            by_len.setdefault(len(r.tokens), []).append(r)
+        out = []
+        for L, group in by_len.items():
+            toks = np.stack([r.tokens for r in group]).astype(np.int32)
+            batch = {"tokens": jnp.asarray(toks)}
+            for key in group[0].extras:
+                batch[key] = jnp.stack(
+                    [jnp.asarray(r.extras[key]) for r in group])
+            logits, cache = self._prefill_fn(toks.shape)(self.params, batch)
+            first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for i, r in enumerate(group):
+                wire = kv_transfer.extract(cache, i, L, compress=compress,
+                                           backend=backend)
+                out.append((r, wire, int(first[i])))
+        return out
+
+
+class DecodeEngine:
+    """Throughput-oriented: continuous batching over a slotted cache."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
+                 max_seq: int = 512, rt=None, eos_id: int = -1):
+        self.cfg = cfg
+        self.params = params
+        self.api = registry.build(cfg, rt=rt)
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.cache = self.api.cache_specs  # placeholder; real init below
+        init_fn = (registry.whisper.init_cache if cfg.family == "audio"
+                   else registry.transformer.init_cache)
+        self.cache = init_fn(cfg, max_slots, max_seq)
+        self.slots: List[Optional[GenRequest]] = [None] * max_slots
+        self.cur_token = np.zeros((max_slots,), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, b: self.api.decode(p, c, b))
+
+    # -- slot management ----------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def admit(self, req: GenRequest, wire: KVWire, first_token: int,
+              *, backend: str = "auto") -> bool:
+        free = self.free_slots()
+        if not free:
+            return False
+        i = free[0]
+        self.cache = kv_transfer.insert(self.cache, wire, i, backend=backend)
+        self.slots[i] = req
+        self.cur_token[i] = first_token
+        req.out_tokens.append(first_token)
+        if req.t_first < 0:
+            req.t_first = time.time()
+        return True
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- stepping -----------------------------------------------------------
+
+    def step(self) -> List[GenRequest]:
+        """One decode step for all active slots; returns finished requests."""
+        if self.active == 0:
+            return []
+        batch = {"tokens": jnp.asarray(self.cur_token[:, None])}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            self.cur_token[i] = tok
+            done = (len(req.out_tokens) >= req.max_new_tokens
+                    or tok == self.eos_id
+                    or int(self.cache["lengths"][i]) >= self.max_seq - 1)
+            if done:
+                req.t_done = time.time()
+                finished.append(req)
+                self.slots[i] = None
+                self.cache["lengths"] = \
+                    self.cache["lengths"].at[i].set(0)
+        return finished

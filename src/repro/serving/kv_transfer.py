@@ -1,0 +1,135 @@
+"""KV-cache wire format for prefill -> decode transfer (paper §4).
+
+One-shot int4 group-wise quantization on the sender, immediate dequantization
+on the receiver; both phases compute in 16-bit. For SSM/hybrid archs the
+"KV" is the recurrent-state snapshot (beyond-paper generalization, see
+DESIGN.md §Arch-applicability): bounded-size tensors transferred the same
+way (f32 states are sent raw — they are O(1)-sized).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+@dataclass
+class WireTensor:
+    """Either a quantized (packed, scale, zero, orig_shape) or raw tensor."""
+    kind: str                      # "int4" | "raw"
+    payload: Dict[str, np.ndarray]
+    orig_shape: Tuple[int, ...] = ()
+    dtype: str = "bfloat16"
+
+    def nbytes(self) -> int:
+        return int(sum(a.nbytes for a in self.payload.values()))
+
+
+@dataclass
+class KVWire:
+    """Per-request transferable cache state."""
+    request_len: int
+    slots: Dict[str, Dict[str, WireTensor]]
+
+    def nbytes(self) -> int:
+        return sum(t.nbytes() for s in self.slots.values()
+                   for t in s.values())
+
+
+def _quantize(x: jnp.ndarray, backend: str) -> WireTensor:
+    shape = tuple(x.shape)
+    n = int(np.prod(shape))
+    # 128-wide quantization groups keep the scale/zero overhead at ~3% even
+    # for small head_dims; fall back to smaller even groups, then raw.
+    g = next((gg for gg in (128, 64, 32, 16, 8, 4, 2)
+              if n % gg == 0), 0)
+    if n == 0 or g == 0:
+        return WireTensor("raw", {"x": np.asarray(x)}, shape, str(x.dtype))
+    flat = x.reshape(-1, g)
+    rows = flat.shape[0]
+    block = next(b for b in (256, 128, 64, 32, 16, 8, 4, 2, 1)
+                 if rows % b == 0)
+    packed, scale, zero = ops.kv_quant(flat, backend=backend, block_n=block)
+    return WireTensor("int4", {"packed": np.asarray(packed),
+                               "scale": np.asarray(scale),
+                               "zero": np.asarray(zero)},
+                      shape, str(x.dtype))
+
+
+def _dequantize(w: WireTensor, backend: str) -> jnp.ndarray:
+    if w.kind == "raw":
+        return jnp.asarray(w.payload["x"])
+    out = ops.kv_dequant(jnp.asarray(w.payload["packed"]),
+                         jnp.asarray(w.payload["scale"]),
+                         jnp.asarray(w.payload["zero"]),
+                         backend=backend)
+    return out.reshape(w.orig_shape)
+
+
+def extract(cache, batch_index: int, length: int, *, compress: bool = True,
+            backend: str = "auto") -> KVWire:
+    """Pull one request's state out of a prefill cache pytree."""
+    slots: Dict[str, Dict[str, WireTensor]] = {}
+    for name, slot in cache.items():
+        if name == "lengths":
+            continue
+        out: Dict[str, WireTensor] = {}
+        if isinstance(slot, dict) and "k" in slot:        # attention KV
+            ln = min(length, slot["k"].shape[2])
+            k = slot["k"][:, batch_index, :ln]             # (L, len, Hkv, hd)
+            v = slot["v"][:, batch_index, :ln]
+            if compress:
+                out["k"] = _quantize(k, backend)
+                out["v"] = _quantize(v, backend)
+            else:
+                out["k"] = WireTensor("raw", {"x": np.asarray(k)},
+                                      tuple(k.shape))
+                out["v"] = WireTensor("raw", {"x": np.asarray(v)},
+                                      tuple(v.shape))
+        elif isinstance(slot, dict):                       # recurrent states
+            for key, arr in slot.items():
+                st = arr[:, batch_index]
+                out[key] = WireTensor("raw", {"x": np.asarray(st)},
+                                      tuple(st.shape), str(st.dtype))
+        slots[name] = out
+    return KVWire(request_len=length, slots=slots)
+
+
+def insert(cache, wire: KVWire, batch_index: int, *, backend: str = "auto"):
+    """Insert a transferred request state into a decode cache pytree."""
+    L = wire.request_len
+    for name, slot_wire in wire.slots.items():
+        slot = cache[name]
+        if "k" in slot_wire:
+            k = _dequantize(slot_wire["k"], backend)
+            v = _dequantize(slot_wire["v"], backend)
+            s_cache = slot["k"].shape[2]
+            upd = min(L, s_cache)
+            cache[name]["k"] = slot["k"].at[:, batch_index, :upd].set(
+                k[:, -upd:].astype(slot["k"].dtype))
+            cache[name]["v"] = slot["v"].at[:, batch_index, :upd].set(
+                v[:, -upd:].astype(slot["v"].dtype))
+        else:
+            for key, wt in slot_wire.items():
+                st = _dequantize(wt, backend)
+                cache[name][key] = slot[key].at[:, batch_index].set(
+                    st.astype(slot[key].dtype))
+    cache["lengths"] = cache["lengths"].at[batch_index].set(L)
+    return cache
+
+
+def wire_bytes_uncompressed(wire: KVWire) -> int:
+    total = 0
+    for s in wire.slots.values():
+        for t in s.values():
+            if t.kind == "int4":
+                n = int(np.prod(t.orig_shape))
+                total += n * 2
+            else:
+                total += t.nbytes()
+    return total

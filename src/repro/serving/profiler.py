@@ -1,0 +1,68 @@
+"""Workload profiler (paper Appendix E): sliding-window statistics of
+prompt/response lengths and arrival rate, with shift detection that triggers
+the scheduler's lightweight rescheduling.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Optional, Tuple
+
+from repro.core.workload import Workload
+
+
+@dataclass
+class WindowStats:
+    n: int
+    rate: float
+    mean_in: float
+    mean_out: float
+
+
+class WorkloadProfiler:
+    def __init__(self, *, window: int = 200, shift_threshold: float = 0.4):
+        self.window = window
+        self.shift_threshold = shift_threshold
+        self._records: Deque[Tuple[float, int, int]] = deque(maxlen=window)
+        self._baseline: Optional[WindowStats] = None
+
+    def record(self, n_in: int, n_out: int, t: Optional[float] = None):
+        self._records.append((t if t is not None else time.time(),
+                              n_in, n_out))
+
+    def stats(self) -> Optional[WindowStats]:
+        if len(self._records) < 8:
+            return None
+        ts = [r[0] for r in self._records]
+        dur = max(ts[-1] - ts[0], 1e-9)
+        return WindowStats(
+            n=len(self._records),
+            rate=len(self._records) / dur,
+            mean_in=sum(r[1] for r in self._records) / len(self._records),
+            mean_out=sum(r[2] for r in self._records) / len(self._records))
+
+    def set_baseline(self):
+        self._baseline = self.stats()
+
+    def shift_detected(self) -> bool:
+        """Relative change in mean output (or input) length beyond threshold.
+
+        Output length drives the prefill:decode balance (paper §3.4), so it
+        is the primary signal."""
+        cur = self.stats()
+        if cur is None or self._baseline is None:
+            return False
+        b = self._baseline
+
+        def rel(a, bb):
+            return abs(a - bb) / max(abs(bb), 1e-9)
+
+        return (rel(cur.mean_out, b.mean_out) > self.shift_threshold
+                or rel(cur.mean_in, b.mean_in) > self.shift_threshold)
+
+    def as_workload(self, name: str = "observed") -> Optional[Workload]:
+        s = self.stats()
+        if s is None:
+            return None
+        return Workload(name, mean_in=s.mean_in, mean_out=s.mean_out)

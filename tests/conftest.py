@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: deliberately NO XLA_FLAGS here — tests must see the real (1-device)
+# CPU topology; only launch/dryrun.py forces 512 host devices.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

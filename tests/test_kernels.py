@@ -1,0 +1,110 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+FLASH_CASES = [
+    # (BH, BHkv, Sq, Sk, hd, causal, window, dtype)
+    (4, 4, 128, 128, 64, True, 0, jnp.float32),
+    (8, 2, 256, 256, 64, True, 0, jnp.float32),     # GQA group=4
+    (8, 1, 128, 128, 32, True, 0, jnp.bfloat16),    # MQA
+    (4, 4, 128, 256, 64, False, 0, jnp.float32),    # cross-ish, non-causal
+    (4, 2, 256, 256, 128, True, 64, jnp.float32),   # sliding window
+    (2, 2, 384, 384, 64, True, 128, jnp.bfloat16),  # SWA bf16
+]
+
+
+@pytest.mark.parametrize("BH,BHkv,Sq,Sk,hd,causal,win,dtype", FLASH_CASES)
+def test_flash_attention_matches_ref(BH, BHkv, Sq, Sk, hd, causal, win,
+                                     dtype):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (BH, Sq, hd), dtype)
+    k = _rand(k2, (BHkv, Sk, hd), dtype)
+    v = _rand(k3, (BHkv, Sk, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=win,
+                              backend="interpret", block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,Hkv,g,S,hd,dtype", [
+    (4, 2, 4, 512, 64, jnp.float32),
+    (2, 1, 8, 256, 128, jnp.bfloat16),   # MQA-style decode
+    (3, 4, 1, 384, 64, jnp.float32),     # MHA decode (g=1)
+])
+def test_decode_attention_matches_ref(B, Hkv, g, S, hd, dtype):
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    q = _rand(k1, (B, Hkv, g, hd), dtype)
+    k = _rand(k2, (B, Hkv, S, hd), dtype)
+    v = _rand(k3, (B, Hkv, S, hd), dtype)
+    kv_len = jax.random.randint(k4, (B,), 1, S + 1)
+    out = ops.decode_attention(q, k, v, kv_len, backend="interpret",
+                               block_k=128)
+    want = ref.decode_attention_ref(q, k, v, kv_len=kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("N,G,dtype", [
+    (256, 128, jnp.bfloat16),
+    (512, 64, jnp.float32),
+    (1024, 256, jnp.bfloat16),
+])
+def test_kv_quant_roundtrip_error_bound(N, G, dtype):
+    x = _rand(KEY, (N, G), dtype)
+    packed, scale, zero = ops.kv_quant(x, backend="interpret")
+    back = ops.kv_dequant(packed, scale, zero, backend="interpret",
+                          out_dtype=jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x, np.float32))
+    # affine int4: |err| <= scale/2 per element (+ eps for bf16 rounding)
+    bound = np.asarray(scale) / 2 + 1e-2
+    assert (err <= bound).all(), (err.max(), bound.min())
+
+
+def test_kv_quant_matches_ref_packing():
+    x = _rand(KEY, (256, 128), jnp.bfloat16)
+    p1, s1, z1 = ops.kv_quant(x, backend="interpret")
+    p2, s2, z2 = ref.kv_quant_ref(x)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-6)
+    # packed nibbles may differ by 1 on exact rounding knife-edges (reduction
+    # order); dequantized values must agree within one quantization step
+    d1 = ref.kv_dequant_ref(p1, s1, z1, dtype=jnp.float32)
+    d2 = ref.kv_dequant_ref(p2, s2, z2, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2),
+                               atol=float(np.asarray(s1).max()) + 1e-6)
+
+
+def test_kv_quant_compression_ratio():
+    x = _rand(KEY, (512, 128), jnp.bfloat16)
+    packed, scale, zero = ops.kv_quant(x, backend="interpret")
+    wire = packed.nbytes + scale.nbytes + zero.nbytes
+    orig = x.size * 2
+    assert wire / orig < 0.30, wire / orig  # paper: ~4x shrink
+
+
+@pytest.mark.parametrize("N,d", [(256, 128), (512, 512)])
+def test_rmsnorm_matches_ref(N, d):
+    x = _rand(KEY, (N, d), jnp.bfloat16)
+    s = jax.random.normal(KEY, (d,), jnp.float32) * 0.2
+    out = ops.rmsnorm(x, s, backend="interpret")
+    want = ref.rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2)

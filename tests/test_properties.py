@@ -1,0 +1,133 @@
+"""Hypothesis property-based tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import costmodel as cm
+from repro.core import parallel as par
+from repro.core.cluster import make_paper_cloud
+from repro.configs import get_config
+from repro.kernels import ref
+
+CLUSTER = make_paper_cloud()
+CFG = get_config("llama-30b")
+
+
+# ---------------------------------------------------------------------------
+# int4 quantization properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+def test_quant_roundtrip_error_bound(rows, half_g, seed):
+    G = 2 * half_g
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, G), jnp.float32)
+    x = x * (1 + (seed % 13))
+    packed, scale, zero = ref.kv_quant_ref(x)
+    back = ref.kv_dequant_ref(packed, scale, zero, dtype=jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= np.asarray(scale) / 2 + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_quant_idempotent(rows, seed):
+    """quant(dequant(quant(x))) == quant(x) (fixed point)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, 16), jnp.float32)
+    p1, s1, z1 = ref.kv_quant_ref(x)
+    y = ref.kv_dequant_ref(p1, s1, z1, dtype=jnp.float32)
+    p2, s2, z2 = ref.kv_quant_ref(y)
+    y2 = ref.kv_dequant_ref(p2, s2, z2, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blocked attention == reference for arbitrary shapes
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([1, 2, 4]), st.integers(2, 5),
+       st.integers(2, 6), st.sampled_from([8, 16]), st.booleans(),
+       st.integers(0, 2 ** 31 - 1))
+def test_blocked_attention_matches_ref(B, g, sq8, sk8, hd, causal, seed):
+    from repro.models.layers import attention, attention_ref
+    Sq, Sk = sq8 * 8, sk8 * 8
+    if causal and Sq > Sk:
+        Sq = Sk
+    Hk = 2
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, Sq, Hk * g, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, Sk, Hk, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, Sk, Hk, hd), jnp.float32)
+    qo = jnp.full((B,), Sk - Sq, jnp.int32) if causal else None
+    blocked = attention(q, k, v, causal=causal, q_offset=qo,
+                        chunk_q=8, chunk_kv=8)
+    full = attention_ref(q, k, v, causal=causal, q_offset=qo)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sets(st.integers(0, 31), min_size=4, max_size=16))
+def test_pipeline_partition_sums_to_layers(devices):
+    devices = sorted(devices)
+    for pc in par.enumerate_configs(CLUSTER, CFG, devices):
+        assert sum(pc.layer_partition) == CFG.num_layers
+        assert all(p >= 1 for p in pc.layer_partition)
+        # every stage's layers fit its memory
+        per_layer = CFG.param_count() * cm.BYTES / CFG.num_layers
+        embed = CFG.vocab_size * CFG.d_model * cm.BYTES
+        for s, stage in enumerate(pc.stages):
+            mem = sum(CLUSTER.devices[i].chip.hbm_bytes for i in stage) * 0.9
+            assert pc.layer_partition[s] * per_layer + embed <= mem * 1.001
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 2 ** 31 - 1))
+def test_tstp_mass_conservation(m, n, seed):
+    from repro.core.orchestrator import solve_tstp
+    rng = np.random.default_rng(seed)
+    D = rng.random((m, n))
+    cap_p = rng.random(m) * 2
+    cap_d = rng.random(n) * 2
+    o = solve_tstp(D, cap_p, cap_d, rate=1.0)
+    assert o.Z.sum() <= 1 + 1e-6
+    assert (o.Z >= -1e-9).all()
+    assert (o.Z.sum(1) <= np.minimum(cap_p, 1) + 1e-6).all()
+    assert (o.Z.sum(0) <= np.minimum(cap_d, 1) + 1e-6).all()
+    # objective is optimal for the relaxation: compare against greedy mass
+    assert o.attainment <= D.max() * min(1.0, cap_p.sum(), cap_d.sum()) + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(64, 4096), st.integers(1, 64))
+def test_cost_model_latency_monotone_in_tokens(tokens, batch):
+    pc = cm.ParallelConfig(tp=2, pp=1, stages=[[8, 9]],
+                           layer_partition=[CFG.num_layers])
+    t1 = cm.prefill_latency(CLUSTER, CFG, pc, tokens)
+    t2 = cm.prefill_latency(CLUSTER, CFG, pc, tokens * 2)
+    assert t2 >= t1
+    d1 = cm.decode_step_latency(CLUSTER, CFG, pc, batch, 1024)
+    d2 = cm.decode_step_latency(CLUSTER, CFG, pc, batch * 2, 1024)
+    assert d2 >= d1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(128, 8192))
+def test_kv_transfer_compression_speedup(n_tokens):
+    t_raw = cm.kv_transfer_time(CLUSTER, CFG, [0], [4], n_tokens,
+                                compress=False)
+    t_c = cm.kv_transfer_time(CLUSTER, CFG, [0], [4], n_tokens,
+                              compress=True)
+    assert t_c < t_raw

@@ -1,0 +1,154 @@
+"""Scheduler unit + property tests: tabu moves preserve the device
+partition, search improves over init, TSTP respects simplex/capacity
+constraints, lightweight rescheduling freezes groups & parallel configs."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import costmodel as cm
+from repro.core import orchestrator as orch
+from repro.core import parallel as par
+from repro.core import scheduler, tabu
+from repro.core.cluster import make_paper_cloud, make_tpu_fleet
+from repro.core.orchestrator import SloSpec
+from repro.core.workload import CODING, CONVERSATION
+
+CFG = get_config("llama-30b")
+CLUSTER = make_paper_cloud()
+SLO = SloSpec(ttft_s=2.0, tpot_s=0.15, e2e_s=30.0)
+
+
+def _check_partition(sol, n):
+    devs = [i for g in sol.groups for i in g]
+    assert sorted(devs) == list(range(n)), "groups must partition devices"
+
+
+def test_initial_solution_feasible_partition():
+    sol = tabu.initial_solution(CLUSTER, CFG, random.Random(0))
+    _check_partition(sol, CLUSTER.n)
+    assert tabu.feasible(CLUSTER, CFG, sol) or len(sol.groups) == 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_neighbor_moves_preserve_partition(seed):
+    rng = random.Random(seed)
+    sol = tabu.initial_solution(CLUSTER, CFG, rng)
+    for _ in range(30):
+        nbrs = tabu.neighbors(CLUSTER, CFG, sol, 5, rng)
+        for nb in nbrs:
+            _check_partition(nb, CLUSTER.n)
+        if nbrs:
+            sol = nbrs[0]
+
+
+def test_group_memory_feasibility_pruning():
+    # a single 3090Ti (24 GB) cannot hold LLaMA-30B (~65 GB bf16)
+    small = tabu.Solution(((24,), tuple(range(24)) + tuple(range(25, 32))),
+                          ("prefill", "decode"))
+    assert not tabu.feasible(CLUSTER, CFG, small)
+
+
+def test_tabu_improves_over_init():
+    solver = scheduler.LowerLevelSolver(CLUSTER, CFG, CODING, 2.0, SLO)
+    rng = random.Random(0)
+    init = tabu.initial_solution(CLUSTER, CFG, rng)
+    init_score = solver.score(init)
+    res = tabu.tabu_search(CLUSTER, CFG, solver.score, n_step=15, seed=0,
+                           patience=50)
+    assert res.best_score >= init_score
+    assert res.history == sorted(res.history), "best score is monotone"
+
+
+def test_parallel_config_covers_layers_and_memory():
+    group = list(range(8, 16))  # the 8xA40 node
+    for pc in par.enumerate_configs(CLUSTER, CFG, group):
+        assert sum(pc.layer_partition) == CFG.num_layers
+        assert len(pc.stages) == pc.pp
+        assert all(len(s) == pc.tp for s in pc.stages)
+        flat = sorted(i for s in pc.stages for i in s)
+        assert flat == sorted(group)
+
+
+def test_tp_never_spans_nodes():
+    group = [0, 1, 2, 3, 8, 9, 10, 11]  # A6000 node + half the A40 node
+    for pc in par.enumerate_configs(CLUSTER, CFG, group):
+        for stage in pc.stages:
+            nodes = {CLUSTER.devices[i].node for i in stage}
+            assert len(nodes) == 1, "TP must stay within one node"
+
+
+def test_stage_routing_dp_maximizes_bottleneck():
+    group = list(range(0, 8))  # two nodes
+    got = par.deduce(CLUSTER, CFG, group, "prefill")
+    assert got is not None
+    pc, rc = got
+    assert rc.prefill_latency_1k > 0
+
+
+def test_tstp_simplex_and_capacity():
+    D = np.array([[0.9, 0.5], [0.4, 0.8]])
+    cap_p = np.array([1.0, 1.0])
+    cap_d = np.array([0.6, 0.6])
+    o = orch.solve_tstp(D, cap_p, cap_d, rate=1.0)
+    assert o.Z.sum() <= 1.0 + 1e-6
+    assert (o.Z >= -1e-9).all()
+    assert (o.Z.sum(axis=1) <= cap_p + 1e-6).all()
+    assert (o.Z.sum(axis=0) <= cap_d + 1e-6).all()
+    # prefers the high-attainment pairs
+    assert o.attainment >= 0.8 * min(1.0, cap_d.sum())
+    # Y rows are distributions where X > 0
+    for i in range(2):
+        if o.X[i] > 1e-9:
+            assert abs(o.Y[i].sum() - 1.0) < 1e-6
+
+
+def test_schedule_end_to_end_scores_positive():
+    plan = scheduler.schedule(CLUSTER, CFG, CODING, 2.0, SLO, n_step=8,
+                              seed=0, patience=8)
+    assert plan.score > 0
+    assert plan.prefill_replicas and plan.decode_replicas
+    _check_partition(plan.solution, CLUSTER.n)
+
+
+def test_lightweight_rescheduling_freezes_groups():
+    plan = scheduler.schedule(CLUSTER, CFG, CODING, 2.0, SLO, n_step=8,
+                              seed=0, patience=8)
+    plan2 = scheduler.reschedule_lightweight(CLUSTER, CFG, plan,
+                                             CONVERSATION, 2.0, SLO)
+    assert sorted(map(tuple, plan2.solution.groups)) == \
+        sorted(map(tuple, plan.solution.groups)), \
+        "lightweight rescheduling must not change group construction"
+    # parallel configs frozen per group
+    pc_by_group = {tuple(r.devices): r.pc.describe() for r in plan.replicas}
+    for r in plan2.replicas:
+        assert pc_by_group[tuple(r.devices)] == r.pc.describe()
+
+
+def test_drop_nodes_removes_affected_groups():
+    plan = scheduler.schedule(CLUSTER, CFG, CODING, 2.0, SLO, n_step=8,
+                              seed=0, patience=8)
+    dead = [d.idx for d in CLUSTER.devices if d.node == 0]
+    shrunk = scheduler.drop_nodes(CLUSTER, plan, dead)
+    for g in shrunk.groups:
+        assert not (set(g) & set(dead))
+
+
+def test_scheduler_works_on_tpu_fleet():
+    cluster = make_tpu_fleet()
+    plan = scheduler.schedule(cluster, CFG, CONVERSATION, 2.0, SLO,
+                              n_step=8, seed=0, patience=8)
+    assert plan.score > 0
+
+
+def test_coding_prefers_more_prefill_than_conversation():
+    """Paper Fig. 6/Table 3: coding (short outputs) gets a higher
+    prefill:decode ratio than conversation (long outputs)."""
+    p_cod = scheduler.schedule(CLUSTER, CFG, CODING, 2.0, SLO, n_step=20,
+                               seed=0)
+    p_con = scheduler.schedule(CLUSTER, CFG, CONVERSATION, 2.0, SLO,
+                               n_step=20, seed=0)
+    r_cod = len(p_cod.prefill_replicas) / max(len(p_cod.decode_replicas), 1)
+    r_con = len(p_con.prefill_replicas) / max(len(p_con.decode_replicas), 1)
+    assert r_cod >= r_con

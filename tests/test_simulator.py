@@ -1,0 +1,64 @@
+"""Event-simulator sanity: SLO-scale monotonicity, load degradation,
+compression benefit, colocation interference."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import scheduler
+from repro.core.cluster import make_paper_cloud
+from repro.core.orchestrator import SloSpec
+from repro.core.simulator import min_slo_scale_for, simulate
+from repro.core.workload import CODING, CONVERSATION, generate
+
+CFG = get_config("llama-30b")
+CLUSTER = make_paper_cloud()
+SLO = SloSpec(ttft_s=2.0, tpot_s=0.15, e2e_s=30.0)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return scheduler.schedule(CLUSTER, CFG, CONVERSATION, 2.0, SLO,
+                              n_step=10, seed=0, patience=8)
+
+
+def test_slo_scale_monotone(plan):
+    reqs = generate(CONVERSATION, rate=2.0, duration=40, seed=0)
+    prev = -1.0
+    for scale in (0.25, 1.0, 4.0):
+        res = simulate(CLUSTER, CFG, plan.replicas, plan.orchestration,
+                       reqs, SLO.scaled(scale))
+        assert res.e2e_attain >= prev - 1e-9
+        prev = res.e2e_attain
+
+
+def test_every_request_finishes(plan):
+    reqs = generate(CONVERSATION, rate=2.0, duration=30, seed=1)
+    res = simulate(CLUSTER, CFG, plan.replicas, plan.orchestration, reqs,
+                   SLO)
+    assert len(res.requests) == len(reqs)
+    assert all(r.t_done >= r.t_first_token >= r.t_arrive - 1e-9
+               for r in res.requests)
+
+
+def test_overload_degrades_latency(plan):
+    lo = generate(CONVERSATION, rate=1.0, duration=40, seed=2)
+    hi = generate(CONVERSATION, rate=16.0, duration=40, seed=2)
+    r_lo = simulate(CLUSTER, CFG, plan.replicas, plan.orchestration, lo, SLO)
+    r_hi = simulate(CLUSTER, CFG, plan.replicas, plan.orchestration, hi, SLO)
+    assert r_hi.p99_e2e >= r_lo.p99_e2e
+
+
+def test_compression_reduces_kv_time_fraction(plan):
+    reqs = generate(CONVERSATION, rate=2.0, duration=40, seed=3)
+    r_raw = simulate(CLUSTER, CFG, plan.replicas, plan.orchestration, reqs,
+                     SLO, compress=False)
+    r_c = simulate(CLUSTER, CFG, plan.replicas, plan.orchestration, reqs,
+                   SLO, compress=True)
+    assert r_c.kv_comm_frac < r_raw.kv_comm_frac
+
+
+def test_min_slo_scale_finite(plan):
+    reqs = generate(CONVERSATION, rate=1.0, duration=30, seed=4)
+    s = min_slo_scale_for(CLUSTER, CFG, plan.replicas, plan.orchestration,
+                          reqs, SLO, target=0.5)
+    assert s < float("inf")
