@@ -14,6 +14,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--suite", default="",
+                    help="alias for --only (e.g. --suite throughput; the "
+                         "throughput suite also writes BENCH_throughput.json)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (bench_case_study, bench_kernels,
@@ -34,7 +37,11 @@ def main() -> None:
         "case": (bench_case_study, "Table 3 case study"),
         "kernels": (bench_kernels, "kernel micro + v5e roofline"),
     }
-    only = {s for s in args.only.split(",") if s}
+    only = {s for s in f"{args.only},{args.suite}".split(",") if s}
+    unknown = only - suites.keys()
+    if unknown:
+        sys.exit(f"unknown suite(s): {sorted(unknown)}; "
+                 f"known: {sorted(suites)}")
     print("name,us_per_call,derived")
     failures = 0
     for key, (mod, desc) in suites.items():

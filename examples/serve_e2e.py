@@ -67,6 +67,10 @@ def main():
           f"p99={np.percentile(e2e,99)*1e3:.0f}ms")
     kv = "int4" if not args.no_compress else "raw bf16"
     print(f"KV transfer wire format: {kv}")
+    syncs = sum(d.host_syncs for d in decodes)
+    steps = sum(d.steps_run for d in decodes)
+    print(f"decode host syncs: {syncs} for {steps} device steps "
+          f"({steps / max(syncs, 1):.1f} steps/sync)")
 
 
 if __name__ == "__main__":

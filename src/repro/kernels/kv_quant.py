@@ -41,14 +41,19 @@ def _dequant_kernel(q_ref, scale_ref, zero_ref, x_ref, *, out_dtype):
 
 
 def kv_quant(x, *, block_n=256, interpret=False):
-    """x: (N, G) -> (packed (N, G//2) u8, scale (N,1) f32, zero (N,1) f32)."""
+    """x: (N, G) -> (packed (N, G//2) u8, scale (N,1) f32, zero (N,1) f32).
+
+    N need not divide block_n: the grid is ceil-divided and the ragged tail
+    block is padded on load / clipped on store by pallas — safe here because
+    the min/max reduction is per-row (padding rows never leak into real
+    rows). This keeps the batched wire path on one well-tiled launch
+    instead of degenerating to tiny blocks for awkward row counts."""
     N, G = x.shape
     assert G % 2 == 0
     block_n = min(block_n, N)
-    assert N % block_n == 0, (N, block_n)
     return pl.pallas_call(
         _quant_kernel,
-        grid=(N // block_n,),
+        grid=(pl.cdiv(N, block_n),),
         in_specs=[pl.BlockSpec((block_n, G), lambda i: (i, 0))],
         out_specs=[
             pl.BlockSpec((block_n, G // 2), lambda i: (i, 0)),
@@ -66,14 +71,14 @@ def kv_quant(x, *, block_n=256, interpret=False):
 
 def kv_dequant(packed, scale, zero, *, out_dtype=jnp.bfloat16, block_n=256,
                interpret=False):
-    """Inverse of kv_quant. Returns (N, G) in out_dtype."""
+    """Inverse of kv_quant. Returns (N, G) in out_dtype. Ragged N is
+    handled the same way as in ``kv_quant`` (per-row kernel)."""
     N, Gh = packed.shape
     block_n = min(block_n, N)
-    assert N % block_n == 0, (N, block_n)
     kernel = functools.partial(_dequant_kernel, out_dtype=out_dtype)
     return pl.pallas_call(
         kernel,
-        grid=(N // block_n,),
+        grid=(pl.cdiv(N, block_n),),
         in_specs=[
             pl.BlockSpec((block_n, Gh), lambda i: (i, 0)),
             pl.BlockSpec((block_n, 1), lambda i: (i, 0)),

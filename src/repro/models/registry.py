@@ -30,6 +30,53 @@ class ModelApi:
     decode: Callable
     input_specs: Callable
     cache_specs: Callable
+    decode_chunk: Optional[Callable] = None
+
+
+def make_decode_chunk(decode_fn: Callable) -> Callable:
+    """Build a device-resident greedy multi-token decode loop around a
+    single-step ``decode(params, cache, batch) -> (logits, cache)``.
+
+    The returned function runs ``n_steps`` decode steps as one ``lax.scan``
+    — current tokens, per-slot EOS / max-token / max-seq done-flags, and the
+    emitted token chunk all stay on device, so a serving engine pays one
+    host round-trip per *chunk* instead of per token (DESIGN.md §3).
+
+    state pytree: {"cur": (B,) int32 current token per slot,
+                   "active": (B,) bool slot-occupied & not finished,
+                   "n_out": (B,) int32 tokens emitted so far (incl. first),
+                   "max_new": (B,) int32 per-request budget}.
+    Returns (tokens (n_steps, B), valid (n_steps, B) bool, cache, state).
+    Inactive slots keep their cache lengths frozen so free slots never
+    advance; a slot's final token is emitted on the step that finishes it.
+    """
+
+    def decode_chunk(params, cache, state, *, n_steps: int, eos_id: int,
+                     max_seq: int):
+        max_new = state["max_new"]
+
+        def step(carry, _):
+            cache, cur, active, n_out = carry
+            logits, new_cache = decode_fn(params, cache,
+                                          {"tokens": cur[:, None]})
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            n_out = n_out + active.astype(jnp.int32)
+            new_cache = dict(new_cache)
+            new_cache["lengths"] = jnp.where(active, new_cache["lengths"],
+                                             cache["lengths"])
+            done = active & ((nxt == eos_id) | (n_out >= max_new)
+                             | (new_cache["lengths"] >= max_seq - 1))
+            emit = jnp.where(active, nxt, -1)
+            cur = jnp.where(active, nxt, cur)
+            return (new_cache, cur, active & ~done, n_out), (emit, active)
+
+        carry = (cache, state["cur"], state["active"], state["n_out"])
+        (cache, cur, active, n_out), (toks, valid) = jax.lax.scan(
+            step, carry, None, length=n_steps)
+        return toks, valid, cache, {"cur": cur, "active": active,
+                                    "n_out": n_out, "max_new": max_new}
+
+    return decode_chunk
 
 
 def _effective_cfg(cfg: ModelConfig, shape: Optional[ShapeSpec]) -> ModelConfig:
@@ -92,7 +139,8 @@ def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
             return whisper.prefill(cfg, params, batch["tokens"],
                                    batch["frame_embeds"],
                                    max_seq=max_seq or batch["tokens"].shape[1],
-                                   rt=rt)
+                                   rt=rt, last_pos=batch.get("last_pos"),
+                                   true_len=batch.get("true_len"))
 
         def decode_fn(params, cache, batch):
             return whisper.decode_step(cfg, params, cache, batch["tokens"],
@@ -109,11 +157,20 @@ def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
 
         def prefill_fn(params, batch, *, max_seq=None):
             S = batch["tokens"].shape[1]
+            last_pos = batch.get("last_pos")
+            true_len = batch.get("true_len")
             if cfg.family == "vlm" and "patch_embeds" in batch:
-                S += batch["patch_embeds"].shape[1]
+                n_patch = batch["patch_embeds"].shape[1]
+                S += n_patch
+                # token-indexed positions shift past the patch prefix
+                if last_pos is not None:
+                    last_pos = last_pos + n_patch
+                if true_len is not None:
+                    true_len = true_len + n_patch
             return transformer.prefill(
                 cfg, params, batch["tokens"], max_seq=max_seq or S,
-                patch_embeds=batch.get("patch_embeds"), rt=rt)
+                patch_embeds=batch.get("patch_embeds"), rt=rt,
+                last_pos=last_pos, true_len=true_len)
 
         def decode_fn(params, cache, batch):
             return transformer.decode_step(cfg, params, cache,
@@ -135,7 +192,8 @@ def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
 
     return ModelApi(cfg=cfg, init=init, loss=loss, prefill=prefill_fn,
                     decode=decode_fn, input_specs=input_specs,
-                    cache_specs=cache_specs)
+                    cache_specs=cache_specs,
+                    decode_chunk=make_decode_chunk(decode_fn))
 
 
 def build_for_cell(cfg: ModelConfig, shape: ShapeSpec,

@@ -363,8 +363,13 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
 
 
 def prefill(cfg, params, tokens, *, max_seq: int, patch_embeds=None, rt=None,
-            window=None):
-    """Process the prompt; build the decode cache. Returns (logits_last, cache)."""
+            window=None, last_pos=None, true_len=None):
+    """Process the prompt; build the decode cache. Returns (logits_last, cache).
+
+    ``last_pos``/``true_len`` support right-padded (bucketed) prompts:
+    logits are gathered at each sequence's own last real position instead of
+    ``S-1``, and the cache lengths record the real (unpadded) lengths.
+    Causal attention makes right padding invisible to the real positions."""
     x, caches, _ = forward(cfg, params, tokens, patch_embeds=patch_embeds,
                            rt=rt, collect_cache=True, window=window)
     B, S = x.shape[:2]
@@ -398,9 +403,14 @@ def prefill(cfg, params, tokens, *, max_seq: int, patch_embeds=None, rt=None,
                 v_upd.astype(cache[f"slot{s}"]["v"].dtype), (0, 0, 0, 0, 0))
         else:
             cache[f"slot{s}"] = got
-    cache["lengths"] = jnp.full((B,), S, jnp.int32)
+    cache["lengths"] = (jnp.full((B,), S, jnp.int32) if true_len is None
+                        else true_len.astype(jnp.int32))
     w = unembed_matrix(cfg, params)
-    logits = (x[:, -1:] @ w).astype(jnp.float32)
+    if last_pos is None:
+        h_last = x[:, -1:]
+    else:
+        h_last = x[jnp.arange(B), last_pos][:, None]
+    logits = (h_last @ w).astype(jnp.float32)
     return logits, cache
 
 

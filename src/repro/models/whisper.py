@@ -167,7 +167,11 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
     }
 
 
-def prefill(cfg, params, tokens, frame_embeds, *, max_seq: int, rt=None):
+def prefill(cfg, params, tokens, frame_embeds, *, max_seq: int, rt=None,
+            last_pos=None, true_len=None):
+    """``last_pos``/``true_len`` support right-padded (bucketed) prompts —
+    the decoder self-attention is causal, so padding is invisible to real
+    positions; logits are gathered at each sequence's last real token."""
     enc_out = encode(cfg, params, frame_embeds)
     B, S = tokens.shape
     x = params["embed"][tokens]
@@ -191,8 +195,13 @@ def prefill(cfg, params, tokens, frame_embeds, *, max_seq: int, rt=None):
         (0, 0, 0, 0, 0))
     cache["cross_k"] = cross_kv[0].astype(cache["cross_k"].dtype)
     cache["cross_v"] = cross_kv[1].astype(cache["cross_v"].dtype)
-    cache["lengths"] = jnp.full((B,), S, jnp.int32)
-    logits = (x[:, -1:] @ params["unembed"]).astype(jnp.float32)
+    cache["lengths"] = (jnp.full((B,), S, jnp.int32) if true_len is None
+                        else true_len.astype(jnp.int32))
+    if last_pos is None:
+        h_last = x[:, -1:]
+    else:
+        h_last = x[jnp.arange(B), last_pos][:, None]
+    logits = (h_last @ params["unembed"]).astype(jnp.float32)
     return logits, cache
 
 

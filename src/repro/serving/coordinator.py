@@ -57,6 +57,11 @@ class Coordinator:
         self.transfer_queue: List[Tuple[GenRequest, object, int, int]] = []
         self.done: List[GenRequest] = []
         self.events: List[str] = []
+        # when True, wires are synced to host before the decode handoff
+        # (models a real network hop; in-process the device arrays flow
+        # straight through — see KVWire.materialize)
+        self.materialize_wires = False
+        self._decode_outage_reported = False
 
     # -- routing ------------------------------------------------------------
 
@@ -88,11 +93,20 @@ class Coordinator:
     def pump(self, *, max_prefill_batch: int = 4) -> int:
         """One coordinator iteration; returns #finished this round."""
         self._check_heartbeats()
-        # 1. dispatch queued prompts to a prefill replica
+        # 1. dispatch queued prompts: drain EVERY alive prefill replica this
+        #    round (the TSTP masses only order who gets fed first), instead
+        #    of feeding one randomly sampled replica and idling the rest
         if self.queue:
             X = self._X()
-            i = int(self.rng.choice(len(self.pre), p=X))
-            if self.pre[i].alive:
+            cand = [i for i in range(len(self.pre))
+                    if self.pre[i].alive and X[i] > 0]
+            if len(cand) > 1:
+                p = X[cand] / X[cand].sum()
+                cand = [int(i) for i in self.rng.choice(
+                    cand, size=len(cand), replace=False, p=p)]
+            for i in cand:
+                if not self.queue:
+                    break
                 batch = self.queue[:max_prefill_batch]
                 self.queue = self.queue[max_prefill_batch:]
                 t0 = time.time()
@@ -100,22 +114,19 @@ class Coordinator:
                     batch, compress=self.compress, backend=self.backend)
                 self._track(self.pre[i], time.time() - t0)
                 Y = self._Y(i)
+                routable = Y.sum() > 0
                 for req, wire, first in results:
-                    j = int(self.rng.choice(len(self.dec), p=Y))
+                    if self.materialize_wires:
+                        wire.materialize()   # the explicit host wire hop
+                    # with no alive decode replica the target is a
+                    # placeholder; _drain_transfers holds the wire + events
+                    j = (int(self.rng.choice(len(self.dec), p=Y))
+                         if routable else 0)
                     self.transfer_queue.append((req, wire, first, j))
         # 2. drain KV transfers into decode slots (prefill-side queueing:
         #    wires wait here if the target has no free slot, cf. Appendix E)
-        still = []
-        for req, wire, first, j in self.transfer_queue:
-            handle = self.dec[j]
-            if not handle.alive:
-                j = int(np.argmax([d.alive for d in self.dec]))
-                handle = self.dec[j]
-            if not handle.engine.admit(req, wire, first,
-                                       backend=self.backend):
-                still.append((req, wire, first, j))
-        self.transfer_queue = still
-        # 3. advance every decode replica one step
+        self._drain_transfers()
+        # 3. advance every decode replica one chunk of steps
         n_done = 0
         for handle in self.dec:
             if not handle.alive:
@@ -129,6 +140,34 @@ class Coordinator:
                 self.done.append(req)
                 n_done += 1
         return n_done
+
+    def _drain_transfers(self):
+        if not self.transfer_queue:
+            return
+        alive = [j for j, d in enumerate(self.dec) if d.alive]
+        if not alive:
+            # do NOT silently reroute to replica 0 (it is dead too) — keep
+            # the wires queued and surface the outage once
+            if not self._decode_outage_reported:
+                self.events.append(
+                    "all decode replicas dead; KV transfers stalled")
+                self._decode_outage_reported = True
+            return
+        self._decode_outage_reported = False
+        by_target: Dict[int, List[Tuple[GenRequest, object, int]]] = {}
+        for req, wire, first, j in self.transfer_queue:
+            if not self.dec[j].alive:
+                # reroute to the alive replica with the most free slots
+                j = max(alive,
+                        key=lambda jj: len(self.dec[jj].engine.free_slots()))
+            by_target.setdefault(j, []).append((req, wire, first))
+        still = []
+        for j, items in by_target.items():
+            rejected = self.dec[j].engine.admit_batch(
+                items, backend=self.backend)
+            still.extend((req, wire, first, j)
+                         for req, wire, first in rejected)
+        self.transfer_queue = still
 
     def run_until_drained(self, *, max_iters: int = 10000) -> List[GenRequest]:
         it = 0

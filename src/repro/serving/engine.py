@@ -5,12 +5,18 @@ around one model replica each (the in-process realization of the paper's
 The decode engine owns a slotted cache (capacity = max_slots sequences);
 requests join/leave slots between steps — classic continuous batching without
 page tables (TPU-idiomatic fixed layout + length masks, see DESIGN.md §2).
+
+Perf architecture (DESIGN.md §3): the decode hot loop is DEVICE-RESIDENT —
+``step()`` runs a jitted ``lax.scan`` over ``chunk_size`` decode steps and
+pays one host synchronization per *chunk* instead of per token. Prefill
+compilation is bounded by power-of-two length buckets, so the jit cache
+holds at most ``log2(max_seq)`` entries per engine.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,15 +41,37 @@ class GenRequest:
     wire: Optional[KVWire] = None
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max((n - 1).bit_length(), 0)
+
+
 class PrefillEngine:
-    """Latency-oriented: processes one prompt batch at a time."""
+    """Latency-oriented: processes one prompt batch at a time.
+
+    Prompts are right-padded to power-of-two length buckets (causal
+    attention makes the padding invisible to real positions; logits are
+    gathered at each prompt's own last token), so the engine compiles at
+    most ``log2(max_seq)`` length buckets (times a handful of pow2 batch
+    widths <= max_batch) instead of one variant per unique prompt shape. Architectures with recurrent state (SSM / hybrid /
+    xLSTM) or sliding-window attention fall back to exact-length grouping:
+    their prefill state depends on every processed position, so padding
+    would corrupt it.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 512,
-                 rt=None):
+                 rt=None, bucket: bool = True, max_batch: int = 4,
+                 min_bucket: int = 16):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg, rt=rt)
         self.max_seq = max_seq
+        self.max_batch = max_batch
+        self.min_bucket = min_bucket
+        mixes = ({"attn"} if cfg.family == "audio" else
+                 {k.split("+")[0] for k in cfg.layer_kinds()})
+        self.bucketed = (bucket and mixes == {"attn"}
+                         and not cfg.sliding_window
+                         and cfg.family != "vlm")
         self._jits: Dict[Tuple[int, int], Callable] = {}
 
     def _prefill_fn(self, batch_shape: Tuple[int, int]) -> Callable:
@@ -52,14 +80,26 @@ class PrefillEngine:
                 lambda p, b: self.api.prefill(p, b, max_seq=self.max_seq))
         return self._jits[batch_shape]
 
+    @property
+    def jit_cache_size(self) -> int:
+        return len(self._jits)
+
+    def _bucket_of(self, n: int) -> int:
+        return min(max(_next_pow2(n), self.min_bucket), self.max_seq)
+
     def run(self, reqs: List[GenRequest], *, compress: bool = True,
             backend: str = "auto") -> List[Tuple[GenRequest, KVWire, int]]:
-        """Prefill a batch; returns per-request (req, wire, first_token).
-
-        Requests are internally grouped by prompt length so no padding
-        tokens ever enter attention (exact-length batching)."""
+        """Prefill a batch; returns per-request (req, wire, first_token)."""
         if not reqs:
             return []
+        if self.bucketed:
+            return self._run_bucketed(reqs, compress=compress,
+                                      backend=backend)
+        return self._run_exact(reqs, compress=compress, backend=backend)
+
+    def _run_exact(self, reqs, *, compress, backend):
+        """Group by exact prompt length (no padding ever enters attention);
+        one jit entry per unique (batch, length) shape."""
         by_len: Dict[int, List[GenRequest]] = {}
         for r in reqs:
             by_len.setdefault(len(r.tokens), []).append(r)
@@ -72,25 +112,81 @@ class PrefillEngine:
                     [jnp.asarray(r.extras[key]) for r in group])
             logits, cache = self._prefill_fn(toks.shape)(self.params, batch)
             first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            wires = kv_transfer.extract_batch(
+                cache, [(i, L) for i in range(len(group))],
+                compress=compress, backend=backend)
             for i, r in enumerate(group):
-                wire = kv_transfer.extract(cache, i, L, compress=compress,
-                                           backend=backend)
-                out.append((r, wire, int(first[i])))
+                out.append((r, wires[i], int(first[i])))
         return out
+
+    def _run_bucketed(self, reqs, *, compress, backend):
+        """Right-pad prompts to power-of-two buckets and a fixed batch
+        width; the whole bucket's KV is quantized in one kernel launch."""
+        too_long = [r.rid for r in reqs if len(r.tokens) > self.max_seq]
+        if too_long:
+            # fail loudly like the exact-length path does, instead of
+            # silently conditioning on a truncated prompt
+            raise ValueError(
+                f"prompt(s) exceed max_seq={self.max_seq}: rids {too_long}")
+        by_bucket: Dict[int, List[GenRequest]] = {}
+        for r in reqs:
+            by_bucket.setdefault(self._bucket_of(len(r.tokens)), []).append(r)
+        out = []
+        for Lb, group in by_bucket.items():
+            for lo in range(0, len(group), self.max_batch):
+                out.extend(self._run_one_bucket(
+                    group[lo:lo + self.max_batch], Lb,
+                    compress=compress, backend=backend))
+        return out
+
+    def _run_one_bucket(self, group, Lb, *, compress, backend):
+        # pow2 batch width: a lone request doesn't pay a full-width
+        # forward pass, and the jit cache only gains log2(max_batch)
+        # variants per length bucket
+        B = min(_next_pow2(len(group)), self.max_batch)
+        lens = [min(len(r.tokens), Lb) for r in group]
+        toks = np.zeros((B, Lb), np.int32)
+        for i, r in enumerate(group):
+            toks[i, :lens[i]] = r.tokens[:lens[i]]
+        last_pos = np.zeros((B,), np.int32)
+        last_pos[:len(group)] = np.asarray(lens) - 1
+        true_len = np.ones((B,), np.int32)
+        true_len[:len(group)] = lens
+        batch = {"tokens": jnp.asarray(toks),
+                 "last_pos": jnp.asarray(last_pos),
+                 "true_len": jnp.asarray(true_len)}
+        for key in (group[0].extras if group else {}):
+            ex = [np.asarray(r.extras[key]) for r in group]
+            ex += [ex[0]] * (B - len(group))     # dummy rows, discarded
+            batch[key] = jnp.asarray(np.stack(ex))
+        logits, cache = self._prefill_fn((B, Lb))(self.params, batch)
+        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        wires = kv_transfer.extract_batch(
+            cache, [(i, lens[i]) for i in range(len(group))],
+            compress=compress, backend=backend, pad_to=Lb)
+        return [(r, wires[i], int(first[i])) for i, r in enumerate(group)]
 
 
 class DecodeEngine:
-    """Throughput-oriented: continuous batching over a slotted cache."""
+    """Throughput-oriented: continuous batching over a slotted cache.
+
+    ``step()`` advances all slots by up to ``chunk_size`` tokens in ONE
+    jitted device loop (current tokens, done-flags, and the emitted chunk
+    all live on device; see ``registry.make_decode_chunk``), so the host is
+    touched once per chunk. ``step_reference()`` keeps the one-token-per-
+    host-round-trip path for A/B benchmarking and equivalence tests.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
-                 max_seq: int = 512, rt=None, eos_id: int = -1):
+                 max_seq: int = 512, rt=None, eos_id: int = -1,
+                 chunk_size: int = 8):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg, rt=rt)
         self.max_slots = max_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
-        self.cache = self.api.cache_specs  # placeholder; real init below
+        self.chunk_size = chunk_size
         init_fn = (registry.whisper.init_cache if cfg.family == "audio"
                    else registry.transformer.init_cache)
         self.cache = init_fn(cfg, max_slots, max_seq)
@@ -98,6 +194,12 @@ class DecodeEngine:
         self.cur_token = np.zeros((max_slots,), np.int32)
         self._decode = jax.jit(
             lambda p, c, b: self.api.decode(p, c, b))
+        self._chunk = jax.jit(
+            self.api.decode_chunk,
+            static_argnames=("n_steps", "eos_id", "max_seq"))
+        # host-sync accounting (benchmarks read these)
+        self.host_syncs = 0
+        self.steps_run = 0
 
     # -- slot management ----------------------------------------------------
 
@@ -106,17 +208,30 @@ class DecodeEngine:
 
     def admit(self, req: GenRequest, wire: KVWire, first_token: int,
               *, backend: str = "auto") -> bool:
+        rejected = self.admit_batch([(req, wire, first_token)],
+                                    backend=backend)
+        return not rejected
+
+    def admit_batch(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
+                    *, backend: str = "auto"
+                    ) -> List[Tuple[GenRequest, KVWire, int]]:
+        """Admit as many requests as there are free slots (batched KV
+        insert: one dequant kernel launch per packed shape across ALL
+        admitted wires). Returns the rejected tail."""
         free = self.free_slots()
-        if not free:
-            return False
-        i = free[0]
-        self.cache = kv_transfer.insert(self.cache, wire, i, backend=backend)
-        self.slots[i] = req
-        self.cur_token[i] = first_token
-        req.out_tokens.append(first_token)
-        if req.t_first < 0:
-            req.t_first = time.time()
-        return True
+        take = list(items[:len(free)])
+        if take:
+            self.cache = kv_transfer.insert_batch(
+                self.cache, [(wire, slot) for (_, wire, _), slot
+                             in zip(take, free)], backend=backend)
+            now = time.time()
+            for (req, _, first), slot in zip(take, free):
+                self.slots[slot] = req
+                self.cur_token[slot] = first
+                req.out_tokens.append(first)
+                if req.t_first < 0:
+                    req.t_first = now
+        return list(items[len(free):])
 
     @property
     def active(self) -> int:
@@ -124,13 +239,54 @@ class DecodeEngine:
 
     # -- stepping -----------------------------------------------------------
 
-    def step(self) -> List[GenRequest]:
-        """One decode step for all active slots; returns finished requests."""
+    def _host_state(self):
+        active = np.array([s is not None for s in self.slots], bool)
+        n_out = np.array([len(s.out_tokens) if s else 0 for s in self.slots],
+                         np.int32)
+        max_new = np.array([s.max_new_tokens if s else 0 for s in self.slots],
+                           np.int32)
+        return {"cur": jnp.asarray(self.cur_token),
+                "active": jnp.asarray(active),
+                "n_out": jnp.asarray(n_out),
+                "max_new": jnp.asarray(max_new)}
+
+    def step(self, n_steps: Optional[int] = None) -> List[GenRequest]:
+        """Advance all active slots by up to ``chunk_size`` tokens; returns
+        finished requests. ONE host synchronization for the whole chunk."""
+        if self.active == 0:
+            return []
+        n = n_steps or self.chunk_size
+        toks_d, valid_d, self.cache, st = self._chunk(
+            self.params, self.cache, self._host_state(),
+            n_steps=n, eos_id=self.eos_id, max_seq=self.max_seq)
+        # the single device->host hop for this chunk
+        toks, valid, cur, still_active = jax.device_get(
+            (toks_d, valid_d, st["cur"], st["active"]))
+        self.host_syncs += 1
+        self.steps_run += n
+        self.cur_token = np.array(cur)   # writable copy (admit mutates it)
+        finished = []
+        now = time.time()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.out_tokens.extend(int(t) for t in toks[valid[:, i], i])
+            if not still_active[i]:
+                req.t_done = now
+                finished.append(req)
+                self.slots[i] = None
+        return finished
+
+    def step_reference(self) -> List[GenRequest]:
+        """SEED PATH (kept for A/B benchmarks + equivalence tests): one
+        decode step per call, one host sync + Python slot loop per token."""
         if self.active == 0:
             return []
         batch = {"tokens": jnp.asarray(self.cur_token[:, None])}
         logits, self.cache = self._decode(self.params, self.cache, batch)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self.host_syncs += 1
+        self.steps_run += 1
         finished = []
         for i, req in enumerate(self.slots):
             if req is None:

@@ -5,11 +5,19 @@ on the receiver; both phases compute in 16-bit. For SSM/hybrid archs the
 "KV" is the recurrent-state snapshot (beyond-paper generalization, see
 DESIGN.md §Arch-applicability): bounded-size tensors transferred the same
 way (f32 states are sent raw — they are O(1)-sized).
+
+Fast path (DESIGN.md §4): all of a request's layers are stacked into ONE
+``ops.kv_quant`` pallas call (``extract``), and an entire prefill batch can
+be quantized in a single call (``extract_batch``). Payloads stay device
+arrays end to end; ``KVWire.materialize()`` is the single explicit
+device->host synchronization point for deployments where the wire is a real
+network hop. In-process, the decode side consumes device arrays directly and
+no host round-trip ever happens.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,10 +25,22 @@ import numpy as np
 
 from repro.kernels import ops
 
+# Candidate quantization group widths (lane dim of the pallas kernel).
+# 128-wide groups keep the scale/zero overhead at ~3% even for small
+# head_dims; fall back to smaller even groups, then raw.
+_GROUPS = (128, 64, 32, 16, 8, 4, 2)
+# Row-tile size for the quant kernels; the kernel handles ragged tails
+# (ceil-div grid), so one fixed block => one jit variant per flat shape.
+_BLOCK_N = 256
+
 
 @dataclass
 class WireTensor:
-    """Either a quantized (packed, scale, zero, orig_shape) or raw tensor."""
+    """Either a quantized (packed, scale, zero, orig_shape) or raw tensor.
+
+    Payload arrays may be jax device arrays (fast path) or numpy arrays
+    (after ``KVWire.materialize()`` — the explicit wire hop).
+    """
     kind: str                      # "int4" | "raw"
     payload: Dict[str, np.ndarray]
     orig_shape: Tuple[int, ...] = ()
@@ -40,25 +60,52 @@ class KVWire:
         return sum(t.nbytes() for s in self.slots.values()
                    for t in s.values())
 
+    def materialize(self) -> "KVWire":
+        """Pull every payload to the host in ONE device synchronization.
+
+        This is the single point where the wire leaves the device — call it
+        when the transfer crosses a real network boundary; skip it for
+        in-process handoff (the decode side consumes device arrays)."""
+        tensors = [t for s in self.slots.values() for t in s.values()]
+        host = jax.device_get([t.payload for t in tensors])
+        for t, p in zip(tensors, host):
+            t.payload = p
+        return self
+
+
+def _pick_group(n: int) -> int:
+    return next((g for g in _GROUPS if n % g == 0), 0)
+
+
+def _quantize_stacked(xs: Sequence[jnp.ndarray], backend: str,
+                      group: Optional[int] = None) -> List[WireTensor]:
+    """Quantize same-shaped tensors in ONE kernel launch.
+
+    Group boundaries never cross a tensor (each tensor's element count is a
+    multiple of the group width), so the result is bit-identical to
+    quantizing each tensor separately. ``group`` overrides the group width
+    (the padded-extract path needs position-aligned groups)."""
+    shape = tuple(xs[0].shape)
+    n = int(np.prod(shape))
+    g = group if group else _pick_group(n)
+    if n == 0 or g == 0:
+        return [WireTensor("raw", {"x": x}, shape, str(x.dtype)) for x in xs]
+    flat = jnp.concatenate([x.reshape(-1, g) for x in xs], axis=0)
+    packed, scale, zero = ops.kv_quant(flat, backend=backend,
+                                       block_n=_BLOCK_N)
+    rows_per = n // g
+    out = []
+    for t, x in enumerate(xs):
+        sl = slice(t * rows_per, (t + 1) * rows_per)
+        out.append(WireTensor("int4", {"packed": packed[sl],
+                                       "scale": scale[sl],
+                                       "zero": zero[sl]},
+                              shape, str(x.dtype)))
+    return out
+
 
 def _quantize(x: jnp.ndarray, backend: str) -> WireTensor:
-    shape = tuple(x.shape)
-    n = int(np.prod(shape))
-    # 128-wide quantization groups keep the scale/zero overhead at ~3% even
-    # for small head_dims; fall back to smaller even groups, then raw.
-    g = next((gg for gg in (128, 64, 32, 16, 8, 4, 2)
-              if n % gg == 0), 0)
-    if n == 0 or g == 0:
-        return WireTensor("raw", {"x": np.asarray(x)}, shape, str(x.dtype))
-    flat = x.reshape(-1, g)
-    rows = flat.shape[0]
-    block = next(b for b in (256, 128, 64, 32, 16, 8, 4, 2, 1)
-                 if rows % b == 0)
-    packed, scale, zero = ops.kv_quant(flat, backend=backend, block_n=block)
-    return WireTensor("int4", {"packed": np.asarray(packed),
-                               "scale": np.asarray(scale),
-                               "zero": np.asarray(zero)},
-                      shape, str(x.dtype))
+    return _quantize_stacked([x], backend)[0]
 
 
 def _dequantize(w: WireTensor, backend: str) -> jnp.ndarray:
@@ -71,55 +118,202 @@ def _dequantize(w: WireTensor, backend: str) -> jnp.ndarray:
     return out.reshape(w.orig_shape)
 
 
-def extract(cache, batch_index: int, length: int, *, compress: bool = True,
-            backend: str = "auto") -> KVWire:
-    """Pull one request's state out of a prefill cache pytree."""
+def _extract_one(cache, batch_index: int, length: int, compress: bool,
+                 pad_to: Optional[int] = None
+                 ) -> Tuple[Dict[str, Dict[str, WireTensor]],
+                            List[Tuple[str, str, jnp.ndarray, int]]]:
+    """Slice one request out of the cache; return (slots, pending-quant
+    jobs). Jobs are quantized by the caller so they can be batched across
+    requests. When ``pad_to`` is set, attention KV is sliced to the padded
+    length (uniform shapes across a prefill bucket -> one kernel launch for
+    the whole batch); the true length rides along for post-quant trimming."""
     slots: Dict[str, Dict[str, WireTensor]] = {}
+    jobs: List[Tuple[str, str, jnp.ndarray, int]] = []
     for name, slot in cache.items():
         if name == "lengths":
             continue
         out: Dict[str, WireTensor] = {}
         if isinstance(slot, dict) and "k" in slot:        # attention KV
-            ln = min(length, slot["k"].shape[2])
-            k = slot["k"][:, batch_index, :ln]             # (L, len, Hkv, hd)
-            v = slot["v"][:, batch_index, :ln]
-            if compress:
-                out["k"] = _quantize(k, backend)
-                out["v"] = _quantize(v, backend)
-            else:
-                out["k"] = WireTensor("raw", {"x": np.asarray(k)},
-                                      tuple(k.shape))
-                out["v"] = WireTensor("raw", {"x": np.asarray(v)},
-                                      tuple(v.shape))
+            s_cache = slot["k"].shape[2]
+            ln = min(length, s_cache)
+            lp = min(pad_to, s_cache) if pad_to else ln
+            lp = max(lp, ln)
+            for key in ("k", "v"):
+                if compress:
+                    t = slot[key][:, batch_index, :lp]     # (L, lp, Hkv, hd)
+                    jobs.append((name, key, t, ln))
+                else:
+                    t = slot[key][:, batch_index, :ln]     # (L, len, Hkv, hd)
+                    out[key] = WireTensor("raw", {"x": t}, tuple(t.shape),
+                                          str(t.dtype))
         elif isinstance(slot, dict):                       # recurrent states
             for key, arr in slot.items():
                 st = arr[:, batch_index]
-                out[key] = WireTensor("raw", {"x": np.asarray(st)},
+                out[key] = WireTensor("raw", {"x": st},
                                       tuple(st.shape), str(st.dtype))
+        elif getattr(slot, "ndim", 0) >= 4:  # flat decoder KV (whisper):
+            # self_* arrays are per-token KV (trim to the request);
+            # cross_* arrays span the encoder sequence (transfer whole)
+            per_token = name.startswith("self_")
+            s_cache = slot.shape[2]
+            ln = min(length, s_cache) if per_token else s_cache
+            lp = min(pad_to, s_cache) if (pad_to and per_token) else ln
+            lp = max(lp, ln)
+            if compress:
+                jobs.append((name, "x", slot[:, batch_index, :lp], ln))
+            else:
+                t = slot[:, batch_index, :ln]
+                out["x"] = WireTensor("raw", {"x": t}, tuple(t.shape),
+                                      str(t.dtype))
         slots[name] = out
-    return KVWire(request_len=length, slots=slots)
+    return slots, jobs
+
+
+def extract(cache, batch_index: int, length: int, *, compress: bool = True,
+            backend: str = "auto") -> KVWire:
+    """Pull one request's state out of a prefill cache pytree.
+
+    All attention layers are quantized in one kernel launch per distinct
+    tensor shape (usually exactly one); nothing is synced to the host."""
+    return extract_batch(cache, [(batch_index, length)], compress=compress,
+                         backend=backend)[0]
+
+
+def _trim_wire_tensor(wt: WireTensor, ln: int) -> WireTensor:
+    """Cut a padded-length int4 WireTensor down to the request's true
+    length (lazy device slicing — no dequantization, no kernel launch).
+
+    Requires the quantization groups to be position-aligned (group width
+    divides Hkv*hd), which ``extract_batch`` checks before taking the
+    padded path."""
+    if wt.kind != "int4":
+        return wt
+    L, lp, Hkv, hd = wt.orig_shape
+    if ln >= lp:
+        return wt
+    packed = wt.payload["packed"]
+    g2 = packed.shape[1]                      # group//2 packed bytes
+    ppr = (Hkv * hd) // (2 * g2)              # quant rows per position
+    out = {}
+    for key, a in wt.payload.items():
+        out[key] = a.reshape(L, lp, ppr, a.shape[1])[:, :ln].reshape(
+            -1, a.shape[1])
+    return WireTensor("int4", out, (L, ln, Hkv, hd), wt.dtype)
+
+
+def extract_batch(cache, requests: Sequence[Tuple[int, int]], *,
+                  compress: bool = True, backend: str = "auto",
+                  pad_to: Optional[int] = None) -> List[KVWire]:
+    """Extract several (batch_index, length) requests, batching the
+    quantization across requests AND layers: one ``ops.kv_quant`` call per
+    distinct sliced-tensor shape. With ``pad_to`` (bucketed prefill), every
+    request is sliced to the same padded length so the WHOLE batch is one
+    kernel launch; the packed rows are then trimmed to each request's true
+    length without leaving the device."""
+    group = None
+    if pad_to is not None:
+        # padded-path precondition: groups must not straddle positions, so
+        # each request's true-length rows can be sliced out post-quant
+        for name, slot in cache.items():
+            if name == "lengths":
+                continue
+            if isinstance(slot, dict) and "k" in slot:
+                span = int(np.prod(slot["k"].shape[-2:]))
+            elif not isinstance(slot, dict) and getattr(slot, "ndim", 0) >= 4:
+                span = int(np.prod(slot.shape[-2:]))
+            else:
+                continue
+            group = _pick_group(span)
+            if not group:
+                pad_to = None
+                group = None
+            break
+    wires: List[KVWire] = []
+    all_jobs: List[Tuple[int, str, str, jnp.ndarray, int]] = []
+    for ri, (bi, length) in enumerate(requests):
+        slots, jobs = _extract_one(cache, bi, length, compress, pad_to)
+        wires.append(KVWire(request_len=length, slots=slots))
+        all_jobs.extend((ri, name, key, t, ln) for name, key, t, ln in jobs)
+    # group by shape so each group is one kernel launch
+    by_shape: Dict[Tuple[int, ...], List[int]] = {}
+    for j, (_, _, _, t, _) in enumerate(all_jobs):
+        by_shape.setdefault(tuple(t.shape), []).append(j)
+    for idxs in by_shape.values():
+        wts = _quantize_stacked([all_jobs[j][3] for j in idxs], backend,
+                                group=group)
+        for j, wt in zip(idxs, wts):
+            ri, name, key, _, ln = all_jobs[j]
+            wires[ri].slots[name][key] = _trim_wire_tensor(wt, ln)
+    return wires
 
 
 def insert(cache, wire: KVWire, batch_index: int, *, backend: str = "auto"):
     """Insert a transferred request state into a decode cache pytree."""
-    L = wire.request_len
-    for name, slot_wire in wire.slots.items():
-        slot = cache[name]
-        if "k" in slot_wire:
-            k = _dequantize(slot_wire["k"], backend)
-            v = _dequantize(slot_wire["v"], backend)
-            s_cache = slot["k"].shape[2]
-            upd = min(L, s_cache)
-            cache[name]["k"] = slot["k"].at[:, batch_index, :upd].set(
-                k[:, -upd:].astype(slot["k"].dtype))
-            cache[name]["v"] = slot["v"].at[:, batch_index, :upd].set(
-                v[:, -upd:].astype(slot["v"].dtype))
-        else:
+    return insert_batch(cache, [(wire, batch_index)], backend=backend)
+
+
+def insert_batch(cache, items: Sequence[Tuple[KVWire, int]], *,
+                 backend: str = "auto"):
+    """Insert several (wire, slot_index) pairs, batching dequantization:
+    one ``ops.kv_dequant`` call per distinct packed shape across all wires
+    and layers."""
+    # 1. collect + batch-dequantize all int4 tensors
+    jobs: List[Tuple[int, str, str, WireTensor]] = []
+    for wi, (wire, _) in enumerate(items):
+        for name, slot_wire in wire.slots.items():
             for key, wt in slot_wire.items():
-                st = _dequantize(wt, backend)
-                cache[name][key] = slot[key].at[:, batch_index].set(
-                    st.astype(slot[key].dtype))
-    cache["lengths"] = cache["lengths"].at[batch_index].set(L)
+                if wt.kind == "int4":
+                    jobs.append((wi, name, key, wt))
+    deq: Dict[Tuple[int, str, str], jnp.ndarray] = {}
+    by_shape: Dict[Tuple[Tuple[int, ...], Tuple[int, ...]], List[int]] = {}
+    for j, (_, _, _, wt) in enumerate(jobs):
+        k = (tuple(wt.payload["packed"].shape), tuple(wt.orig_shape))
+        by_shape.setdefault(k, []).append(j)
+    for (pshape, oshape), idxs in by_shape.items():
+        packed = jnp.concatenate(
+            [jnp.asarray(jobs[j][3].payload["packed"]) for j in idxs], axis=0)
+        scale = jnp.concatenate(
+            [jnp.asarray(jobs[j][3].payload["scale"]) for j in idxs], axis=0)
+        zero = jnp.concatenate(
+            [jnp.asarray(jobs[j][3].payload["zero"]) for j in idxs], axis=0)
+        out = ops.kv_dequant(packed, scale, zero, backend=backend)
+        rows = pshape[0]
+        for t, j in enumerate(idxs):
+            wi, name, key, wt = jobs[j]
+            deq[(wi, name, key)] = out[t * rows:(t + 1) * rows].reshape(oshape)
+
+    # 2. scatter into the cache (lazy device ops; no host sync)
+    for wi, (wire, batch_index) in enumerate(items):
+        L = wire.request_len
+        for name, slot_wire in wire.slots.items():
+            slot = cache[name]
+            if "k" in slot_wire:
+                k = deq.get((wi, name, "k"))
+                if k is None:
+                    k = _dequantize(slot_wire["k"], backend)
+                v = deq.get((wi, name, "v"))
+                if v is None:
+                    v = _dequantize(slot_wire["v"], backend)
+                s_cache = slot["k"].shape[2]
+                upd = min(L, s_cache)
+                cache[name]["k"] = slot["k"].at[:, batch_index, :upd].set(
+                    k[:, -upd:].astype(slot["k"].dtype))
+                cache[name]["v"] = slot["v"].at[:, batch_index, :upd].set(
+                    v[:, -upd:].astype(slot["v"].dtype))
+            elif "x" in slot_wire and not isinstance(slot, dict):
+                # flat decoder KV (whisper); cross_* carries its own length
+                t = deq.get((wi, name, "x"))
+                if t is None:
+                    t = _dequantize(slot_wire["x"], backend)
+                upd = min(t.shape[1], slot.shape[2])
+                cache[name] = slot.at[:, batch_index, :upd].set(
+                    t[:, -upd:].astype(slot.dtype))
+            else:
+                for key, wt in slot_wire.items():
+                    st = _dequantize(wt, backend)
+                    cache[name][key] = slot[key].at[:, batch_index].set(
+                        st.astype(slot[key].dtype))
+        cache["lengths"] = cache["lengths"].at[batch_index].set(L)
     return cache
 
 

@@ -1,0 +1,296 @@
+"""Device-resident decode loop + batched KV wire fast path.
+
+Covers: token-identical output of the chunked device loop vs the per-step
+reference, steps-per-host-sync accounting, bucketed prefill equivalence and
+bounded jit cache, quantize->dequantize roundtrips across backends/dtypes,
+batched insert equivalence, wire dtype preservation, and the coordinator's
+all-decode-replicas-dead guard."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build, transformer
+from repro.serving import kv_transfer
+from repro.serving.coordinator import Coordinator
+from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+
+KEY = jax.random.PRNGKey(0)
+LENS = [8, 12, 17, 24, 9, 31]
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(KEY)
+    return cfg, api, params
+
+
+def _reqs(cfg, lens=LENS, max_new=12):
+    rng = np.random.default_rng(0)
+    return [GenRequest(i, rng.integers(1, cfg.vocab_size,
+                                       int(l)).astype(np.int32),
+                       max_new_tokens=max_new)
+            for i, l in enumerate(lens)]
+
+
+# -- device loop vs per-step reference --------------------------------------
+
+
+def test_device_loop_token_identical(small_model):
+    """The jitted multi-token scan must reproduce the seed per-step path
+    token for token (same wires in, same tokens out)."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64, bucket=False)
+    res_a = pre.run(_reqs(cfg), backend="ref")
+    res_b = pre.run(_reqs(cfg), backend="ref")
+    chunked = DecodeEngine(cfg, params, max_slots=len(LENS), max_seq=64,
+                           chunk_size=8)
+    ref = DecodeEngine(cfg, params, max_slots=len(LENS), max_seq=64)
+    for r, w, f in res_a:
+        assert chunked.admit(r, w, f, backend="ref")
+    for r, w, f in res_b:
+        assert ref.admit(r, w, f, backend="ref")
+    done_c, done_r = [], []
+    while chunked.active:
+        done_c += chunked.step()
+    while ref.active:
+        done_r += ref.step_reference()
+    toks_c = {r.rid: r.out_tokens for r in done_c}
+    toks_r = {r.rid: r.out_tokens for r in done_r}
+    assert toks_c == toks_r
+    assert all(len(t) == 12 for t in toks_c.values())
+
+
+def test_steps_per_host_sync(small_model):
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    eng = DecodeEngine(cfg, params, max_slots=len(LENS), max_seq=64,
+                       chunk_size=8)
+    for r, w, f in pre.run(_reqs(cfg, max_new=16), backend="ref"):
+        eng.admit(r, w, f, backend="ref")
+    while eng.active:
+        eng.step()
+    assert eng.steps_run / eng.host_syncs >= 8
+
+
+def test_chunk_respects_max_new_and_eos(small_model):
+    """Done-flags live on device: max_new_tokens is never overshot even
+    when the chunk is longer than the remaining budget."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    eng = DecodeEngine(cfg, params, max_slots=4, max_seq=64, chunk_size=16)
+    reqs = _reqs(cfg, lens=[8, 12], max_new=3)
+    for r, w, f in pre.run(reqs, backend="ref"):
+        eng.admit(r, w, f, backend="ref")
+    done = []
+    while eng.active:
+        done += eng.step()
+    assert sorted(len(r.out_tokens) for r in done) == [3, 3]
+
+
+# -- bucketed prefill -------------------------------------------------------
+
+
+def test_bucketed_prefill_matches_exact(small_model):
+    """Right-padded power-of-two buckets must produce the same first token
+    and the same (raw) KV as exact-length prefill — causal attention makes
+    the padding invisible."""
+    cfg, api, params = small_model
+    pre_b = PrefillEngine(cfg, params, max_seq=64, bucket=True)
+    pre_e = PrefillEngine(cfg, params, max_seq=64, bucket=False)
+    res_b = {r.rid: (w, f) for r, w, f in
+             pre_b.run(_reqs(cfg), compress=False, backend="ref")}
+    res_e = {r.rid: (w, f) for r, w, f in
+             pre_e.run(_reqs(cfg), compress=False, backend="ref")}
+    for rid, (w_b, f_b) in res_b.items():
+        w_e, f_e = res_e[rid]
+        assert f_b == f_e
+        assert w_b.request_len == w_e.request_len
+        for name in w_b.slots:
+            for key, t_b in w_b.slots[name].items():
+                t_e = w_e.slots[name][key]
+                assert t_b.dtype == t_e.dtype
+                np.testing.assert_array_equal(
+                    np.asarray(t_b.payload["x"], np.float32),
+                    np.asarray(t_e.payload["x"], np.float32))
+
+
+def test_bucketed_prefill_jit_cache_bounded(small_model):
+    """One compile per power-of-two bucket: the jit cache stays <=
+    log2(max_seq) no matter how many distinct prompt lengths arrive."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    assert pre.bucketed
+    for lens in ([3, 5, 7], [11, 13], [19, 23, 29], [37, 41], [53, 61]):
+        pre.run(_reqs(cfg, lens=lens), backend="ref")
+    assert pre.jit_cache_size <= int(math.log2(64))
+
+
+def test_bucketed_prefill_disabled_for_recurrent():
+    """Recurrent-state archs must keep exact-length prefill: padded junk
+    tokens would pollute the state snapshot."""
+    cfg = get_reduced("xlstm-125m")
+    params = build(cfg).init(KEY)
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    assert not pre.bucketed
+    out = pre.run(_reqs(cfg, lens=[8, 8]), backend="ref")
+    assert len(out) == 2
+
+
+# -- KV wire ----------------------------------------------------------------
+
+
+def _toy_cache(dtype, L=2, B=3, S=32, Hkv=4, hd=16, key=KEY):
+    k1, k2 = jax.random.split(key)
+    return {
+        "slot0": {"k": jax.random.normal(k1, (L, B, S, Hkv, hd), dtype),
+                  "v": jax.random.normal(k2, (L, B, S, Hkv, hd), dtype)},
+        "lengths": jnp.full((B,), S, jnp.int32),
+    }
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_kv_roundtrip_backends_dtypes(backend, dtype):
+    cache = _toy_cache(dtype)
+    wire = kv_transfer.extract(cache, 1, 24, compress=True, backend=backend)
+    dec = _toy_cache(dtype, key=jax.random.PRNGKey(9))
+    dec = kv_transfer.insert(dec, wire, 0, backend=backend)
+    src = np.asarray(cache["slot0"]["k"][:, 1, :24], np.float32)
+    dst = np.asarray(dec["slot0"]["k"][:, 0, :24], np.float32)
+    rng = np.abs(src).max()
+    assert np.abs(src - dst).max() <= rng / 15 * 1.1 + 1e-3
+    assert int(dec["lengths"][0]) == 24
+    assert wire.slots["slot0"]["k"].dtype == str(jnp.dtype(dtype))
+
+
+def test_raw_wire_preserves_dtype():
+    """Satellite fix: the raw (compress=False) path used to hard-code
+    bfloat16 regardless of the source tensor."""
+    for dtype, want in ((jnp.float32, "float32"), (jnp.bfloat16, "bfloat16")):
+        cache = _toy_cache(dtype)
+        wire = kv_transfer.extract(cache, 0, 16, compress=False)
+        for key in ("k", "v"):
+            assert wire.slots["slot0"][key].kind == "raw"
+            assert wire.slots["slot0"][key].dtype == want
+
+
+def test_insert_batch_matches_sequential():
+    cache = _toy_cache(jnp.bfloat16)
+    wires = kv_transfer.extract_batch(cache, [(0, 16), (2, 24)],
+                                      backend="ref")
+    seq = _toy_cache(jnp.bfloat16, key=jax.random.PRNGKey(1))
+    seq = kv_transfer.insert(seq, wires[0], 1, backend="ref")
+    seq = kv_transfer.insert(seq, wires[1], 2, backend="ref")
+    bat = _toy_cache(jnp.bfloat16, key=jax.random.PRNGKey(1))
+    bat = kv_transfer.insert_batch(bat, [(wires[0], 1), (wires[1], 2)],
+                                   backend="ref")
+    for key in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(seq["slot0"][key], np.float32),
+            np.asarray(bat["slot0"][key], np.float32))
+    np.testing.assert_array_equal(np.asarray(seq["lengths"]),
+                                  np.asarray(bat["lengths"]))
+
+
+def test_wire_materialize_single_host_hop():
+    cache = _toy_cache(jnp.bfloat16)
+    wire = kv_transfer.extract(cache, 0, 16, backend="ref")
+    n0 = wire.nbytes()
+    assert any(isinstance(t.payload[k], jax.Array)
+               for s in wire.slots.values() for t in s.values()
+               for k in t.payload)
+    wire.materialize()
+    for s in wire.slots.values():
+        for t in s.values():
+            for a in t.payload.values():
+                assert isinstance(a, np.ndarray)
+    assert wire.nbytes() == n0
+
+
+def test_padded_extract_matches_exact_quantization():
+    """extract_batch(pad_to=...) trims packed rows to the true length; the
+    result must dequantize identically to an exact-length extract with the
+    same group width."""
+    cache = _toy_cache(jnp.bfloat16)
+    padded, = kv_transfer.extract_batch(cache, [(1, 17)], backend="ref",
+                                        pad_to=32)
+    dec_a = _toy_cache(jnp.bfloat16, key=jax.random.PRNGKey(3))
+    dec_a = kv_transfer.insert(dec_a, padded, 0, backend="ref")
+    assert padded.slots["slot0"]["k"].orig_shape[1] == 17
+    src = np.asarray(cache["slot0"]["k"][:, 1, :17], np.float32)
+    dst = np.asarray(dec_a["slot0"]["k"][:, 0, :17], np.float32)
+    rng = np.abs(src).max()
+    assert np.abs(src - dst).max() <= rng / 15 * 1.1 + 1e-3
+
+
+def test_bucketed_prefill_rejects_overlong_prompt(small_model):
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=32)
+    with pytest.raises(ValueError, match="max_seq"):
+        pre.run(_reqs(cfg, lens=[40]), backend="ref")
+
+
+def test_whisper_kv_transfer_roundtrip():
+    """Encoder-decoder caches are flat arrays: self_* KV must transfer
+    trimmed to the request, cross_* KV whole."""
+    from repro.models import whisper
+
+    cfg = get_reduced("whisper-base")
+    api = build(cfg)
+    params = api.init(KEY)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 12)), jnp.int32)
+    frames = jnp.asarray(rng.standard_normal(
+        (2, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
+    _, cache = api.prefill(params, {"tokens": tokens, "frame_embeds": frames},
+                           max_seq=32)
+    wire = kv_transfer.extract(cache, 1, 12, compress=True, backend="ref")
+    assert wire.nbytes() > 0
+    dec = whisper.init_cache(cfg, 3, 32)
+    dec = kv_transfer.insert(dec, wire, 0, backend="ref")
+    for name, ln in (("self_k", 12), ("cross_k", cfg.encoder_seq)):
+        src = np.asarray(cache[name][:, 1, :ln], np.float32)
+        dst = np.asarray(dec[name][:, 0, :ln], np.float32)
+        rng_ = np.abs(src).max()
+        assert np.abs(src - dst).max() <= rng_ / 15 * 1.1 + 1e-3, name
+    assert int(dec["lengths"][0]) == 12
+
+
+# -- coordinator guard ------------------------------------------------------
+
+
+def test_all_decode_dead_surfaces_event(small_model):
+    cfg, api, params = small_model
+    coord = Coordinator([PrefillEngine(cfg, params, max_seq=64)],
+                        [DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
+                        backend="ref")
+    for r in _reqs(cfg, lens=[8, 8], max_new=4):
+        coord.submit(r)
+    coord.kill_replica("decode", 0)
+    coord.pump()
+    coord.pump()
+    outage = [e for e in coord.events if "all decode replicas dead" in e]
+    assert len(outage) == 1          # surfaced once, not spammed
+    assert coord.transfer_queue      # wires wait instead of spinning
+
+
+def test_coordinator_drains_all_prefill_replicas(small_model):
+    cfg, api, params = small_model
+    pres = [PrefillEngine(cfg, params, max_seq=64) for _ in range(2)]
+    decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=64)
+            for _ in range(2)]
+    coord = Coordinator(pres, decs, backend="ref")
+    for r in _reqs(cfg, lens=[8] * 8, max_new=4):
+        coord.submit(r)
+    coord.pump()
+    # with 8 queued and max_prefill_batch=4, one pump must feed BOTH
+    # replicas (the seed path fed one random replica per pump)
+    assert not coord.queue
+    done = coord.run_until_drained(max_iters=200)
+    assert len(done) == 8
