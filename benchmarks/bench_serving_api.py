@@ -1,0 +1,136 @@
+"""Serving API v2 benchmark: open-loop request lifecycle through the
+gateway, TTFT/TPOT/goodput (deadline attainment) percentiles per
+transport.
+
+Three scenarios on the REAL reduced-config engines (same engines, warm
+jit caches, identical Poisson trace):
+
+* ``inproc``    — InProcessTransport: device arrays flow straight through.
+* ``sim``       — SimNetworkTransport: every prefill->decode KV hop pays
+                  an alpha-beta network cost (full-model wire bytes over a
+                  shared-ethernet-class link) plus the explicit
+                  ``KVWire.materialize()`` host sync. TTFT must come out
+                  measurably higher than in-process.
+* ``sim_tight`` — same network, but a TTFT deadline tight enough that
+                  queued requests get shed: exercises deadline admission
+                  control and drops goodput below 1.0.
+
+Emits ``BENCH_serving_api.json`` so every PR tracks the serving-API
+latency trajectory.
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import row
+
+BENCH_JSON = Path("BENCH_serving_api.json")
+
+# shared-ethernet-class link; the reduced engine computes but the wire
+# hop pays roughly the FULL llama-30b KV size (bytes_scale)
+SIM_ALPHA = 5e-3
+SIM_BW = 0.6e9
+SIM_BYTES_SCALE = 400.0
+
+
+def _trace(cfg, n_req, rate, max_new, *, ttft_deadline, e2e_deadline,
+           seed=0):
+    from repro.serving.gateway import ServeRequest
+
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0.0
+    for rid in range(n_req):
+        t += rng.exponential(1.0 / rate)
+        n_in = int(rng.choice([16, 24, 32]))
+        arrivals.append((t, ServeRequest(
+            rid, rng.integers(1, cfg.vocab_size, n_in).astype(np.int32),
+            max_new_tokens=max_new,
+            ttft_deadline_s=ttft_deadline, e2e_deadline_s=e2e_deadline)))
+    return arrivals
+
+
+def run(quick: bool = False):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build
+    from repro.serving.engine import DecodeEngine, PrefillEngine
+    from repro.serving.gateway import (Gateway, drive_open_loop,
+                                       summarize_handles, warmup_engines)
+    from repro.serving.transport import (InProcessTransport,
+                                         SimNetworkTransport)
+
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    n_req = 10 if quick else 20
+    rate = 4.0
+    max_new = 8 if quick else 16
+    prefill = PrefillEngine(cfg, params, max_seq=128)
+    decodes = [DecodeEngine(cfg, params, max_slots=4, max_seq=128)
+               for _ in range(2)]
+    warmup_engines([prefill], decodes, cfg.vocab_size, backend="ref",
+                   prompt_lens=(16, 24, 32))
+
+    def sim_transport():
+        return SimNetworkTransport(alpha=SIM_ALPHA, bandwidth=SIM_BW,
+                                   bytes_scale=SIM_BYTES_SCALE)
+
+    scenarios = {
+        "inproc": (InProcessTransport, float("inf")),
+        "sim": (sim_transport, float("inf")),
+        "sim_tight": (sim_transport, 0.008),   # tighter than one sim hop
+    }
+    report = {"model": cfg.name, "n_requests": n_req, "rate": rate,
+              "max_new_tokens": max_new,
+              "sim_link": {"alpha_s": SIM_ALPHA, "bandwidth_Bps": SIM_BW,
+                           "bytes_scale": SIM_BYTES_SCALE},
+              "scenarios": {}}
+    rows = []
+    for name, (make_transport, ttft_dl) in scenarios.items():
+        transport = make_transport()
+        gw = Gateway([prefill], decodes, transport=transport, backend="ref")
+        arrivals = _trace(cfg, n_req, rate, max_new,
+                          ttft_deadline=ttft_dl, e2e_deadline=30.0)
+        t0 = time.time()
+        handles = drive_open_loop(gw, arrivals)
+        wall = time.time() - t0
+        s = summarize_handles(handles)
+        s["wall_s"] = wall
+        s["ttft_deadline_s"] = ttft_dl
+        if isinstance(transport, SimNetworkTransport):
+            s["net_transfers"] = transport.transfers
+            s["net_bytes"] = transport.bytes_sent
+            s["net_mean_hop_s"] = transport.mean_delay_s
+        report["scenarios"][name] = s
+        rows.append(row(
+            f"serving_api_{name}", s["ttft_p50_s"] * 1e6,
+            f"ttft_p50_ms={s['ttft_p50_s']*1e3:.1f};"
+            f"ttft_p99_ms={s['ttft_p99_s']*1e3:.1f};"
+            f"tpot_p50_ms={s['tpot_p50_s']*1e3:.2f};"
+            f"e2e_p99_ms={s['e2e_p99_s']*1e3:.1f};"
+            f"goodput={s['goodput']:.2f};"
+            f"done={s['n_done']}/{s['n_submitted']};"
+            f"states={'|'.join(f'{k}:{v}' for k, v in s['states'].items())}"))
+    inflation = (report["scenarios"]["sim"]["ttft_p50_s"]
+                 / max(report["scenarios"]["inproc"]["ttft_p50_s"], 1e-9))
+    report["sim_ttft_inflation_p50"] = inflation
+    BENCH_JSON.write_text(json.dumps(report, indent=2))
+    rows.append(row(
+        "serving_api_sim_ttft_inflation", inflation,
+        f"sim_over_inproc_ttft_p50={inflation:.2f}x;"
+        f"mean_hop_ms={report['scenarios']['sim']['net_mean_hop_s']*1e3:.1f};"
+        f"json={BENCH_JSON}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

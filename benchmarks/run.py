@@ -22,12 +22,15 @@ def main() -> None:
     from benchmarks import (bench_case_study, bench_kernels,
                             bench_kv_compression, bench_network_effect,
                             bench_ratio_sweep, bench_rescheduling,
-                            bench_scheduling_time, bench_simulator_accuracy,
-                            bench_slo_attainment, bench_throughput)
+                            bench_scheduling_time, bench_serving_api,
+                            bench_simulator_accuracy, bench_slo_attainment,
+                            bench_throughput)
 
     suites = {
         "slo": (bench_slo_attainment, "Fig 7-8 SLO attainment"),
         "throughput": (bench_throughput, "Fig 9 throughput"),
+        "serving_api": (bench_serving_api,
+                        "gateway lifecycle TTFT/TPOT/goodput per transport"),
         "sched_time": (bench_scheduling_time, "Fig 10 scheduling time"),
         "resched": (bench_rescheduling, "Fig 11/Table 4 rescheduling"),
         "kvcomp": (bench_kv_compression, "Fig 12/18, Tables 2/8 KV comp"),

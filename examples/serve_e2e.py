@@ -1,11 +1,14 @@
-"""End-to-end phase-split serving driver (the paper's kind of system).
+"""End-to-end phase-split serving through the v2 gateway API.
 
 Runs REAL model computation on CPU: a prefill engine and two decode engines
 (reduced-config LLaMA-30B family), int4-quantized KV transfer between them,
-continuous batching on decode, TSTP-style routing in the coordinator.
-Reports per-request TTFT / TPOT / E2E and tokens/s.
+continuous batching on decode — driven OPEN-LOOP: requests are submitted at
+Poisson arrival times against the wall clock, tokens stream back through
+``RequestHandle`` callbacks while later requests are still arriving, and
+per-request TTFT / TPOT / E2E deadlines are accounted.
 
-  PYTHONPATH=src python examples/serve_e2e.py [--requests 12] [--no-compress]
+  PYTHONPATH=src python examples/serve_e2e.py [--requests 12] [--rate 3] \\
+      [--transport sim] [--no-compress]
 """
 import argparse
 import sys
@@ -18,16 +21,27 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import build
-from repro.serving.coordinator import Coordinator
-from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.gateway import (DONE, Gateway, ServeRequest,
+                                   drive_open_loop, summarize_handles,
+                                   warmup_engines)
+from repro.serving.transport import InProcessTransport, SimNetworkTransport
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--arch", default="llama-30b")
+    ap.add_argument("--rate", type=float, default=3.0,
+                    help="Poisson arrival rate (req/s)")
     ap.add_argument("--no-compress", action="store_true")
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--transport", choices=("inproc", "sim"),
+                    default="inproc")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="per-request TTFT deadline in s (0 = none)")
+    ap.add_argument("--e2e-slo", type=float, default=0.0,
+                    help="per-request E2E deadline in s (0 = none)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -39,38 +53,76 @@ def main():
     prefill = PrefillEngine(cfg, params, max_seq=128)
     decodes = [DecodeEngine(cfg, params, max_slots=4, max_seq=128)
                for _ in range(2)]
-    coord = Coordinator([prefill], decodes,
-                        compress=not args.no_compress, backend="ref")
+    if args.transport == "sim":
+        # shared-ethernet-class link, full-model wire bytes (the reduced
+        # engine computes, the FULL model's KV crosses the network)
+        transport = SimNetworkTransport(alpha=5e-3, bandwidth=0.6e9,
+                                        bytes_scale=400.0)
+    else:
+        transport = InProcessTransport()
+    gw = Gateway([prefill], decodes, transport=transport,
+                 compress=not args.no_compress, backend="ref")
 
+    print("warming up jit caches...")
+    warmup_engines([prefill], decodes, cfg.vocab_size,
+                   compress=not args.no_compress, backend="ref",
+                   prompt_lens=(16, 24, 32))
+
+    # open-loop Poisson trace
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    arrivals = []
+    t = 0.0
     for rid in range(args.requests):
+        t += rng.exponential(1.0 / args.rate)
         n_in = int(rng.choice([16, 24, 32]))
-        req = GenRequest(rid, rng.integers(
-            1, cfg.vocab_size, size=n_in).astype(np.int32),
-            max_new_tokens=args.max_new)
-        coord.submit(req)
-    done = coord.run_until_drained()
+        arrivals.append((t, ServeRequest(
+            rid, rng.integers(1, cfg.vocab_size, n_in).astype(np.int32),
+            max_new_tokens=args.max_new,
+            ttft_deadline_s=args.ttft_slo or float("inf"),
+            e2e_deadline_s=args.e2e_slo or float("inf"))))
+
+    t0 = time.time()
+    first_seen = {}
+
+    def on_token(h, tok):
+        if h.request.rid not in first_seen:
+            first_seen[h.request.rid] = time.time() - t0
+            if len(first_seen) <= 4:
+                print(f"  rid {h.request.rid}: first token streamed at "
+                      f"+{first_seen[h.request.rid]*1e3:.0f}ms "
+                      f"({h.state}, {len(gw.queue)} queued behind it)")
+
+    print(f"serving {args.requests} requests open-loop at "
+          f"{args.rate:.1f} req/s ({args.transport} transport)...")
+    handles = drive_open_loop(gw, arrivals, on_token=on_token)
     wall = time.time() - t0
 
-    ttft = [r.t_first - r.t_submit for r in done]
-    e2e = [r.t_done - r.t_submit for r in done]
-    tpot = [(r.t_done - r.t_first) / max(len(r.out_tokens) - 1, 1)
-            for r in done]
-    toks = sum(len(r.out_tokens) for r in done)
-    print(f"\nfinished {len(done)}/{args.requests} requests in {wall:.2f}s "
-          f"({toks/wall:.1f} tok/s)")
-    print(f"TTFT  p50={np.percentile(ttft,50)*1e3:.0f}ms "
-          f"p99={np.percentile(ttft,99)*1e3:.0f}ms")
-    print(f"TPOT  p50={np.percentile(tpot,50)*1e3:.0f}ms")
-    print(f"E2E   p50={np.percentile(e2e,50)*1e3:.0f}ms "
-          f"p99={np.percentile(e2e,99)*1e3:.0f}ms")
+    s = summarize_handles(handles)
+    print(f"\nstates: {s['states']}  "
+          f"({s['n_done']}/{s['n_submitted']} done, "
+          f"{s['tokens']} tokens in {wall:.2f}s = "
+          f"{s['tokens']/wall:.1f} tok/s)")
+    print(f"TTFT  p50={s['ttft_p50_s']*1e3:.0f}ms "
+          f"p99={s['ttft_p99_s']*1e3:.0f}ms")
+    print(f"TPOT  p50={s['tpot_p50_s']*1e3:.0f}ms")
+    print(f"E2E   p50={s['e2e_p50_s']*1e3:.0f}ms "
+          f"p99={s['e2e_p99_s']*1e3:.0f}ms")
+    print(f"goodput (deadline attainment): {s['goodput']*100:.0f}%")
     kv = "int4" if not args.no_compress else "raw bf16"
     print(f"KV transfer wire format: {kv}")
+    if isinstance(transport, SimNetworkTransport):
+        print(f"sim network: {transport.transfers} transfers, "
+              f"{transport.bytes_sent/1e6:.1f}MB, "
+              f"mean hop {transport.mean_delay_s*1e3:.1f}ms")
     syncs = sum(d.host_syncs for d in decodes)
     steps = sum(d.steps_run for d in decodes)
     print(f"decode host syncs: {syncs} for {steps} device steps "
           f"({steps / max(syncs, 1):.1f} steps/sync)")
+    if gw.events:
+        print("events:", gw.events[:5])
+    n_done = s["states"].get(DONE, 0)
+    if n_done < args.requests:
+        print(f"WARNING: only {n_done}/{args.requests} requests finished")
 
 
 if __name__ == "__main__":

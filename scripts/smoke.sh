@@ -1,5 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 smoke: the repo's canonical test command (see ROADMAP.md).
+# Tier-1 smoke: the repo's canonical test command (see ROADMAP.md), plus —
+# when SMOKE_E2E=1 — the open-loop streaming example and the serving-API
+# goodput bench (both under a timeout), so the request-lifecycle path is
+# exercised end to end on every PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
+    echo "== open-loop streaming serve_e2e =="
+    timeout 600 python examples/serve_e2e.py \
+        --requests 6 --rate 2 --max-new 6
+    echo "== serving_api bench (goodput per transport) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m benchmarks.run --suite serving_api --quick
+    test -s BENCH_serving_api.json
+fi

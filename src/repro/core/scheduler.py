@@ -39,7 +39,6 @@ class DeploymentPlan:
     def describe(self) -> str:
         lines = []
         for r in self.replicas:
-            types: Dict[str, int] = {}
             lines.append(f"  {r.phase:8s} {r.pc.describe():12s} "
                          f"devices={list(r.devices)}")
         lines.append(f"  score={self.score:.4f} "

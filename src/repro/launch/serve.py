@@ -1,12 +1,17 @@
 """Production serving launcher: ClusterSpec -> schedule -> engines ->
-coordinator -> serve a request stream (the paper's overall routine, §4 ①-④).
+gateway -> serve an OPEN-LOOP request stream (the paper's overall routine,
+§4 ①-④, driven the way a real service is driven: requests arrive over
+time, tokens stream back under TTFT/TPOT deadlines).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama-30b \\
       --cluster paper_cloud --workload conversation --rate 2 --duration 20
 
 On this CPU container the engines run the reduced config of the chosen arch
 (real computation); the deployment plan itself is computed for the FULL
-model on the requested cluster — the same split the paper deploys.
+model on the requested cluster — the same split the paper deploys. With
+``--transport sim`` the prefill->decode KV hop pays the FULL model's wire
+bytes over the plan's actual inter-replica links (alpha-beta model from
+the cluster's bandwidth matrix).
 """
 from __future__ import annotations
 
@@ -22,8 +27,10 @@ from repro.core.cluster import make_cluster
 from repro.core.orchestrator import SloSpec
 from repro.core.workload import WORKLOADS, generate
 from repro.models import build
-from repro.serving.coordinator import Coordinator
-from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.engine import DecodeEngine, PrefillEngine
+from repro.serving.gateway import (Gateway, ServeRequest, drive_open_loop,
+                                   summarize_handles, warmup_engines)
+from repro.serving.transport import InProcessTransport, SimNetworkTransport
 
 
 def main():
@@ -38,6 +45,15 @@ def main():
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--no-compress", action="store_true")
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--transport", choices=("inproc", "sim"),
+                    default="inproc")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="multiply trace arrival times (e.g. 0.5 = 2x "
+                         "faster arrivals)")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="per-request TTFT deadline in s (0 = none); "
+                         "queued requests that provably miss it are shed")
+    ap.add_argument("--e2e-slo", type=float, default=0.0)
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -61,30 +77,55 @@ def main():
             for _ in range(min(n_pre, 4))]
     decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=96)
             for _ in range(min(n_dec, 4))]
-    coord = Coordinator(pres, decs, orchestration=plan.orchestration,
-                        compress=not args.no_compress, backend="ref")
+    if args.transport == "sim":
+        # the reduced engine computes, but the wire hop pays the FULL
+        # model's KV bytes over the plan's inter-replica links
+        scale = ((cfg_full.num_layers * cfg_full.d_model)
+                 / (cfg.num_layers * cfg.d_model))
+        transport = SimNetworkTransport.from_plan(cluster, plan,
+                                                  bytes_scale=scale)
+    else:
+        transport = InProcessTransport()
+    gw = Gateway(pres, decs, transport=transport,
+                 orchestration=plan.orchestration,
+                 compress=not args.no_compress, backend="ref")
 
-    print("[3/4] serving the request stream...")
+    print("[3/4] serving the request stream (open loop, "
+          f"{args.transport} transport)...")
+    warmup_engines(pres, decs, cfg.vocab_size,
+                   compress=not args.no_compress, backend="ref",
+                   prompt_lens=(16, 32, 48))
     trace = generate(wl, rate=args.rate, duration=args.duration, seed=0)
     rng = np.random.default_rng(0)
-    t0 = time.time()
+    arrivals = []
     for r in trace:
-        coord.submit(GenRequest(
+        arrivals.append((r.t_arrive, ServeRequest(
             r.rid, rng.integers(1, cfg.vocab_size,
                                 min(r.n_in // 32 + 8, 48)).astype(np.int32),
-            max_new_tokens=min(args.max_new, max(r.n_out // 16, 2))))
-    done = coord.run_until_drained()
+            max_new_tokens=min(args.max_new, max(r.n_out // 16, 2)),
+            ttft_deadline_s=args.ttft_slo or float("inf"),
+            e2e_deadline_s=args.e2e_slo or float("inf"))))
+    t0 = time.time()
+    handles = drive_open_loop(gw, arrivals, time_scale=args.time_scale)
     wall = time.time() - t0
 
     print("[4/4] results")
-    toks = sum(len(r.out_tokens) for r in done)
-    e2e = [r.t_done - r.t_submit for r in done]
-    print(f"  {len(done)} requests, {toks} tokens in {wall:.1f}s "
-          f"({toks/wall:.1f} tok/s)")
-    print(f"  E2E p50={np.percentile(e2e, 50)*1e3:.0f}ms "
-          f"p99={np.percentile(e2e, 99)*1e3:.0f}ms")
-    if coord.events:
-        print("  events:", coord.events[:5])
+    s = summarize_handles(handles)
+    print(f"  {s['n_done']}/{s['n_submitted']} requests done "
+          f"(states {s['states']}), {s['tokens']} tokens in {wall:.1f}s "
+          f"({s['tokens']/max(wall, 1e-9):.1f} tok/s)")
+    print(f"  TTFT p50={s['ttft_p50_s']*1e3:.0f}ms "
+          f"p99={s['ttft_p99_s']*1e3:.0f}ms  "
+          f"TPOT p50={s['tpot_p50_s']*1e3:.0f}ms")
+    print(f"  E2E  p50={s['e2e_p50_s']*1e3:.0f}ms "
+          f"p99={s['e2e_p99_s']*1e3:.0f}ms  "
+          f"goodput={s['goodput']*100:.0f}%")
+    if isinstance(transport, SimNetworkTransport):
+        print(f"  sim network: {transport.transfers} transfers, "
+              f"{transport.bytes_sent/1e6:.1f}MB, "
+              f"mean hop {transport.mean_delay_s*1e3:.1f}ms")
+    if gw.events:
+        print("  events:", gw.events[:5])
 
 
 if __name__ == "__main__":

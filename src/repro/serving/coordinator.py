@@ -1,259 +1,68 @@
-"""Task coordinator (paper Appendix E): request dispatch across prefill and
-decode replicas per the TSTP routing, heartbeat-based failure detection,
-workload-shift-triggered lightweight rescheduling, and straggler mitigation
-via periodic routing refresh from measured latencies.
+"""DEPRECATED batch-shaped coordinator — a thin shim over
+:class:`repro.serving.gateway.Gateway`.
 
-In-process realization: replicas are engine objects; the event loop advances
-prefill queues and decode steps. The same control flow maps onto a
-multi-host deployment (each replica = a pod slice driven over RPC) — the
-coordinator only exchanges requests, KVWire blobs, and heartbeats.
+The serving stack's public API is now the request-lifecycle gateway
+(``gateway.py``: ``submit(ServeRequest) -> RequestHandle`` with streaming,
+deadlines, cancellation, and a pluggable ``Transport``). This module keeps
+the original ``Coordinator.submit(GenRequest)`` / ``run_until_drained()``
+entry points working for existing tests and callers:
+
+* ``submit`` accepts mutable :class:`GenRequest` objects and tracks them,
+* ``run_until_drained`` returns the finished ``GenRequest`` list with
+  ``t_submit``/``t_first``/``t_done`` copied back from the handles (the
+  engines themselves no longer stamp timestamps),
+* ``materialize_wires`` maps onto the transport layer
+  (:class:`~repro.serving.transport.InProcessTransport` with
+  ``materialize=True``) instead of being a coordinator flag.
+
+Routing, heartbeats, failure recovery, straggler mitigation, and
+workload-shift rescheduling all live in the gateway now; this class adds
+no behavior of its own.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
-import numpy as np
-
-from repro.configs.base import ModelConfig
-from repro.core import scheduler as sched
-from repro.core.orchestrator import Orchestration, SloSpec
+from repro.core.orchestrator import Orchestration
 from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
-from repro.serving.profiler import WorkloadProfiler
+from repro.serving.gateway import Gateway, ReplicaHandle  # noqa: F401
+from repro.serving.transport import InProcessTransport
 
 
-@dataclass
-class ReplicaHandle:
-    idx: int
-    phase: str
-    engine: object
-    alive: bool = True
-    last_heartbeat: float = field(default_factory=time.time)
-    # straggler tracking
-    ema_latency: float = 0.0
-
-    def beat(self):
-        self.last_heartbeat = time.time()
-
-
-class Coordinator:
+class Coordinator(Gateway):
     def __init__(self, prefills: List[PrefillEngine],
                  decodes: List[DecodeEngine], *,
                  orchestration: Optional[Orchestration] = None,
                  compress: bool = True, backend: str = "auto",
                  heartbeat_timeout: float = 10.0, seed: int = 0):
-        self.pre = [ReplicaHandle(i, "prefill", e)
-                    for i, e in enumerate(prefills)]
-        self.dec = [ReplicaHandle(j, "decode", e)
-                    for j, e in enumerate(decodes)]
-        self.o = orchestration
-        self.compress = compress
-        self.backend = backend
-        self.heartbeat_timeout = heartbeat_timeout
-        self.rng = np.random.default_rng(seed)
-        self.profiler = WorkloadProfiler()
-        self.queue: List[GenRequest] = []
-        self.transfer_queue: List[Tuple[GenRequest, object, int, int]] = []
-        self.done: List[GenRequest] = []
-        self.events: List[str] = []
-        # when True, wires are synced to host before the decode handoff
-        # (models a real network hop; in-process the device arrays flow
-        # straight through — see KVWire.materialize)
-        self.materialize_wires = False
-        self._decode_outage_reported = False
+        super().__init__(prefills, decodes, orchestration=orchestration,
+                         compress=compress, backend=backend,
+                         heartbeat_timeout=heartbeat_timeout, seed=seed)
 
-    # -- routing ------------------------------------------------------------
+    # -- deprecated wire-materialization flag --------------------------------
 
-    def _X(self) -> np.ndarray:
-        alive = np.array([r.alive for r in self.pre], float)
-        if self.o is not None and self.o.X.shape[0] == len(self.pre):
-            x = self.o.X * alive
-        else:
-            x = alive
-        s = x.sum()
-        return x / s if s > 0 else alive / max(alive.sum(), 1)
+    @property
+    def materialize_wires(self) -> bool:
+        return bool(getattr(self.transport, "materialize", False))
 
-    def _Y(self, i: int) -> np.ndarray:
-        alive = np.array([r.alive for r in self.dec], float)
-        if self.o is not None and self.o.Y.shape == (len(self.pre),
-                                                     len(self.dec)):
-            y = self.o.Y[i] * alive
-        else:
-            y = alive
-        s = y.sum()
-        return y / s if s > 0 else alive / max(alive.sum(), 1)
+    @materialize_wires.setter
+    def materialize_wires(self, value: bool):
+        self.transport = InProcessTransport(materialize=bool(value))
 
-    # -- request lifecycle ----------------------------------------------------
+    # -- legacy batch API ----------------------------------------------------
 
-    def submit(self, req: GenRequest):
-        req.t_submit = time.time()
-        self.queue.append(req)
+    def submit(self, req: GenRequest):                # type: ignore[override]
+        """Legacy entry point: enqueue a GenRequest (no deadlines/priority);
+        the handle is created internally."""
+        super().submit(req)
 
-    def pump(self, *, max_prefill_batch: int = 4) -> int:
-        """One coordinator iteration; returns #finished this round."""
-        self._check_heartbeats()
-        # 1. dispatch queued prompts: drain EVERY alive prefill replica this
-        #    round (the TSTP masses only order who gets fed first), instead
-        #    of feeding one randomly sampled replica and idling the rest
-        if self.queue:
-            X = self._X()
-            cand = [i for i in range(len(self.pre))
-                    if self.pre[i].alive and X[i] > 0]
-            if len(cand) > 1:
-                p = X[cand] / X[cand].sum()
-                cand = [int(i) for i in self.rng.choice(
-                    cand, size=len(cand), replace=False, p=p)]
-            for i in cand:
-                if not self.queue:
-                    break
-                batch = self.queue[:max_prefill_batch]
-                self.queue = self.queue[max_prefill_batch:]
-                t0 = time.time()
-                results = self.pre[i].engine.run(
-                    batch, compress=self.compress, backend=self.backend)
-                self._track(self.pre[i], time.time() - t0)
-                Y = self._Y(i)
-                routable = Y.sum() > 0
-                for req, wire, first in results:
-                    if self.materialize_wires:
-                        wire.materialize()   # the explicit host wire hop
-                    # with no alive decode replica the target is a
-                    # placeholder; _drain_transfers holds the wire + events
-                    j = (int(self.rng.choice(len(self.dec), p=Y))
-                         if routable else 0)
-                    self.transfer_queue.append((req, wire, first, j))
-        # 2. drain KV transfers into decode slots (prefill-side queueing:
-        #    wires wait here if the target has no free slot, cf. Appendix E)
-        self._drain_transfers()
-        # 3. advance every decode replica one chunk of steps
-        n_done = 0
-        for handle in self.dec:
-            if not handle.alive:
-                continue
-            t0 = time.time()
-            finished = handle.engine.step()
-            if handle.engine.active or finished:
-                self._track(handle, time.time() - t0)
-            for req in finished:
-                self.profiler.record(len(req.tokens), len(req.out_tokens))
-                self.done.append(req)
-                n_done += 1
-        return n_done
-
-    def _drain_transfers(self):
-        if not self.transfer_queue:
-            return
-        alive = [j for j, d in enumerate(self.dec) if d.alive]
-        if not alive:
-            # do NOT silently reroute to replica 0 (it is dead too) — keep
-            # the wires queued and surface the outage once
-            if not self._decode_outage_reported:
-                self.events.append(
-                    "all decode replicas dead; KV transfers stalled")
-                self._decode_outage_reported = True
-            return
-        self._decode_outage_reported = False
-        by_target: Dict[int, List[Tuple[GenRequest, object, int]]] = {}
-        for req, wire, first, j in self.transfer_queue:
-            if not self.dec[j].alive:
-                # reroute to the alive replica with the most free slots
-                j = max(alive,
-                        key=lambda jj: len(self.dec[jj].engine.free_slots()))
-            by_target.setdefault(j, []).append((req, wire, first))
-        still = []
-        for j, items in by_target.items():
-            rejected = self.dec[j].engine.admit_batch(
-                items, backend=self.backend)
-            still.extend((req, wire, first, j)
-                         for req, wire, first in rejected)
-        self.transfer_queue = still
-
-    def run_until_drained(self, *, max_iters: int = 10000) -> List[GenRequest]:
-        it = 0
-        while (self.queue or self.transfer_queue
-               or any(d.engine.active for d in self.dec)) \
-                and it < max_iters:
-            self.pump()
-            it += 1
-        return self.done
-
-    # -- fault tolerance ------------------------------------------------------
-
-    def _check_heartbeats(self):
-        now = time.time()
-        for h in self.pre + self.dec:
-            if h.alive and now - h.last_heartbeat > self.heartbeat_timeout:
-                h.alive = False
-                self.events.append(f"replica {h.phase}:{h.idx} timed out")
-                self._recover_from(h)
-
-    def kill_replica(self, phase: str, idx: int):
-        """Failure injection (tests/benchmarks)."""
-        group = self.pre if phase == "prefill" else self.dec
-        group[idx].alive = False
-        self.events.append(f"replica {phase}:{idx} killed")
-        self._recover_from(group[idx])
-
-    def _recover_from(self, h: ReplicaHandle):
-        """Requests in a dead decode replica lose their KV — re-queue them
-        for a fresh prefill on a surviving replica."""
-        if h.phase != "decode":
-            return
-        eng = h.engine
-        for i, req in enumerate(eng.slots):
-            if req is None:
-                continue
-            req.out_tokens = []
-            req.t_first = -1.0
-            self.queue.append(req)
-            eng.slots[i] = None
-            self.events.append(f"request {req.rid} re-queued after "
-                               f"decode:{h.idx} failure")
-
-    def heartbeat_all(self):
-        for h in self.pre + self.dec:
-            if h.alive:
-                h.beat()
-
-    def _track(self, h: ReplicaHandle, dt: float):
-        h.beat()
-        h.ema_latency = 0.8 * h.ema_latency + 0.2 * dt if h.ema_latency \
-            else dt
-
-    # -- straggler mitigation ---------------------------------------------------
-
-    def refresh_routing_from_latency(self):
-        """Bleed traffic away from slow replicas: reweight X/Y by inverse
-        measured latency (keeps the TSTP structure, scales the masses)."""
-        if self.o is None:
-            return
-        lat_p = np.array([max(h.ema_latency, 1e-6) for h in self.pre])
-        w = (1.0 / lat_p)
-        w /= w.sum()
-        X = self.o.X * w
-        if X.sum() > 0:
-            self.o.X = X / X.sum()
-        lat_d = np.array([max(h.ema_latency, 1e-6) for h in self.dec])
-        wd = (1.0 / lat_d)
-        wd /= wd.sum()
-        Y = self.o.Y * wd[None, :]
-        s = Y.sum(axis=1, keepdims=True)
-        self.o.Y = np.where(s > 0, Y / np.maximum(s, 1e-12), self.o.Y)
-
-    # -- workload shift -> lightweight rescheduling ------------------------------
-
-    def maybe_reschedule(self, cluster, cfg: ModelConfig, plan, rate: float,
-                         slo: SloSpec):
-        if not self.profiler.shift_detected():
-            return None
-        wl = self.profiler.as_workload()
-        new_plan = sched.reschedule_lightweight(cluster, cfg, plan, wl, rate,
-                                                slo)
-        self.o = new_plan.orchestration
-        self.profiler.set_baseline()
-        self.events.append(
-            f"lightweight rescheduling: {new_plan.search_seconds:.2f}s, "
-            f"P:{len(new_plan.prefill_replicas)} "
-            f"D:{len(new_plan.decode_replicas)}")
-        return new_plan
+    def run_until_drained(self, *, max_iters: int = 10000
+                          ) -> List[GenRequest]:      # type: ignore[override]
+        handles = super().run_until_drained(max_iters=max_iters)
+        out = []
+        for h in handles:
+            h.req.t_submit = h.t_submit
+            h.req.t_first = h.t_first
+            h.req.t_done = h.t_done
+            out.append(h.req)
+        return out

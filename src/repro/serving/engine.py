@@ -14,7 +14,6 @@ holds at most ``log2(max_seq)`` entries per engine.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -30,6 +29,11 @@ from repro.serving.kv_transfer import KVWire
 
 @dataclass
 class GenRequest:
+    """Engine-level unit of work: prompt in, ``out_tokens`` accumulate.
+
+    Engines never stamp the timestamp fields — they are populated from
+    the owning ``RequestHandle`` (``gateway.py``) by the deprecated
+    ``Coordinator`` shim for legacy callers."""
     rid: int
     tokens: np.ndarray              # prompt token ids (1D)
     max_new_tokens: int
@@ -38,7 +42,6 @@ class GenRequest:
     t_submit: float = 0.0
     t_first: float = -1.0
     t_done: float = -1.0
-    wire: Optional[KVWire] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -224,14 +227,20 @@ class DecodeEngine:
             self.cache = kv_transfer.insert_batch(
                 self.cache, [(wire, slot) for (_, wire, _), slot
                              in zip(take, free)], backend=backend)
-            now = time.time()
             for (req, _, first), slot in zip(take, free):
                 self.slots[slot] = req
                 self.cur_token[slot] = first
                 req.out_tokens.append(first)
-                if req.t_first < 0:
-                    req.t_first = now
         return list(items[len(free):])
+
+    def release(self, slot: int) -> Optional[GenRequest]:
+        """Free one slot (cancellation / failure recovery): clears the
+        request and zeroes the slot's cache length so a later admit starts
+        from a clean masked extent."""
+        req = self.slots[slot]
+        self.slots[slot] = None
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+        return req
 
     @property
     def active(self) -> int:
@@ -266,15 +275,21 @@ class DecodeEngine:
         self.steps_run += n
         self.cur_token = np.array(cur)   # writable copy (admit mutates it)
         finished = []
-        now = time.time()
+        freed = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
             req.out_tokens.extend(int(t) for t in toks[valid[:, i], i])
             if not still_active[i]:
-                req.t_done = now
                 finished.append(req)
                 self.slots[i] = None
+                freed.append(i)
+        if freed:
+            # release the slots' cache lengths like step_reference does —
+            # the scan freezes lengths for inactive slots, so without this
+            # a finished slot would keep its old extent until re-admission
+            self.cache["lengths"] = \
+                self.cache["lengths"].at[jnp.asarray(freed)].set(0)
         return finished
 
     def step_reference(self) -> List[GenRequest]:
@@ -298,7 +313,6 @@ class DecodeEngine:
                     or tok == self.eos_id
                     or int(self.cache["lengths"][i]) >= self.max_seq - 1)
             if done:
-                req.t_done = time.time()
                 finished.append(req)
                 self.slots[i] = None
                 self.cache["lengths"] = \

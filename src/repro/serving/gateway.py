@@ -1,0 +1,826 @@
+"""Serving gateway (paper Appendix E as a *service* API).
+
+The public surface of the serving stack: ``Gateway.submit(ServeRequest)``
+returns a :class:`RequestHandle` carrying an explicit request lifecycle
+
+    QUEUED -> PREFILLING -> TRANSFERRING -> DECODING -> DONE
+                                 |               |
+            CANCELLED / REJECTED / FAILED        +-> QUEUED (replica failure)
+
+with streaming token delivery (callback and iterator), ``cancel()``,
+per-request deadline/priority, and admission control that sheds requests
+whose TTFT deadline is provably missed while still queued.
+
+Replicas are reached only through the narrow :class:`PrefillClient` /
+:class:`DecodeClient` interfaces and KV state moves only through a
+:class:`~repro.serving.transport.Transport`, so a multi-host RPC
+realization (each replica = a pod slice driven over the wire) slots in
+without touching routing, heartbeats, or rescheduling logic
+(DESIGN.md §5).
+
+The legacy ``Coordinator`` entry points remain as a thin deprecated shim
+over this class (``repro.serving.coordinator``).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, Iterator, List, Optional, Protocol,
+                    Sequence, Tuple)
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import scheduler as sched
+from repro.core.orchestrator import Orchestration, SloSpec
+from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.kv_transfer import KVWire
+from repro.serving.profiler import WorkloadProfiler
+from repro.serving.transport import (InProcessTransport, TransferTicket,
+                                     Transport)
+
+# -- request lifecycle --------------------------------------------------------
+
+QUEUED = "QUEUED"
+PREFILLING = "PREFILLING"
+TRANSFERRING = "TRANSFERRING"
+DECODING = "DECODING"
+DONE = "DONE"
+CANCELLED = "CANCELLED"
+REJECTED = "REJECTED"
+FAILED = "FAILED"
+
+TERMINAL_STATES = frozenset({DONE, CANCELLED, REJECTED, FAILED})
+
+_TRANSITIONS: Dict[str, frozenset] = {
+    QUEUED: frozenset({PREFILLING, CANCELLED, REJECTED, FAILED}),
+    PREFILLING: frozenset({TRANSFERRING, CANCELLED, FAILED}),
+    TRANSFERRING: frozenset({DECODING, QUEUED, CANCELLED, FAILED}),
+    DECODING: frozenset({DONE, QUEUED, CANCELLED, FAILED}),
+    DONE: frozenset(), CANCELLED: frozenset(),
+    REJECTED: frozenset(), FAILED: frozenset(),
+}
+
+
+@dataclass
+class ServeRequest:
+    """What a client submits: prompt + generation budget + SLO terms."""
+    rid: int
+    tokens: np.ndarray                   # prompt token ids (1D)
+    max_new_tokens: int
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+    priority: int = 0                    # higher dispatches first
+    ttft_deadline_s: float = math.inf    # relative to submit time
+    e2e_deadline_s: float = math.inf
+
+    @classmethod
+    def from_gen(cls, req: GenRequest, **kw) -> "ServeRequest":
+        return cls(req.rid, req.tokens, req.max_new_tokens,
+                   extras=req.extras, **kw)
+
+
+class RequestHandle:
+    """Live view of one request's journey through the gateway.
+
+    Tokens stream into :attr:`tokens` as decode chunks complete (first
+    tokens are observable long before ``run_until_drained`` returns);
+    ``on_token`` fires per delivered token. Terminal state, a
+    human-readable :attr:`reason` for REJECTED/FAILED, and per-request
+    TTFT/TPOT/E2E metrics live here — engines never mutate timestamps.
+    """
+
+    def __init__(self, request: ServeRequest, gen: GenRequest,
+                 gateway: "Gateway",
+                 on_token: Optional[Callable[["RequestHandle", int], None]]
+                 = None):
+        self.request = request
+        self.req = gen                   # engine-level unit (owns out_tokens)
+        self.tokens: List[int] = []
+        self.on_token = on_token
+        self.state = QUEUED
+        self.reason: Optional[str] = None
+        self.restarts = 0
+        self.t_submit = time.time()
+        self.t_first = -1.0
+        self.t_done = -1.0
+        self.history: List[Tuple[float, str]] = [(self.t_submit, QUEUED)]
+        self._gateway = gateway
+        self._engine_seen = 0     # out_tokens consumed from current attempt
+
+    # -- state machine ------------------------------------------------------
+
+    @property
+    def is_terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+    def _transition(self, state: str, now: Optional[float] = None,
+                    reason: Optional[str] = None):
+        if state == self.state:
+            return
+        if state not in _TRANSITIONS[self.state]:
+            raise RuntimeError(f"illegal transition {self.state} -> {state} "
+                               f"for request {self.request.rid}")
+        now = now if now is not None else time.time()
+        self.state = state
+        self.history.append((now, state))
+        if reason is not None:
+            self.reason = reason
+        if state == DONE:
+            self.t_done = now
+
+    def _deliver(self, toks: Sequence[int], now: float):
+        for t in toks:
+            if self.t_first < 0:
+                self.t_first = now
+            self.tokens.append(int(t))
+            if self.on_token is not None:
+                self.on_token(self, int(t))
+
+    def _requeue(self, now: float):
+        """Decode-replica failure: KV is gone, go back through prefill.
+        The DECODING -> QUEUED edge stays visible in :attr:`history`.
+        Already-delivered tokens are KEPT — the restarted attempt's
+        regenerated prefix is suppressed in ``_sync_tokens`` so streaming
+        consumers never see a duplicate (greedy decoding regenerates the
+        identical prefix)."""
+        self._transition(QUEUED, now)
+        self.restarts += 1
+        self.req.out_tokens = []
+        self._engine_seen = 0
+
+    # -- client API ---------------------------------------------------------
+
+    def cancel(self) -> bool:
+        """Abort the request; frees its decode slot if mid-decode."""
+        return self._gateway.cancel(self)
+
+    def stream(self, *, max_iters: int = 100000) -> Iterator[int]:
+        """Yield tokens as they are produced, pumping the gateway while
+        waiting. Returns when the request reaches a terminal state."""
+        sent = 0
+        it = 0
+        while True:
+            while sent < len(self.tokens):
+                yield self.tokens[sent]
+                sent += 1
+            if self.is_terminal:
+                return
+            if it >= max_iters:
+                raise RuntimeError(f"request {self.request.rid} stalled in "
+                                   f"{self.state}")
+            self._gateway.pump()
+            it += 1
+
+    def result(self, *, max_iters: int = 100000) -> List[int]:
+        """Block (pumping the gateway) until terminal; returns the tokens."""
+        for _ in self.stream(max_iters=max_iters):
+            pass
+        return list(self.tokens)
+
+    # -- metrics ------------------------------------------------------------
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit if self.t_first > 0 else math.nan
+
+    @property
+    def e2e(self) -> float:
+        return self.t_done - self.t_submit if self.t_done > 0 else math.nan
+
+    @property
+    def tpot(self) -> float:
+        if self.t_done < 0 or self.t_first < 0 or len(self.tokens) <= 1:
+            return math.nan
+        return (self.t_done - self.t_first) / (len(self.tokens) - 1)
+
+    def metrics(self) -> Dict[str, object]:
+        r = self.request
+        return {"rid": r.rid, "state": self.state, "reason": self.reason,
+                "n_tokens": len(self.tokens), "restarts": self.restarts,
+                "ttft_s": self.ttft, "tpot_s": self.tpot, "e2e_s": self.e2e,
+                "ttft_met": (self.state == DONE
+                             and self.ttft <= r.ttft_deadline_s),
+                "e2e_met": (self.state == DONE
+                            and self.e2e <= r.e2e_deadline_s)}
+
+
+# -- replica clients ----------------------------------------------------------
+
+
+class PrefillClient(Protocol):
+    """Everything the gateway needs from a prefill replica. A multi-host
+    deployment implements this over RPC; the prompt goes out, wires and
+    first tokens come back."""
+
+    def prefill(self, reqs: List[GenRequest], *, compress: bool,
+                backend: str) -> List[Tuple[GenRequest, KVWire, int]]:
+        ...
+
+
+class DecodeClient(Protocol):
+    """Everything the gateway needs from a decode replica."""
+
+    def admit(self, items: Sequence[Tuple[GenRequest, KVWire, int]], *,
+              backend: str) -> List[Tuple[GenRequest, KVWire, int]]:
+        ...
+
+    def step(self) -> List[GenRequest]:
+        ...
+
+    def n_free(self) -> int:
+        ...
+
+    @property
+    def active(self) -> int:
+        ...
+
+    def resident(self) -> List[GenRequest]:
+        ...
+
+    def release(self, req: GenRequest) -> bool:
+        ...
+
+
+class LocalPrefillClient:
+    """In-process realization around a :class:`PrefillEngine`."""
+
+    synchronous = True      # a blocking call that returns proves liveness
+
+    def __init__(self, engine: PrefillEngine):
+        self.engine = engine
+
+    def prefill(self, reqs, *, compress, backend):
+        return self.engine.run(reqs, compress=compress, backend=backend)
+
+
+class LocalDecodeClient:
+    """In-process realization around a :class:`DecodeEngine`."""
+
+    synchronous = True      # a blocking call that returns proves liveness
+
+    def __init__(self, engine: DecodeEngine):
+        self.engine = engine
+
+    def admit(self, items, *, backend):
+        return self.engine.admit_batch(items, backend=backend)
+
+    def step(self):
+        return self.engine.step()
+
+    def n_free(self) -> int:
+        return len(self.engine.free_slots())
+
+    @property
+    def active(self) -> int:
+        return self.engine.active
+
+    def resident(self):
+        return [r for r in self.engine.slots if r is not None]
+
+    def release(self, req) -> bool:
+        for i, r in enumerate(self.engine.slots):
+            if r is req:
+                self.engine.release(i)
+                return True
+        return False
+
+
+def _as_prefill_client(obj) -> PrefillClient:
+    return LocalPrefillClient(obj) if isinstance(obj, PrefillEngine) else obj
+
+
+def _as_decode_client(obj) -> DecodeClient:
+    return LocalDecodeClient(obj) if isinstance(obj, DecodeEngine) else obj
+
+
+@dataclass
+class ReplicaHandle:
+    """Gateway-side view of one replica: liveness + latency tracking."""
+    idx: int
+    phase: str
+    client: object
+    alive: bool = True
+    last_heartbeat: float = field(default_factory=time.time)
+    ema_latency: float = 0.0            # straggler tracking
+    min_latency: float = math.inf       # lower bound for deadline shedding
+
+    def beat(self):
+        self.last_heartbeat = time.time()
+
+    @property
+    def engine(self):
+        """Underlying in-process engine, when there is one (local clients
+        only — an RPC client has no engine attribute)."""
+        return getattr(self.client, "engine", None)
+
+
+@dataclass
+class _Transfer:
+    handle: RequestHandle
+    ticket: TransferTicket
+    first: int
+    target: int
+
+
+# -- the gateway --------------------------------------------------------------
+
+
+class Gateway:
+    """Request-lifecycle facade over phase-split serving replicas.
+
+    Owns TSTP routing (X/Y masses from the orchestration), heartbeat
+    failure detection, straggler-aware routing refresh, workload-shift
+    rescheduling, deadline admission control, and the prefill ->
+    transport -> decode pipeline. One ``pump()`` is one event-loop
+    iteration; ``run_until_drained()`` drives until every submitted
+    request reaches a terminal state.
+    """
+
+    def __init__(self, prefills: Sequence, decodes: Sequence, *,
+                 transport: Optional[Transport] = None,
+                 orchestration: Optional[Orchestration] = None,
+                 compress: bool = True, backend: str = "auto",
+                 heartbeat_timeout: float = 10.0, seed: int = 0):
+        self.pre = [ReplicaHandle(i, "prefill", _as_prefill_client(e))
+                    for i, e in enumerate(prefills)]
+        self.dec = [ReplicaHandle(j, "decode", _as_decode_client(e))
+                    for j, e in enumerate(decodes)]
+        self.transport: Transport = transport or InProcessTransport()
+        self.o = orchestration
+        self.compress = compress
+        self.backend = backend
+        self.heartbeat_timeout = heartbeat_timeout
+        self.rng = np.random.default_rng(seed)
+        self.profiler = WorkloadProfiler()
+        self.queue: List[RequestHandle] = []
+        self.transfer_queue: List[_Transfer] = []
+        self.done: List[RequestHandle] = []
+        self.events: List[str] = []
+        self._by_req: Dict[int, RequestHandle] = {}   # id(GenRequest) -> h
+        self._decode_outage_reported = False
+
+    # -- routing ------------------------------------------------------------
+
+    def _X(self) -> np.ndarray:
+        alive = np.array([r.alive for r in self.pre], float)
+        if self.o is not None and self.o.X.shape[0] == len(self.pre):
+            x = self.o.X * alive
+        else:
+            x = alive
+        s = x.sum()
+        return x / s if s > 0 else alive / max(alive.sum(), 1)
+
+    def _Y(self, i: int) -> np.ndarray:
+        alive = np.array([r.alive for r in self.dec], float)
+        if self.o is not None and self.o.Y.shape == (len(self.pre),
+                                                     len(self.dec)):
+            y = self.o.Y[i] * alive
+        else:
+            y = alive
+        s = y.sum()
+        return y / s if s > 0 else alive / max(alive.sum(), 1)
+
+    # -- request lifecycle --------------------------------------------------
+
+    def submit(self, request, *,
+               on_token: Optional[Callable[[RequestHandle, int], None]]
+               = None) -> RequestHandle:
+        """Admit a request into the gateway; returns its live handle.
+
+        Accepts a :class:`ServeRequest` (the v2 API) or a bare
+        :class:`GenRequest` (deprecated shim path: no deadlines, default
+        priority)."""
+        if isinstance(request, GenRequest):
+            gen = request
+            request = ServeRequest.from_gen(gen)
+        else:
+            gen = GenRequest(request.rid,
+                             np.asarray(request.tokens, np.int32),
+                             request.max_new_tokens,
+                             extras=dict(request.extras))
+        h = RequestHandle(request, gen, self, on_token=on_token)
+        gen.t_submit = h.t_submit
+        self._by_req[id(gen)] = h
+        self.queue.append(h)
+        return h
+
+    def cancel(self, h: RequestHandle) -> bool:
+        """Abort a request in any non-terminal state; a mid-decode cancel
+        releases the slot (and its cache length) immediately."""
+        if h.is_terminal:
+            return False
+        now = time.time()
+        if h in self.queue:
+            self.queue.remove(h)
+        self.transfer_queue = [t for t in self.transfer_queue
+                               if t.handle is not h]
+        if h.state == DECODING:
+            for d in self.dec:
+                if d.client.release(h.req):
+                    break
+        h._transition(CANCELLED, now, reason="cancelled by client")
+        self._finish(h)
+        self.events.append(f"request {h.request.rid} cancelled "
+                           f"({h.history[-2][1].lower()})")
+        return True
+
+    # -- admission control --------------------------------------------------
+
+    def _min_prefill_estimate(self) -> float:
+        """Best-case seconds of work between *now* and the first token for
+        a request still in the queue: the fastest latency EVER observed on
+        an alive prefill replica plus the smallest transport hop ever
+        paid. Minima — not EMAs, which one jit-compile spike would inflate
+        — and unmeasured components count as zero, so shedding stays
+        conservative. Caveat: the minima are conditioned on the batch /
+        bucket / wire shapes actually served so far; a request much
+        smaller than everything previously observed could in principle
+        beat them (the estimate is the tightest bound available without a
+        per-shape cost model)."""
+        mins = [r.min_latency for r in self.pre
+                if r.alive and math.isfinite(r.min_latency)]
+        est = min(mins) if mins else 0.0
+        est += getattr(self.transport, "min_delay_s", 0.0) or 0.0
+        return est
+
+    def _shed_expired(self, now: float):
+        if not self.queue:
+            return
+        est = self._min_prefill_estimate()
+        keep = []
+        for h in self.queue:
+            dl = h.request.ttft_deadline_s
+            waited = now - h.t_submit
+            if math.isfinite(dl) and waited + est > dl:
+                h._transition(
+                    REJECTED, now,
+                    reason=(f"TTFT deadline provably missed while queued: "
+                            f"waited {waited:.3f}s + best-case "
+                            f"{est:.3f}s > deadline {dl:.3f}s"))
+                self._finish(h)
+                self.events.append(
+                    f"request {h.request.rid} rejected: ttft deadline")
+            else:
+                keep.append(h)
+        self.queue = keep
+
+    # -- event loop ---------------------------------------------------------
+
+    def pump(self, *, max_prefill_batch: int = 4) -> int:
+        """One gateway iteration; returns #finished this round."""
+        now = time.time()
+        self._check_heartbeats()
+        self._shed_expired(now)
+        # 1. dispatch queued prompts: drain EVERY alive prefill replica
+        #    this round (the TSTP masses only order who gets fed first)
+        if self.queue:
+            self.queue.sort(key=lambda h: (-h.request.priority, h.t_submit))
+            X = self._X()
+            cand = [i for i in range(len(self.pre))
+                    if self.pre[i].alive and X[i] > 0]
+            if len(cand) > 1:
+                p = X[cand] / X[cand].sum()
+                cand = [int(i) for i in self.rng.choice(
+                    cand, size=len(cand), replace=False, p=p)]
+            for i in cand:
+                if not self.queue:
+                    break
+                batch = self.queue[:max_prefill_batch]
+                self.queue = self.queue[max_prefill_batch:]
+                self._dispatch_prefill(i, batch)
+        # 2. drain KV transfers whose wires have arrived into decode slots
+        #    (prefill-side queueing: wires wait here if the target has no
+        #    free slot, cf. Appendix E)
+        self._drain_transfers()
+        # 3. advance every decode replica one chunk of steps; stream every
+        #    newly emitted token to its handle
+        return self._step_decodes()
+
+    def _dispatch_prefill(self, i: int, batch: List[RequestHandle]):
+        t0 = time.time()
+        for h in batch:
+            h._transition(PREFILLING, t0)
+        results = self.pre[i].client.prefill(
+            [h.req for h in batch], compress=self.compress,
+            backend=self.backend)
+        t1 = time.time()
+        self._track(self.pre[i], t1 - t0)
+        Y = self._Y(i)
+        routable = Y.sum() > 0
+        for req, wire, first in results:
+            h = self._by_req[id(req)]
+            h._transition(TRANSFERRING, t1)
+            # with no alive decode replica the target is a placeholder;
+            # _drain_transfers holds the wire + events
+            j = (int(self.rng.choice(len(self.dec), p=Y)) if routable else 0)
+            ticket = self.transport.send(wire, i, j, now=t1)
+            self.transfer_queue.append(_Transfer(h, ticket, first, j))
+
+    def _drain_transfers(self):
+        if not self.transfer_queue:
+            return
+        now = time.time()
+        arrived = [t for t in self.transfer_queue if t.ticket.ready(now)]
+        in_flight = [t for t in self.transfer_queue
+                     if not t.ticket.ready(now)]
+        if not arrived:
+            return
+        alive = [j for j, d in enumerate(self.dec) if d.alive]
+        if not alive:
+            # do NOT silently reroute to replica 0 (it is dead too) — keep
+            # the wires queued and surface the outage once
+            if not self._decode_outage_reported:
+                self.events.append(
+                    "all decode replicas dead; KV transfers stalled")
+                self._decode_outage_reported = True
+            return
+        self._decode_outage_reported = False
+        by_target: Dict[int, List[_Transfer]] = {}
+        for t in arrived:
+            j = t.target
+            if not self.dec[j].alive:
+                # reroute to the alive replica with the most free slots
+                j = max(alive, key=lambda jj: self.dec[jj].client.n_free())
+            by_target.setdefault(j, []).append(t)
+        still = in_flight
+        for j, items in by_target.items():
+            n_free = self.dec[j].client.n_free()
+            take, rest = items[:n_free], items[n_free:]
+            if take:
+                rejected = self.dec[j].client.admit(
+                    [(t.handle.req, t.ticket.wire, t.first) for t in take],
+                    backend=self.backend)
+                rej_reqs = {id(r) for r, _, _ in rejected}
+                t_adm = time.time()
+                for t in take:
+                    if id(t.handle.req) in rej_reqs:
+                        rest.append(t)
+                        continue
+                    t.handle._transition(DECODING, t_adm)
+                    self._sync_tokens(t.handle, t_adm)
+            still.extend(rest)
+        self.transfer_queue = still
+
+    def _step_decodes(self) -> int:
+        n_done = 0
+        for handle in self.dec:
+            if not handle.alive:
+                continue
+            t0 = time.time()
+            finished = handle.client.step()
+            t1 = time.time()
+            if handle.client.active or finished:
+                self._track(handle, t1 - t0)
+            for req in handle.client.resident():
+                self._sync_tokens(self._by_req[id(req)], t1)
+            for req in finished:
+                h = self._by_req[id(req)]
+                self._sync_tokens(h, t1)
+                h._transition(DONE, t1)
+                self.profiler.record(len(req.tokens), len(req.out_tokens))
+                self._finish(h)
+                n_done += 1
+        return n_done
+
+    def _finish(self, h: RequestHandle):
+        """Terminal bookkeeping: the GenRequest leaves the routing tables
+        so a long-running service doesn't grow without bound (the handle
+        itself stays in ``done`` until ``clear_finished``)."""
+        self._by_req.pop(id(h.req), None)
+        self.done.append(h)
+
+    def clear_finished(self) -> List[RequestHandle]:
+        """Hand over (and forget) terminal handles + events — call
+        periodically from a long-running service loop to bound memory."""
+        out, self.done = self.done, []
+        self.events.clear()
+        return out
+
+    def _sync_tokens(self, h: RequestHandle, now: float):
+        """Stream tokens the engines appended to ``req.out_tokens`` since
+        the last pump into the handle (timestamps live on the handle, not
+        the GenRequest). After a failure requeue the restarted attempt
+        regenerates the already-delivered prefix (greedy decode is
+        deterministic): those positions are swallowed instead of re-firing
+        ``on_token`` or growing ``tokens`` twice."""
+        out = h.req.out_tokens
+        pos = h._engine_seen
+        new = out[pos:]
+        if not new:
+            return
+        h._engine_seen = len(out)
+        replay = len(h.tokens) - pos        # delivered positions to skip
+        if replay > 0:
+            new = new[replay:]
+        if new:
+            h._deliver(new, now)
+
+    def run_until_drained(self, *, max_iters: int = 10000,
+                          poll_s: float = 2e-4) -> List[RequestHandle]:
+        """Drive until every submitted request is terminal (or decode is
+        wedged); returns terminal handles in completion order."""
+        it = 0
+        while (self.queue or self.transfer_queue
+               or any(d.alive and d.client.active for d in self.dec)) \
+                and it < max_iters:
+            n = self.pump()
+            it += 1
+            if n == 0 and not self.queue and self.transfer_queue \
+                    and not any(d.alive and d.client.active
+                                for d in self.dec):
+                # nothing computable until a simulated wire lands (or a
+                # dead fleet recovers): don't burn max_iters busy-spinning
+                time.sleep(poll_s)
+        return self.done
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def _check_heartbeats(self):
+        now = time.time()
+        for h in self.pre + self.dec:
+            if not h.alive:
+                continue
+            if getattr(h.client, "synchronous", False):
+                # an in-process client cannot miss a heartbeat: its calls
+                # block, so wall time spent elsewhere (traffic gaps, jit
+                # compilation) is not evidence of replica death — only
+                # kill_replica takes a local replica down. Timeout-based
+                # death is for asynchronous/remote clients.
+                h.beat()
+                continue
+            if now - h.last_heartbeat > self.heartbeat_timeout:
+                h.alive = False
+                self.events.append(f"replica {h.phase}:{h.idx} timed out")
+                self._recover_from(h)
+
+    def kill_replica(self, phase: str, idx: int):
+        """Failure injection (tests/benchmarks)."""
+        group = self.pre if phase == "prefill" else self.dec
+        group[idx].alive = False
+        self.events.append(f"replica {phase}:{idx} killed")
+        self._recover_from(group[idx])
+
+    def _recover_from(self, h: ReplicaHandle):
+        """Requests in a dead decode replica lose their KV — their handles
+        transition DECODING -> QUEUED (visible in ``history``, counted in
+        ``restarts``) and they re-enter the queue for a fresh prefill on a
+        surviving replica."""
+        if h.phase != "decode":
+            return
+        now = time.time()
+        for req in h.client.resident():
+            h.client.release(req)
+            hd = self._by_req[id(req)]
+            hd._requeue(now)
+            self.queue.append(hd)
+            self.events.append(f"request {req.rid} re-queued after "
+                               f"decode:{h.idx} failure")
+
+    def heartbeat_all(self):
+        for h in self.pre + self.dec:
+            if h.alive:
+                h.beat()
+
+    def _track(self, h: ReplicaHandle, dt: float):
+        h.beat()
+        h.ema_latency = 0.8 * h.ema_latency + 0.2 * dt if h.ema_latency \
+            else dt
+        h.min_latency = min(h.min_latency, dt)
+
+    # -- straggler mitigation -----------------------------------------------
+
+    def refresh_routing_from_latency(self):
+        """Bleed traffic away from slow replicas: reweight X/Y by inverse
+        measured latency (keeps the TSTP structure, scales the masses)."""
+        if self.o is None:
+            return
+        lat_p = np.array([max(h.ema_latency, 1e-6) for h in self.pre])
+        w = (1.0 / lat_p)
+        w /= w.sum()
+        X = self.o.X * w
+        if X.sum() > 0:
+            self.o.X = X / X.sum()
+        lat_d = np.array([max(h.ema_latency, 1e-6) for h in self.dec])
+        wd = (1.0 / lat_d)
+        wd /= wd.sum()
+        Y = self.o.Y * wd[None, :]
+        s = Y.sum(axis=1, keepdims=True)
+        self.o.Y = np.where(s > 0, Y / np.maximum(s, 1e-12), self.o.Y)
+
+    # -- workload shift -> lightweight rescheduling --------------------------
+
+    def maybe_reschedule(self, cluster, cfg: ModelConfig, plan, rate: float,
+                         slo: SloSpec):
+        if not self.profiler.shift_detected():
+            return None
+        wl = self.profiler.as_workload()
+        new_plan = sched.reschedule_lightweight(cluster, cfg, plan, wl, rate,
+                                                slo)
+        self.o = new_plan.orchestration
+        self.profiler.set_baseline()
+        self.events.append(
+            f"lightweight rescheduling: {new_plan.search_seconds:.2f}s, "
+            f"P:{len(new_plan.prefill_replicas)} "
+            f"D:{len(new_plan.decode_replicas)}")
+        return new_plan
+
+
+# -- open-loop driving helpers ------------------------------------------------
+
+
+def warmup_engines(prefills: Sequence[PrefillEngine],
+                   decodes: Sequence[DecodeEngine], vocab_size: int, *,
+                   compress: bool = True, backend: str = "auto",
+                   prompt_lens: Sequence[int] = (8,), max_new: int = 2):
+    """Compile the prefill/decode jit paths before an open-loop run so the
+    first real request's TTFT measures serving, not XLA compilation. Pass
+    the prompt lengths the trace will actually use — each distinct
+    (power-of-two bucket, batch width) still compiles once. Engines are
+    paired round-robin (jit caches are per-engine, so the full
+    prefill x decode cross-product would add wall time, not coverage)."""
+    rng = np.random.default_rng(0)
+    for ln in prompt_lens:
+        for k in range(max(len(prefills), len(decodes))):
+            pre = prefills[k % len(prefills)]
+            dec = decodes[k % len(decodes)]
+            req = GenRequest(-1, rng.integers(
+                1, vocab_size, int(ln)).astype(np.int32), max_new)
+            for r, w, f in pre.run([req], compress=compress,
+                                   backend=backend):
+                dec.admit(r, w, f, backend=backend)
+            while dec.active:
+                dec.step()
+
+
+def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
+                                                          ServeRequest]], *,
+                    time_scale: float = 1.0, max_iters: int = 200000,
+                    on_token: Optional[Callable[[RequestHandle, int], None]]
+                    = None) -> List[RequestHandle]:
+    """Open-loop driver: submit each request at its trace arrival time
+    (scaled by ``time_scale``) against the wall clock, pumping the gateway
+    between arrivals, then drain. This is how a service is actually driven
+    — dumping the whole trace at t=0 makes every E2E number meaningless.
+    """
+    pending = sorted(arrivals, key=lambda a: a[0])
+    gw.heartbeat_all()      # time spent in setup/warmup is not a failure
+    t0 = time.time()
+    handles: List[RequestHandle] = []
+    i = 0
+    it = 0
+    while i < len(pending) or gw.queue or gw.transfer_queue \
+            or any(d.alive and d.client.active for d in gw.dec):
+        now = time.time() - t0
+        while i < len(pending) and pending[i][0] * time_scale <= now:
+            handles.append(gw.submit(pending[i][1], on_token=on_token))
+            i += 1
+        busy = (gw.queue or gw.transfer_queue
+                or any(d.alive and d.client.active for d in gw.dec))
+        if busy:
+            n = gw.pump()
+            if n == 0 and not gw.queue and gw.transfer_queue \
+                    and not any(d.alive and d.client.active
+                                for d in gw.dec):
+                # only in-flight simulated wires remain: wait for t_ready
+                # instead of burning the iteration budget (same wedge
+                # guard as run_until_drained)
+                time.sleep(2e-4)
+        elif i < len(pending):
+            # idle until the next arrival — don't burn the iteration budget
+            time.sleep(min(pending[i][0] * time_scale - now, 5e-3))
+        it += 1
+        if it > max_iters:
+            break
+    return handles
+
+
+def summarize_handles(handles: Sequence[RequestHandle]) -> Dict[str, object]:
+    """TTFT/TPOT/E2E percentiles + goodput over one open-loop run.
+
+    Goodput is deadline attainment: the fraction of *submitted* requests
+    that finished AND met both their TTFT and E2E deadlines (an infinite
+    deadline is trivially met)."""
+    def pct(xs, q):
+        xs = [x for x in xs if not math.isnan(x)]
+        return float(np.percentile(xs, q)) if xs else math.nan
+
+    done = [h for h in handles if h.state == DONE]
+    good = [h for h in done
+            if h.ttft <= h.request.ttft_deadline_s
+            and h.e2e <= h.request.e2e_deadline_s]
+    states: Dict[str, int] = {}
+    for h in handles:
+        states[h.state] = states.get(h.state, 0) + 1
+    ttft = [h.ttft for h in done]
+    tpot = [h.tpot for h in done]
+    e2e = [h.e2e for h in done]
+    toks = sum(len(h.tokens) for h in done)
+    return {
+        "n_submitted": len(handles), "n_done": len(done),
+        "states": states, "tokens": toks,
+        "goodput": len(good) / max(len(handles), 1),
+        "ttft_p50_s": pct(ttft, 50), "ttft_p99_s": pct(ttft, 99),
+        "tpot_p50_s": pct(tpot, 50), "tpot_p99_s": pct(tpot, 99),
+        "e2e_p50_s": pct(e2e, 50), "e2e_p99_s": pct(e2e, 99),
+    }

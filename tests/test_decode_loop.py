@@ -262,6 +262,50 @@ def test_whisper_kv_transfer_roundtrip():
     assert int(dec["lengths"][0]) == 12
 
 
+# -- slot recycling ---------------------------------------------------------
+
+
+def test_chunked_step_releases_lengths_on_finish(small_model):
+    """Regression: the scan path froze a finished slot's cache length
+    instead of zeroing it like step_reference does; a recycled slot must
+    serve its new request with unpolluted attention."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64, bucket=False)
+    eng = DecodeEngine(cfg, params, max_slots=1, max_seq=64, chunk_size=4)
+    req_a, req_b = _reqs(cfg, lens=[24, 9], max_new=6)
+    (a, wa, fa), = pre.run([req_a], backend="ref")
+    assert eng.admit(a, wa, fa, backend="ref")
+    while eng.active:
+        eng.step()
+    assert int(eng.cache["lengths"][0]) == 0, \
+        "finished slot must release its cache length (step_reference parity)"
+    # recycle the slot: admit -> finish -> admit; tokens must match a
+    # fresh engine decoding the same request
+    (b, wb, fb), = pre.run([req_b], backend="ref")
+    assert eng.admit(b, wb, fb, backend="ref")
+    while eng.active:
+        eng.step()
+    fresh = DecodeEngine(cfg, params, max_slots=1, max_seq=64, chunk_size=4)
+    req_b2 = GenRequest(99, req_b.tokens, max_new_tokens=6)
+    (b2, wb2, fb2), = pre.run([req_b2], backend="ref")
+    assert fresh.admit(b2, wb2, fb2, backend="ref")
+    while fresh.active:
+        fresh.step()
+    assert b.out_tokens == b2.out_tokens, \
+        "recycled slot's attention polluted by the previous occupant"
+
+
+def test_release_frees_slot_and_length(small_model):
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    eng = DecodeEngine(cfg, params, max_slots=2, max_seq=64)
+    (r, w, f), = pre.run(_reqs(cfg, lens=[12], max_new=8), backend="ref")
+    assert eng.admit(r, w, f, backend="ref")
+    assert int(eng.cache["lengths"][0]) == 12
+    assert eng.release(0) is r
+    assert eng.slots[0] is None and int(eng.cache["lengths"][0]) == 0
+
+
 # -- coordinator guard ------------------------------------------------------
 
 

@@ -1,0 +1,304 @@
+"""Serving API v2: request lifecycle through the gateway — streaming
+before drain, cancellation freeing decode slots, deadline-based admission
+control, decode-replica failure re-queueing handles (DECODING -> QUEUED),
+transport-delayed TTFT, priority dispatch, and the deprecated Coordinator
+shim's materialize_wires mapping onto the transport layer."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build
+from repro.serving.coordinator import Coordinator
+from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.gateway import (CANCELLED, DECODING, DONE, QUEUED,
+                                   REJECTED, TRANSFERRING, Gateway,
+                                   RequestHandle, ServeRequest)
+from repro.serving.transport import InProcessTransport, SimNetworkTransport
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(KEY)
+    return cfg, api, params
+
+
+def _prompt(cfg, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+def _gw(cfg, params, *, n_dec=2, max_slots=4, chunk_size=4, transport=None):
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    decs = [DecodeEngine(cfg, params, max_slots=max_slots, max_seq=64,
+                         chunk_size=chunk_size) for _ in range(n_dec)]
+    return Gateway([pre], decs, transport=transport, backend="ref")
+
+
+# -- streaming ----------------------------------------------------------------
+
+
+def test_tokens_stream_before_drained(small_model):
+    """First tokens must be observable (callback + handle.tokens) while
+    the run is still in flight — long before run_until_drained returns."""
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    got = []
+    hs = [gw.submit(ServeRequest(i, _prompt(cfg, 8 + 4 * i, seed=i),
+                                 max_new_tokens=12),
+                    on_token=lambda h, t: got.append((h.request.rid, t)))
+          for i in range(3)]
+    for _ in range(3):
+        gw.pump()
+        if any(h.tokens for h in hs):
+            break
+    streaming = [h for h in hs if h.tokens]
+    assert streaming, "no tokens streamed while requests in flight"
+    assert any(not h.is_terminal for h in hs), \
+        "tokens must arrive before the system drains"
+    assert got, "on_token callback must fire as chunks complete"
+    n_seen = {h.request.rid: len(h.tokens) for h in hs}
+    done = gw.run_until_drained()
+    assert len(done) == 3 and all(h.state == DONE for h in hs)
+    for h in hs:
+        # the stream accumulated (not replaced) and matches the engine
+        assert len(h.tokens) == 12 >= n_seen[h.request.rid]
+        assert h.tokens == h.req.out_tokens
+        assert [t for r, t in got if r == h.request.rid] == h.tokens
+
+
+def test_handle_metrics_and_history(small_model):
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=6))
+    gw.run_until_drained()
+    assert h.state == DONE
+    # TTFT/TPOT/E2E are reported by the handle (engines stamp nothing)
+    assert h.t_done >= h.t_first >= h.t_submit
+    assert h.e2e >= h.ttft >= 0 and h.tpot >= 0
+    m = h.metrics()
+    assert m["state"] == DONE and m["n_tokens"] == 6
+    assert m["ttft_met"] and m["e2e_met"]
+    # canonical lifecycle order
+    states = [s for _, s in h.history]
+    assert states == [QUEUED, "PREFILLING", TRANSFERRING, DECODING, DONE]
+
+
+def test_stream_iterator_drives_gateway(small_model):
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=5))
+    assert list(h.stream()) == h.tokens and len(h.tokens) == 5
+    assert h.state == DONE
+
+
+def test_illegal_transition_raises(small_model):
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="illegal transition"):
+        h._transition(DONE)
+
+
+# -- cancellation -------------------------------------------------------------
+
+
+def test_cancel_queued_request(small_model):
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=4))
+    assert h.cancel()
+    assert h.state == CANCELLED and not gw.queue
+    assert not h.cancel(), "terminal handles cannot be re-cancelled"
+    assert gw.run_until_drained() == [h]
+
+
+def test_cancel_mid_decode_frees_slot(small_model):
+    """Cancelling a DECODING request must release its slot (and zero the
+    slot's cache length) so a waiting request can take it."""
+    cfg, api, params = small_model
+    gw = _gw(cfg, params, n_dec=1, max_slots=1, chunk_size=2)
+    h1 = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=64))
+    h2 = gw.submit(ServeRequest(1, _prompt(cfg, seed=3), max_new_tokens=4))
+    while h1.state != DECODING:
+        gw.pump()
+    eng = gw.dec[0].engine
+    assert eng.slots[0] is h1.req and h2.state != DECODING
+    assert h1.cancel()
+    assert h1.state == CANCELLED
+    assert eng.slots[0] is None, "cancel must free the decode slot"
+    assert int(eng.cache["lengths"][0]) == 0, \
+        "cancel must zero the released slot's cache length"
+    n1 = len(h1.tokens)
+    gw.run_until_drained()
+    assert h2.state == DONE and len(h2.tokens) == 4
+    assert len(h1.tokens) == n1, "cancelled stream must not keep growing"
+
+
+# -- deadline admission control ----------------------------------------------
+
+
+def test_deadline_rejection_emits_reason(small_model):
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=4,
+                               ttft_deadline_s=0.005))
+    ok = gw.submit(ServeRequest(1, _prompt(cfg, seed=2), max_new_tokens=4))
+    time.sleep(0.02)        # the deadline passes while still queued
+    gw.pump()
+    assert h.state == REJECTED
+    assert h.reason and "deadline" in h.reason
+    assert h in gw.done and not h.tokens
+    assert any("rejected" in e for e in gw.events)
+    gw.run_until_drained()
+    assert ok.state == DONE, "undeadlined request must be unaffected"
+
+
+# -- failure recovery ---------------------------------------------------------
+
+
+def test_decode_failure_requeues_handles(small_model):
+    """Replica death mid-decode: handles transition DECODING -> QUEUED
+    (visible in history / restarts — not a silent restart) and finish on
+    the survivor."""
+    cfg, api, params = small_model
+    gw = _gw(cfg, params, n_dec=2, max_slots=4, chunk_size=2)
+    streamed = {i: 0 for i in range(4)}
+
+    def count(h, tok):
+        streamed[h.request.rid] += 1
+
+    hs = [gw.submit(ServeRequest(i, _prompt(cfg, 8 + 2 * i, seed=i),
+                                 max_new_tokens=24), on_token=count)
+          for i in range(4)]
+    while not any(h.state == DECODING for h in hs):
+        gw.pump()
+    victim = next(d for d in gw.dec if d.client.active)
+    resident = set(map(id, victim.client.resident()))
+    gw.kill_replica("decode", victim.idx)
+    hit = [h for h in hs if id(h.req) in resident]
+    assert hit, "killed replica held no requests"
+    for h in hit:
+        assert h.state == QUEUED and h.restarts == 1
+        states = [s for _, s in h.history]
+        assert states[-2:] == [DECODING, QUEUED]
+    assert any("re-queued" in e for e in gw.events)
+    gw.run_until_drained()
+    assert all(h.state == DONE and len(h.tokens) == 24 for h in hs)
+    # the restarted attempt regenerates the delivered prefix: streaming
+    # consumers must NOT see duplicate tokens
+    assert streamed == {i: 24 for i in range(4)}
+
+
+def test_open_loop_idle_gap_is_not_replica_death(small_model):
+    """A traffic gap longer than the heartbeat timeout must not read as
+    fleet death: the driver keeps replicas beating while it sleeps."""
+    from repro.serving.gateway import drive_open_loop
+
+    cfg, api, params = small_model
+    gw = _gw(cfg, params, n_dec=1)
+    gw.heartbeat_timeout = 0.25
+    arrivals = [(0.0, ServeRequest(0, _prompt(cfg), max_new_tokens=4)),
+                (0.6, ServeRequest(1, _prompt(cfg, seed=1),
+                                   max_new_tokens=4))]
+    handles = drive_open_loop(gw, arrivals)
+    assert [h.state for h in handles] == [DONE, DONE]
+    assert not any("timed out" in e for e in gw.events)
+
+
+# -- transport ----------------------------------------------------------------
+
+
+def test_sim_transport_delays_first_token(small_model):
+    """A simulated network hop gates decode admission: the wire is not
+    consumable before its alpha-beta arrival time, so TTFT includes the
+    hop (and the payload crossed the explicit host boundary)."""
+    cfg, api, params = small_model
+    alpha = 0.15
+    tr = SimNetworkTransport(alpha=alpha, bandwidth=1e12)
+    gw = _gw(cfg, params, n_dec=1, transport=tr)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=4))
+    gw.pump()
+    assert h.state == TRANSFERRING and not h.tokens, \
+        "wire must not arrive before the simulated hop completes"
+    assert len(gw.transfer_queue) == 1
+    wire = gw.transfer_queue[0].ticket.wire
+    for s in wire.slots.values():
+        for t in s.values():
+            for a in t.payload.values():
+                assert isinstance(a, np.ndarray), \
+                    "sim transport must materialize payloads to the host"
+    gw.run_until_drained()
+    assert h.state == DONE
+    assert h.ttft >= alpha, f"TTFT {h.ttft:.3f}s must include the hop"
+    assert tr.transfers == 1 and tr.mean_delay_s >= alpha
+
+
+def test_inproc_transport_keeps_device_arrays(small_model):
+    """In-process hop: immediately ready, payloads stay device arrays, and
+    one pump carries a request all the way into decode (no gating)."""
+    import jax as _jax
+
+    from repro.serving import kv_transfer
+
+    cfg, api, params = small_model
+    tokens = _jax.random.randint(KEY, (1, 16), 0, cfg.vocab_size)
+    _, cache = api.prefill(params, {"tokens": tokens}, max_seq=32)
+    wire = kv_transfer.extract(cache, 0, 16, backend="ref")
+    ticket = InProcessTransport().send(wire, 0, 0)
+    assert ticket.ready() and ticket.delay_s == 0.0
+    assert any(isinstance(a, _jax.Array)
+               for s in ticket.wire.slots.values() for t in s.values()
+               for a in t.payload.values()), \
+        "in-process transport must not pull payloads to the host"
+    gw = _gw(cfg, params, transport=InProcessTransport())
+    h = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=8))
+    gw.pump()
+    assert h.state in (DECODING, DONE) and h.tokens, \
+        "in-process wire must be consumable within the same pump"
+
+
+# -- priority -----------------------------------------------------------------
+
+
+def test_priority_dispatches_first(small_model):
+    cfg, api, params = small_model
+    gw = _gw(cfg, params)
+    lo = gw.submit(ServeRequest(0, _prompt(cfg), max_new_tokens=4,
+                                priority=0))
+    hi = gw.submit(ServeRequest(1, _prompt(cfg, seed=5), max_new_tokens=4,
+                                priority=5))
+    gw.pump(max_prefill_batch=1)
+    assert lo.state == QUEUED, "low priority must wait"
+    assert hi.state in (DECODING, DONE) and hi.tokens
+    gw.run_until_drained()
+    assert lo.state == DONE and hi.state == DONE
+
+
+# -- deprecated Coordinator shim ---------------------------------------------
+
+
+def test_coordinator_shim_materialize_wires_and_timestamps(small_model):
+    """The old entry points still work: GenRequest in, finished GenRequests
+    out with timestamps copied back from the handles; materialize_wires
+    now swaps the transport."""
+    cfg, api, params = small_model
+    coord = Coordinator([PrefillEngine(cfg, params, max_seq=64)],
+                        [DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
+                        backend="ref")
+    assert not coord.materialize_wires
+    coord.materialize_wires = True
+    assert isinstance(coord.transport, InProcessTransport)
+    assert coord.transport.materialize and coord.materialize_wires
+    req = GenRequest(0, _prompt(cfg), max_new_tokens=4)
+    coord.submit(req)
+    done = coord.run_until_drained()
+    assert [r.rid for r in done] == [0] and done[0] is req
+    assert len(req.out_tokens) == 4
+    assert req.t_done >= req.t_first >= req.t_submit > 0
