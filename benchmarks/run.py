@@ -32,7 +32,8 @@ def main() -> None:
         "serving_api": (bench_serving_api,
                         "gateway lifecycle TTFT/TPOT/goodput per transport"),
         "sched_time": (bench_scheduling_time, "Fig 10 scheduling time"),
-        "resched": (bench_rescheduling, "Fig 11/Table 4 rescheduling"),
+        "rescheduling": (bench_rescheduling,
+                         "Fig 11/Table 4 rescheduling (sim + live flip)"),
         "kvcomp": (bench_kv_compression, "Fig 12/18, Tables 2/8 KV comp"),
         "ratio": (bench_ratio_sweep, "Fig 6/14 prefill:decode ratio"),
         "network": (bench_network_effect, "Table 5 network effect"),
@@ -40,7 +41,9 @@ def main() -> None:
         "case": (bench_case_study, "Table 3 case study"),
         "kernels": (bench_kernels, "kernel micro + v5e roofline"),
     }
-    only = {s for s in f"{args.only},{args.suite}".split(",") if s}
+    aliases = {"resched": "rescheduling"}     # legacy suite names
+    only = {aliases.get(s, s)
+            for s in f"{args.only},{args.suite}".split(",") if s}
     unknown = only - suites.keys()
     if unknown:
         sys.exit(f"unknown suite(s): {sorted(unknown)}; "

@@ -15,4 +15,10 @@ if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
         python -m benchmarks.run --suite serving_api --quick
     test -s BENCH_serving_api.json
+    echo "== live reschedule demo (epoch transition on a running gateway) =="
+    timeout 600 python examples/reschedule_demo.py --live
+    echo "== rescheduling bench (sim + live flip disruption window) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m benchmarks.run --suite rescheduling --quick
+    test -s BENCH_rescheduling.json
 fi

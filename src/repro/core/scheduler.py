@@ -58,6 +58,19 @@ class LowerLevelSolver:
         self.compress = compress
         self._cache: Dict[Tuple, Optional[Tuple]] = {}
 
+    def seed(self, plan: "DeploymentPlan") -> None:
+        """Freeze a live plan's parallel configs into the deduction cache.
+
+        Every group keeps its deployed ParallelConfig for BOTH phase
+        designations (the paper's no-reload constraint: a flip re-uses the
+        resident sharded parameters, so the parallel config cannot change
+        with the phase). After seeding, ``deduce`` never re-runs Alg. 2
+        for a live group, and ``solve`` scores flip-only neighbors against
+        the frozen configs."""
+        for r in plan.replicas:
+            for ph in ("prefill", "decode"):
+                self._cache[(tuple(r.devices), ph)] = (r.pc, r.cost)
+
     def deduce(self, group: Tuple[int, ...], phase: str):
         key = (group, phase)
         if key not in self._cache:
@@ -121,9 +134,7 @@ def reschedule_lightweight(cluster: ClusterSpec, cfg: ModelConfig,
     t0 = time.time()
     solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress)
     # freeze parallel configs: seed the deduction cache from the live plan
-    for r in plan.replicas:
-        for ph in ("prefill", "decode"):
-            solver._cache[(tuple(r.devices), ph)] = (r.pc, r.cost)
+    solver.seed(plan)
     res = tabu.tabu_search(cluster, cfg, solver.score, n_step=n_step,
                            n_nghb=n_nghb, seed=seed, moves=(tabu._flip,),
                            init=init_solution or plan.solution, patience=10)
@@ -136,9 +147,13 @@ def reschedule_lightweight(cluster: ClusterSpec, cfg: ModelConfig,
 
 def drop_nodes(cluster: ClusterSpec, plan: DeploymentPlan,
                dead_devices: List[int]) -> tabu.Solution:
-    """Remove failed devices; groups losing devices are dissolved into the
-    survivors (their params would need reload — the paper instead drops the
-    affected replicas and reflows traffic)."""
+    """Remove failed devices: any group that lost a device is dropped
+    OUTRIGHT — its surviving devices leave the solution entirely rather
+    than being folded into other groups. Re-absorbing survivors would
+    change those groups' parallel configs and force a parameter
+    reload/re-shard; the paper instead drops the affected replicas and
+    reflows their traffic onto the untouched groups (lightweight
+    rescheduling then re-designates phases among the survivors)."""
     dead = set(dead_devices)
     groups, phases = [], []
     for g, p in zip(plan.solution.groups, plan.solution.phases):
@@ -146,3 +161,60 @@ def drop_nodes(cluster: ClusterSpec, plan: DeploymentPlan,
             groups.append(g)
             phases.append(p)
     return tabu.Solution(tuple(groups), tuple(phases))
+
+
+# -- plan epochs: structural diff between two deployment plans ---------------
+
+
+@dataclass
+class PlanDelta:
+    """What changed between two deployment plans, keyed by device group.
+
+    Groups are the stable identity across an epoch transition: lightweight
+    rescheduling never changes group construction (params stay resident),
+    so a group either keeps its phase, flips it, dies (node failure), or —
+    only after a FULL reschedule — appears anew. ``Gateway.apply_plan``
+    consumes this to drain/flip live replicas and atomically install the
+    new routing masses."""
+    old_plan: DeploymentPlan
+    new_plan: DeploymentPlan
+    flips: List[Tuple[Tuple[int, ...], str, str]]   # (group, old, new phase)
+    kept: List[Tuple[Tuple[int, ...], str]]         # (group, phase)
+    dropped: List[Tuple[Tuple[int, ...], str]]      # in old only
+    added: List[Tuple[Tuple[int, ...], str]]        # in new only
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.flips or self.dropped or self.added)
+
+    def describe(self) -> str:
+        parts = [f"{len(self.flips)} flip(s)", f"{len(self.kept)} kept"]
+        if self.dropped:
+            parts.append(f"{len(self.dropped)} dropped")
+        if self.added:
+            parts.append(f"{len(self.added)} added")
+        for g, a, b in self.flips:
+            parts.append(f"{list(g)}: {a}->{b}")
+        return ", ".join(parts)
+
+
+def _group_key(devices) -> Tuple[int, ...]:
+    return tuple(sorted(int(d) for d in devices))
+
+
+def plan_diff(old: DeploymentPlan, new: DeploymentPlan) -> PlanDelta:
+    """Structural diff old -> new, matching replicas by device group."""
+    old_by = {_group_key(r.devices): r.phase for r in old.replicas}
+    new_by = {_group_key(r.devices): r.phase for r in new.replicas}
+    flips, kept = [], []
+    for g, ph in new_by.items():
+        if g not in old_by:
+            continue
+        if old_by[g] == ph:
+            kept.append((g, ph))
+        else:
+            flips.append((g, old_by[g], ph))
+    dropped = [(g, ph) for g, ph in old_by.items() if g not in new_by]
+    added = [(g, ph) for g, ph in new_by.items() if g not in old_by]
+    return PlanDelta(old_plan=old, new_plan=new, flips=flips, kept=kept,
+                     dropped=dropped, added=added)

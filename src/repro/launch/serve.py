@@ -29,8 +29,16 @@ from repro.core.workload import WORKLOADS, generate
 from repro.models import build
 from repro.serving.engine import DecodeEngine, PrefillEngine
 from repro.serving.gateway import (Gateway, ServeRequest, drive_open_loop,
-                                   summarize_handles, warmup_engines)
+                                   gateway_from_plan, summarize_handles,
+                                   warmup_engines)
+from repro.serving.profiler import WorkloadProfiler
 from repro.serving.transport import InProcessTransport, SimNetworkTransport
+
+# trace -> engine scale of the reduced-config requests built below
+# (prompts ~ n_in/IN_SCALE, outputs ~ n_out/OUT_SCALE); the profiler is
+# configured with the same factors so the cost model sees the full-model
+# workload shape
+IN_SCALE, OUT_SCALE = 32, 16
 
 
 def main():
@@ -54,6 +62,13 @@ def main():
                     help="per-request TTFT deadline in s (0 = none); "
                          "queued requests that provably miss it are shed")
     ap.add_argument("--e2e-slo", type=float, default=0.0)
+    ap.add_argument("--live-reschedule", action="store_true",
+                    help="shift the workload mid-trace and let the "
+                         "control plane apply a lightweight reschedule to "
+                         "the RUNNING gateway (phase flips, no reload)")
+    ap.add_argument("--shift-to", default="",
+                    help="workload for the second half of the trace "
+                         "(default: the other one)")
     args = ap.parse_args()
 
     wl = WORKLOADS[args.workload]
@@ -71,12 +86,6 @@ def main():
     cfg = get_reduced(args.arch)
     api = build(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    n_pre = max(1, len(plan.prefill_replicas))
-    n_dec = max(1, len(plan.decode_replicas))
-    pres = [PrefillEngine(cfg, params, max_seq=96)
-            for _ in range(min(n_pre, 4))]
-    decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=96)
-            for _ in range(min(n_dec, 4))]
     if args.transport == "sim":
         # the reduced engine computes, but the wire hop pays the FULL
         # model's KV bytes over the plan's inter-replica links
@@ -86,27 +95,73 @@ def main():
                                                   bytes_scale=scale)
     else:
         transport = InProcessTransport()
-    gw = Gateway(pres, decs, transport=transport,
-                 orchestration=plan.orchestration,
-                 compress=not args.no_compress, backend="ref")
+    if args.live_reschedule:
+        # one phase-switchable Replica per plan replica, so the control
+        # plane can re-designate the running fleet without a reload
+        gw = gateway_from_plan(plan, cfg, params, transport=transport,
+                               max_seq=96, max_slots=4,
+                               profiler=WorkloadProfiler(
+                                   in_scale=IN_SCALE, out_scale=OUT_SCALE),
+                               compress=not args.no_compress, backend="ref")
+        pres = [h.engine for h in gw.pre]
+        decs = [h.engine for h in gw.dec]
+    else:
+        n_pre = max(1, len(plan.prefill_replicas))
+        n_dec = max(1, len(plan.decode_replicas))
+        pres = [PrefillEngine(cfg, params, max_seq=96)
+                for _ in range(min(n_pre, 4))]
+        decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=96)
+                for _ in range(min(n_dec, 4))]
+        gw = Gateway(pres, decs, transport=transport,
+                     orchestration=plan.orchestration,
+                     compress=not args.no_compress, backend="ref")
 
     print("[3/4] serving the request stream (open loop, "
           f"{args.transport} transport)...")
     warmup_engines(pres, decs, cfg.vocab_size,
                    compress=not args.no_compress, backend="ref",
                    prompt_lens=(16, 32, 48))
-    trace = generate(wl, rate=args.rate, duration=args.duration, seed=0)
     rng = np.random.default_rng(0)
-    arrivals = []
-    for r in trace:
-        arrivals.append((r.t_arrive, ServeRequest(
-            r.rid, rng.integers(1, cfg.vocab_size,
-                                min(r.n_in // 32 + 8, 48)).astype(np.int32),
-            max_new_tokens=min(args.max_new, max(r.n_out // 16, 2)),
+
+    def to_serve(r, t_offset=0.0):
+        return (t_offset + r.t_arrive, ServeRequest(
+            r.rid, rng.integers(
+                1, cfg.vocab_size,
+                min(r.n_in // IN_SCALE + 8, 48)).astype(np.int32),
+            max_new_tokens=min(args.max_new, max(r.n_out // OUT_SCALE, 2)),
             ttft_deadline_s=args.ttft_slo or float("inf"),
-            e2e_deadline_s=args.e2e_slo or float("inf"))))
+            e2e_deadline_s=args.e2e_slo or float("inf")))
+
+    tick = None
+    if args.live_reschedule:
+        wl2 = WORKLOADS[args.shift_to or
+                        ("conversation" if args.workload == "coding"
+                         else "coding")]
+        half = args.duration / 2
+        first = generate(wl, rate=args.rate, duration=half, seed=0)
+        second = generate(wl2, rate=args.rate, duration=half, seed=1)
+        for i, r in enumerate(second):
+            r.rid = len(first) + i
+        arrivals = [to_serve(r) for r in first] + \
+            [to_serve(r, t_offset=half) for r in second]
+        print(f"    trace shifts {wl.name} -> {wl2.name} at t={half:.1f}s")
+        printed = [0]
+
+        def tick(g):
+            if not g.profiler.has_baseline:
+                g.profiler.set_baseline()
+            else:
+                g.maybe_reschedule(cluster, cfg_full, rate=args.rate,
+                                   slo=slo)
+            for e in g.events[printed[0]:]:
+                print(f"    | {e}")
+            printed[0] = len(g.events)
+    else:
+        trace = generate(wl, rate=args.rate, duration=args.duration, seed=0)
+        arrivals = [to_serve(r) for r in trace]
     t0 = time.time()
-    handles = drive_open_loop(gw, arrivals, time_scale=args.time_scale)
+    handles = drive_open_loop(gw, arrivals, time_scale=args.time_scale,
+                              tick=tick)
     wall = time.time() - t0
 
     print("[4/4] results")
@@ -124,6 +179,13 @@ def main():
         print(f"  sim network: {transport.transfers} transfers, "
               f"{transport.bytes_sent/1e6:.1f}MB, "
               f"mean hop {transport.mean_delay_s*1e3:.1f}ms")
+    if args.live_reschedule:
+        requeued = sum(h.restarts for h in handles)
+        resident = all(h.engine.params is params
+                       for h in gw.pre + gw.dec)
+        print(f"  live reschedule: epoch {gw.epoch}, "
+              f"P:{len(gw.pre)} D:{len(gw.dec)}, {requeued} requeued "
+              f"through flips, params resident (no reload) = {resident}")
     if gw.events:
         print("  events:", gw.events[:5])
 

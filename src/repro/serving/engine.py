@@ -318,3 +318,74 @@ class DecodeEngine:
                 self.cache["lengths"] = \
                     self.cache["lengths"].at[i].set(0)
         return finished
+
+
+# -- phase-switchable replica -------------------------------------------------
+
+
+class Replica:
+    """One model replica that owns its parameters ONCE and can host either
+    serving role (paper §3.4's core trick: a phase flip re-uses the
+    resident, already-sharded weights — no reload, no restart).
+
+    ``switch_phase()`` constructs (or re-activates) the engine for the
+    other phase around the SAME parameter buffers. Engines are cached per
+    phase, so a replica that flips back re-enters a warm jit cache. A
+    decode replica must be drained (or its requests requeued by the
+    gateway) before flipping — the slotted KV cache does not survive a
+    role change.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 phase: str = "prefill", max_seq: int = 512, rt=None,
+                 prefill_kw: Optional[Dict] = None,
+                 decode_kw: Optional[Dict] = None):
+        if phase not in ("prefill", "decode"):
+            raise ValueError(f"unknown phase {phase!r}")
+        self.cfg = cfg
+        self.params = params
+        self._prefill_kw = {"max_seq": max_seq, "rt": rt,
+                            **(prefill_kw or {})}
+        self._decode_kw = {"max_seq": max_seq, "rt": rt,
+                           **(decode_kw or {})}
+        self._engines: Dict[str, object] = {}
+        self.phase = ""
+        self.switches = 0
+        self.engine = None
+        self._activate(phase)
+
+    def _activate(self, phase: str):
+        if phase not in self._engines:
+            if phase == "prefill":
+                self._engines[phase] = PrefillEngine(self.cfg, self.params,
+                                                     **self._prefill_kw)
+            else:
+                self._engines[phase] = DecodeEngine(self.cfg, self.params,
+                                                    **self._decode_kw)
+        self.engine = self._engines[phase]
+        self.phase = phase
+
+    @property
+    def drained(self) -> bool:
+        """True when no request state would be lost by a phase flip."""
+        return self.phase != "decode" or self.engine.active == 0
+
+    def switch_phase(self, phase: Optional[str] = None):
+        """Flip to ``phase`` (default: the other one) around the resident
+        parameter buffers. Raises if an undrained decode engine would lose
+        in-flight requests — the caller (gateway) drains or requeues them
+        first. Returns the now-active engine."""
+        target = phase or ("decode" if self.phase == "prefill"
+                           else "prefill")
+        if target not in ("prefill", "decode"):
+            raise ValueError(f"unknown phase {target!r}")
+        if target == self.phase:
+            return self.engine
+        if not self.drained:
+            raise RuntimeError(
+                f"cannot flip an undrained {self.phase} replica "
+                f"({self.engine.active} request(s) resident): drain or "
+                f"requeue them first")
+        self._activate(target)
+        self.switches += 1
+        return self.engine

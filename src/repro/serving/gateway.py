@@ -34,7 +34,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
 from repro.core.orchestrator import Orchestration, SloSpec
-from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.engine import (DecodeEngine, GenRequest, PrefillEngine,
+                                  Replica)
 from repro.serving.kv_transfer import KVWire
 from repro.serving.profiler import WorkloadProfiler
 from repro.serving.transport import (InProcessTransport, TransferTicket,
@@ -286,21 +287,98 @@ class LocalDecodeClient:
         return False
 
 
+class LocalReplicaClient:
+    """In-process client around a phase-switchable :class:`Replica`.
+
+    Implements BOTH :class:`PrefillClient` and :class:`DecodeClient`,
+    delegating to whichever engine the replica currently hosts, plus the
+    ``switch_phase`` seam an epoch transition needs. A remote realization
+    would implement the same surface over RPC (the flip is an in-place
+    role change on the remote pod — the paper's no-reload trick — not a
+    redeploy)."""
+
+    synchronous = True      # a blocking call that returns proves liveness
+
+    def __init__(self, replica: Replica):
+        self.replica = replica
+
+    @property
+    def engine(self):
+        return self.replica.engine
+
+    @property
+    def phase(self) -> str:
+        return self.replica.phase
+
+    def switch_phase(self, phase: Optional[str] = None):
+        return self.replica.switch_phase(phase)
+
+    def _require(self, phase: str):
+        if self.replica.phase != phase:
+            raise RuntimeError(
+                f"replica is designated {self.replica.phase!r}, "
+                f"cannot serve a {phase!r} call (stale routing after an "
+                f"epoch transition?)")
+        return self.replica.engine
+
+    # -- PrefillClient -------------------------------------------------------
+
+    def prefill(self, reqs, *, compress, backend):
+        return self._require("prefill").run(reqs, compress=compress,
+                                            backend=backend)
+
+    # -- DecodeClient --------------------------------------------------------
+
+    def admit(self, items, *, backend):
+        return self._require("decode").admit_batch(items, backend=backend)
+
+    def step(self):
+        return self._require("decode").step()
+
+    def n_free(self) -> int:
+        return len(self._require("decode").free_slots())
+
+    @property
+    def active(self) -> int:
+        return self._require("decode").active
+
+    def resident(self):
+        return [r for r in self._require("decode").slots if r is not None]
+
+    def release(self, req) -> bool:
+        eng = self._require("decode")
+        for i, r in enumerate(eng.slots):
+            if r is req:
+                eng.release(i)
+                return True
+        return False
+
+
 def _as_prefill_client(obj) -> PrefillClient:
+    if isinstance(obj, Replica):
+        return LocalReplicaClient(obj)
     return LocalPrefillClient(obj) if isinstance(obj, PrefillEngine) else obj
 
 
 def _as_decode_client(obj) -> DecodeClient:
+    if isinstance(obj, Replica):
+        return LocalReplicaClient(obj)
     return LocalDecodeClient(obj) if isinstance(obj, DecodeEngine) else obj
 
 
 @dataclass
 class ReplicaHandle:
-    """Gateway-side view of one replica: liveness + latency tracking."""
+    """Gateway-side view of one replica: liveness + latency tracking.
+
+    ``group`` is the replica's device-group identity from the deployment
+    plan (the stable key across plan epochs); it is None for plan-less
+    gateways built from bare engine lists, which then cannot take live
+    epoch transitions."""
     idx: int
     phase: str
     client: object
     alive: bool = True
+    group: Optional[Tuple[int, ...]] = None
     last_heartbeat: float = field(default_factory=time.time)
     ema_latency: float = 0.0            # straggler tracking
     min_latency: float = math.inf       # lower bound for deadline shedding
@@ -313,6 +391,10 @@ class ReplicaHandle:
         """Underlying in-process engine, when there is one (local clients
         only — an RPC client has no engine attribute)."""
         return getattr(self.client, "engine", None)
+
+    @property
+    def switchable(self) -> bool:
+        return hasattr(self.client, "switch_phase")
 
 
 @dataclass
@@ -340,25 +422,45 @@ class Gateway:
     def __init__(self, prefills: Sequence, decodes: Sequence, *,
                  transport: Optional[Transport] = None,
                  orchestration: Optional[Orchestration] = None,
-                 compress: bool = True, backend: str = "auto",
-                 heartbeat_timeout: float = 10.0, seed: int = 0):
+                 plan=None, compress: bool = True, backend: str = "auto",
+                 heartbeat_timeout: float = 10.0, seed: int = 0,
+                 profiler: Optional[WorkloadProfiler] = None):
         self.pre = [ReplicaHandle(i, "prefill", _as_prefill_client(e))
                     for i, e in enumerate(prefills)]
         self.dec = [ReplicaHandle(j, "decode", _as_decode_client(e))
                     for j, e in enumerate(decodes)]
         self.transport: Transport = transport or InProcessTransport()
-        self.o = orchestration
+        self.plan = plan                 # current DeploymentPlan, if bound
+        self.epoch = 0                   # bumped by every apply_plan
+        if plan is not None:
+            self._bind_plan_groups(plan)
+        self.o = orchestration if orchestration is not None else (
+            plan.orchestration if plan is not None else None)
         self.compress = compress
         self.backend = backend
         self.heartbeat_timeout = heartbeat_timeout
         self.rng = np.random.default_rng(seed)
-        self.profiler = WorkloadProfiler()
+        self.profiler = profiler or WorkloadProfiler()
         self.queue: List[RequestHandle] = []
         self.transfer_queue: List[_Transfer] = []
         self.done: List[RequestHandle] = []
         self.events: List[str] = []
         self._by_req: Dict[int, RequestHandle] = {}   # id(GenRequest) -> h
         self._decode_outage_reported = False
+
+    def _bind_plan_groups(self, plan):
+        """Tag live replica handles with their plan device groups (matched
+        positionally: i-th prefill handle <-> i-th prefill replica plan)."""
+        if (len(self.pre) != len(plan.prefill_replicas)
+                or len(self.dec) != len(plan.decode_replicas)):
+            raise ValueError(
+                f"plan/replica mismatch: plan has "
+                f"{len(plan.prefill_replicas)}P/{len(plan.decode_replicas)}D,"
+                f" gateway has {len(self.pre)}P/{len(self.dec)}D")
+        for h, r in zip(self.pre, plan.prefill_replicas):
+            h.group = sched._group_key(r.devices)
+        for h, r in zip(self.dec, plan.decode_replicas):
+            h.group = sched._group_key(r.devices)
 
     # -- routing ------------------------------------------------------------
 
@@ -401,6 +503,7 @@ class Gateway:
                              extras=dict(request.extras))
         h = RequestHandle(request, gen, self, on_token=on_token)
         gen.t_submit = h.t_submit
+        self.profiler.record_arrival(h.t_submit)
         self._by_req[id(gen)] = h
         self.queue.append(h)
         return h
@@ -692,38 +795,263 @@ class Gateway:
 
     def refresh_routing_from_latency(self):
         """Bleed traffic away from slow replicas: reweight X/Y by inverse
-        measured latency (keeps the TSTP structure, scales the masses)."""
+        measured latency (keeps the TSTP structure, scales the masses).
+        The ORIGINAL totals are preserved: when the TSTP deliberately shed
+        mass (``Z.sum() < 1``, saturated fleet), renormalizing to 1 would
+        silently route the unserved mass back onto the replicas the solver
+        judged saturated."""
         if self.o is None:
             return
         lat_p = np.array([max(h.ema_latency, 1e-6) for h in self.pre])
         w = (1.0 / lat_p)
         w /= w.sum()
+        x_total = self.o.X.sum()
         X = self.o.X * w
         if X.sum() > 0:
-            self.o.X = X / X.sum()
+            self.o.X = X * (x_total / X.sum())
         lat_d = np.array([max(h.ema_latency, 1e-6) for h in self.dec])
         wd = (1.0 / lat_d)
         wd /= wd.sum()
+        y_totals = self.o.Y.sum(axis=1, keepdims=True)
         Y = self.o.Y * wd[None, :]
         s = Y.sum(axis=1, keepdims=True)
-        self.o.Y = np.where(s > 0, Y / np.maximum(s, 1e-12), self.o.Y)
+        self.o.Y = np.where(s > 0, Y * y_totals / np.maximum(s, 1e-12),
+                            self.o.Y)
+
+    # -- plan epochs: live re-designation ------------------------------------
+
+    def _install_routing(self, o: Optional[Orchestration]) -> bool:
+        """Atomically swap the TSTP masses — only when their dimensions
+        match the live replica lists (the invariant every epoch ends on)."""
+        if (o is not None and o.X.shape[0] == len(self.pre)
+                and o.Y.shape == (len(self.pre), len(self.dec))):
+            self.o = o
+            return True
+        return False
+
+    def _is_plan_bound(self) -> bool:
+        return (self.plan is not None
+                and all(h.group is not None for h in self.pre + self.dec))
+
+    def apply_plan(self, delta) -> int:
+        """Transition the running gateway to a new plan epoch.
+
+        ``delta`` is a :class:`~repro.core.scheduler.PlanDelta` (or a new
+        ``DeploymentPlan``, diffed against the bound plan). For each group
+        in the delta, the live replica:
+
+        * **keeps phase** — untouched (requests in flight stay in flight);
+        * **flips** — new work stops routing to it (it leaves the routing
+          tables this call rebuilds), in-flight decode requests are
+          requeued through the existing failure path (DECODING -> QUEUED,
+          tokens kept, regenerated prefix suppressed), then
+          ``switch_phase()`` re-roles the RESIDENT parameters — no reload;
+        * **died** — marked dead, its requests requeued (node failure
+          composes as ``drop_nodes`` -> ``reschedule_lightweight`` ->
+          ``plan_diff`` -> here).
+
+        The new routing masses are installed only once the ``pre``/``dec``
+        lists match the new plan's dimensions, so routing never sees a
+        half-applied epoch. Returns the number of requeued requests."""
+        if not isinstance(delta, sched.PlanDelta):
+            if self.plan is None:
+                raise ValueError("apply_plan needs a PlanDelta (or a plan-"
+                                 "bound gateway to diff a new plan against)")
+            delta = sched.plan_diff(self.plan, delta)
+        if delta.added:
+            raise ValueError(
+                f"apply_plan cannot materialize replicas for new groups "
+                f"{[list(g) for g, _ in delta.added]}: a live epoch "
+                f"transition only re-designates resident replicas (run a "
+                f"full redeploy for new groups)")
+        now = time.time()
+        by_group: Dict[Tuple[int, ...], ReplicaHandle] = {}
+        for h in self.pre + self.dec:
+            if h.group is None:
+                raise ValueError(
+                    "apply_plan requires group-tagged replicas: construct "
+                    "the gateway with plan= (or via gateway_from_plan)")
+            by_group[h.group] = h
+        old_dec = list(self.dec)
+        n_requeued = 0
+        # 1. drain flipping/dying decode replicas through the requeue path
+        for g, old_ph, _new_ph in delta.flips:
+            h = by_group.get(g)
+            if h is not None and old_ph == "decode" and h.alive:
+                n_requeued += self._requeue_resident(
+                    h, now, f"phase flip decode->prefill on {list(g)}")
+        for g, ph in delta.dropped:
+            h = by_group.pop(g, None)
+            if h is None:
+                continue
+            if h.alive:
+                if ph == "decode":
+                    n_requeued += self._requeue_resident(
+                        h, now, f"group {list(g)} dropped")
+                h.alive = False
+            self.events.append(f"epoch {self.epoch + 1}: replica "
+                               f"{ph}:{list(g)} dropped from plan")
+        # 2. flip the drained replicas around their resident params
+        for g, _old_ph, new_ph in delta.flips:
+            h = by_group.get(g)
+            if h is None:
+                continue
+            if not h.switchable:
+                raise TypeError(
+                    f"replica {h.phase}:{h.idx} (group {list(g)}) cannot "
+                    f"switch phase: wrap the engine in a Replica to make "
+                    f"it live-redesignatable")
+            if h.alive:
+                h.client.switch_phase(new_ph)
+            h.phase = new_ph
+        # 3. rebuild the live lists in the new plan's replica order
+        new_pre, new_dec = [], []
+        for r in delta.new_plan.prefill_replicas:
+            h = by_group[sched._group_key(r.devices)]
+            h.idx, h.phase = len(new_pre), "prefill"
+            new_pre.append(h)
+        for r in delta.new_plan.decode_replicas:
+            h = by_group[sched._group_key(r.devices)]
+            h.idx, h.phase = len(new_dec), "decode"
+            new_dec.append(h)
+        self.pre, self.dec = new_pre, new_dec
+        # 4. retarget in-flight KV transfers (decode indices changed; some
+        #    targets may have flipped away or died)
+        new_idx = {id(h): j for j, h in enumerate(self.dec)}
+        alive = [j for j, d in enumerate(self.dec) if d.alive]
+        for t in self.transfer_queue:
+            h_old = (old_dec[t.target] if t.target < len(old_dec) else None)
+            j = new_idx.get(id(h_old)) if h_old is not None else None
+            if j is None or not self.dec[j].alive:
+                j = (max(alive, key=lambda jj: self.dec[jj].client.n_free())
+                     if alive else 0)
+            t.target = j
+        # 5. rebuild the transport link table from the new replica->device
+        #    map, then atomically install the new routing masses
+        if hasattr(self.transport, "rebind_plan"):
+            self.transport.rebind_plan(delta.new_plan)
+        installed = self._install_routing(delta.new_plan.orchestration)
+        if not installed:
+            # solver produced no orchestration (or a stale-dimension one):
+            # fall back to alive-uniform routing rather than keeping masses
+            # indexed against replicas that no longer exist
+            self.o = None
+        self.plan = delta.new_plan
+        self.epoch += 1
+        self.events.append(
+            f"epoch {self.epoch}: applied plan delta ({delta.describe()}); "
+            f"{n_requeued} request(s) requeued, routing "
+            f"{'installed' if installed else 'uniform (no orchestration)'}, "
+            f"P:{len(self.pre)} D:{len(self.dec)}")
+        return n_requeued
+
+    def _requeue_resident(self, h: ReplicaHandle, now: float,
+                          why: str) -> int:
+        """Requeue every request resident on a decode replica (the same
+        path decode-replica death takes): KV is dropped, tokens already
+        delivered are kept, the fresh attempt's regenerated prefix is
+        suppressed by ``_sync_tokens``."""
+        n = 0
+        for req in list(h.client.resident()):
+            h.client.release(req)
+            hd = self._by_req[id(req)]
+            hd._requeue(now)
+            self.queue.append(hd)
+            self.events.append(f"request {req.rid} re-queued: {why}")
+            n += 1
+        return n
 
     # -- workload shift -> lightweight rescheduling --------------------------
 
-    def maybe_reschedule(self, cluster, cfg: ModelConfig, plan, rate: float,
-                         slo: SloSpec):
+    def maybe_reschedule(self, cluster, cfg: ModelConfig, plan=None,
+                         rate: Optional[float] = None,
+                         slo: Optional[SloSpec] = None, *,
+                         search_fn=None):
+        """Profiler-gated lightweight rescheduling (paper §3.4).
+
+        When the profiler reports a workload shift, re-solves phase
+        designation + TSTP for the OBSERVED workload and arrival rate (the
+        caller-supplied ``rate`` is only a fallback for an empty window)
+        and applies the result to the running gateway as a plan epoch
+        (plan-bound gateways flip live replicas; legacy plan-less gateways
+        just install the masses, and only when dimensions match).
+        ``search_fn`` (same signature as
+        :func:`repro.core.scheduler.reschedule_lightweight`) lets tests
+        and drivers pin the search."""
+        plan = plan if plan is not None else self.plan
+        if plan is None:
+            raise ValueError("maybe_reschedule needs a plan: pass one or "
+                             "bind the gateway with plan=")
+        if slo is None:
+            raise ValueError("maybe_reschedule needs an SloSpec")
         if not self.profiler.shift_detected():
             return None
         wl = self.profiler.as_workload()
-        new_plan = sched.reschedule_lightweight(cluster, cfg, plan, wl, rate,
-                                                slo)
-        self.o = new_plan.orchestration
+        stats = self.profiler.stats()
+        if wl is None or stats is None:
+            # fewer than 8 records in the window: the shift signal cannot
+            # be trusted and there is no workload to re-plan for
+            return None
+        # offered load, measured at submit: under saturation (when a
+        # reschedule matters most) the completion rate is capped by the
+        # stale plan's capacity and would underestimate the true demand
+        obs_rate = self.profiler.arrival_rate()
+        if obs_rate is None or obs_rate <= 0:
+            obs_rate = stats.rate if stats.rate > 0 else float(rate or 0.0)
+        search = search_fn or sched.reschedule_lightweight
+        new_plan = search(cluster, cfg, plan, wl, obs_rate, slo)
+        delta = sched.plan_diff(plan, new_plan)
+        if self._is_plan_bound():
+            if delta.is_noop:
+                # same designation, fresh masses for the observed workload:
+                # a routing refresh, not a full epoch transition
+                self._install_routing(new_plan.orchestration)
+                self.plan = new_plan
+            else:
+                self.apply_plan(delta)
+        else:
+            if not self._install_routing(new_plan.orchestration):
+                self.events.append(
+                    "routing masses not installed: plan dimensions "
+                    f"({len(new_plan.prefill_replicas)}P/"
+                    f"{len(new_plan.decode_replicas)}D) do not match the "
+                    f"live replicas ({len(self.pre)}P/{len(self.dec)}D) "
+                    "and this gateway is not plan-bound")
+            self.plan = new_plan
         self.profiler.set_baseline()
         self.events.append(
             f"lightweight rescheduling: {new_plan.search_seconds:.2f}s, "
+            f"observed rate {obs_rate:.2f}/s, "
             f"P:{len(new_plan.prefill_replicas)} "
-            f"D:{len(new_plan.decode_replicas)}")
+            f"D:{len(new_plan.decode_replicas)} ({delta.describe()})")
         return new_plan
+
+
+# -- plan-bound construction --------------------------------------------------
+
+
+def gateway_from_plan(plan, cfg: ModelConfig, params, *,
+                      transport: Optional[Transport] = None,
+                      max_seq: int = 64, max_slots: int = 4,
+                      chunk_size: int = 4, rt=None,
+                      prefill_kw: Optional[Dict] = None,
+                      decode_kw: Optional[Dict] = None,
+                      **gw_kw) -> Gateway:
+    """Instantiate one phase-switchable :class:`Replica` per plan replica
+    (all sharing ``params`` — the in-process stand-in for each group's
+    resident sharded weights) and bind the gateway to the plan, so
+    ``apply_plan`` / ``maybe_reschedule`` can run live epoch transitions.
+    Engine kwargs are shared by every replica; per-phase extras go in
+    ``prefill_kw`` / ``decode_kw``."""
+    dkw = {"max_slots": max_slots, "chunk_size": chunk_size,
+           **(decode_kw or {})}
+    pres = [Replica(cfg, params, phase="prefill", max_seq=max_seq, rt=rt,
+                    prefill_kw=prefill_kw, decode_kw=dkw)
+            for _ in plan.prefill_replicas]
+    decs = [Replica(cfg, params, phase="decode", max_seq=max_seq, rt=rt,
+                    prefill_kw=prefill_kw, decode_kw=dkw)
+            for _ in plan.decode_replicas]
+    return Gateway(pres, decs, transport=transport, plan=plan, **gw_kw)
 
 
 # -- open-loop driving helpers ------------------------------------------------
@@ -757,11 +1085,18 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
                                                           ServeRequest]], *,
                     time_scale: float = 1.0, max_iters: int = 200000,
                     on_token: Optional[Callable[[RequestHandle, int], None]]
-                    = None) -> List[RequestHandle]:
+                    = None,
+                    tick: Optional[Callable[[Gateway], None]] = None,
+                    tick_interval_s: float = 0.25) -> List[RequestHandle]:
     """Open-loop driver: submit each request at its trace arrival time
     (scaled by ``time_scale``) against the wall clock, pumping the gateway
     between arrivals, then drain. This is how a service is actually driven
     — dumping the whole trace at t=0 makes every E2E number meaningless.
+
+    ``tick`` is the control-plane hook: it fires at most every
+    ``tick_interval_s`` of wall time with the gateway as argument — the
+    place to run ``maybe_reschedule`` / ``refresh_routing_from_latency``
+    (or inject failures) against live traffic.
     """
     pending = sorted(arrivals, key=lambda a: a[0])
     gw.heartbeat_all()      # time spent in setup/warmup is not a failure
@@ -769,8 +1104,12 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
     handles: List[RequestHandle] = []
     i = 0
     it = 0
+    last_tick = t0
     while i < len(pending) or gw.queue or gw.transfer_queue \
             or any(d.alive and d.client.active for d in gw.dec):
+        if tick is not None and time.time() - last_tick >= tick_interval_s:
+            tick(gw)
+            last_tick = time.time()
         now = time.time() - t0
         while i < len(pending) and pending[i][0] * time_scale <= now:
             handles.append(gw.submit(pending[i][1], on_token=on_token))

@@ -21,15 +21,42 @@ class WindowStats:
 
 
 class WorkloadProfiler:
-    def __init__(self, *, window: int = 200, shift_threshold: float = 0.4):
+    """Sliding windows over COMPLETIONS (lengths, via ``record``) and
+    ARRIVALS (via ``record_arrival``). The two are kept apart because they
+    answer different questions: length statistics exist only once a
+    request finishes, but the offered load must be measured at submit time
+    — under saturation (exactly when rescheduling matters) the completion
+    rate is capped by the stale plan's capacity and badly underestimates
+    the arrival rate.
+
+    ``in_scale``/``out_scale`` map observed token counts back to the
+    workload the COST MODEL should see — e.g. a reduced-config engine
+    serving 1/32-scale prompts sets ``in_scale=32`` so ``as_workload()``
+    describes the full-model trace."""
+
+    def __init__(self, *, window: int = 200, shift_threshold: float = 0.4,
+                 in_scale: float = 1.0, out_scale: float = 1.0):
         self.window = window
         self.shift_threshold = shift_threshold
+        self.in_scale = in_scale
+        self.out_scale = out_scale
         self._records: Deque[Tuple[float, int, int]] = deque(maxlen=window)
+        self._arrivals: Deque[float] = deque(maxlen=window)
         self._baseline: Optional[WindowStats] = None
 
     def record(self, n_in: int, n_out: int, t: Optional[float] = None):
         self._records.append((t if t is not None else time.time(),
                               n_in, n_out))
+
+    def record_arrival(self, t: Optional[float] = None):
+        self._arrivals.append(t if t is not None else time.time())
+
+    def arrival_rate(self) -> Optional[float]:
+        """Offered load over the arrival window; None until 8 arrivals."""
+        if len(self._arrivals) < 8:
+            return None
+        dur = max(self._arrivals[-1] - self._arrivals[0], 1e-9)
+        return len(self._arrivals) / dur
 
     def stats(self) -> Optional[WindowStats]:
         if len(self._records) < 8:
@@ -44,6 +71,13 @@ class WorkloadProfiler:
 
     def set_baseline(self):
         self._baseline = self.stats()
+
+    @property
+    def has_baseline(self) -> bool:
+        """True once a baseline window is pinned — until then
+        ``shift_detected`` can never fire (drivers call ``set_baseline``
+        as soon as the first window fills)."""
+        return self._baseline is not None
 
     def shift_detected(self) -> bool:
         """Relative change in mean output (or input) length beyond threshold.
@@ -62,7 +96,10 @@ class WorkloadProfiler:
                 or rel(cur.mean_in, b.mean_in) > self.shift_threshold)
 
     def as_workload(self, name: str = "observed") -> Optional[Workload]:
+        """Observed window as a cost-model workload, with the configured
+        engine->full-model scale applied."""
         s = self.stats()
         if s is None:
             return None
-        return Workload(name, mean_in=s.mean_in, mean_out=s.mean_out)
+        return Workload(name, mean_in=s.mean_in * self.in_scale,
+                        mean_out=s.mean_out * self.out_scale)

@@ -122,6 +122,16 @@ class SimNetworkTransport:
                    decode_devices=[r.devices for r in plan.decode_replicas],
                    **kw)
 
+    def rebind_plan(self, plan) -> None:
+        """Rebuild the replica->device link table for a new plan epoch:
+        after a live re-designation the (prefill i, decode j) indices name
+        different device groups, so every cached alpha-beta link is stale.
+        Accounting (transfers/bytes/min_delay) is cumulative across epochs
+        and intentionally survives."""
+        self.pre_devices = [list(r.devices) for r in plan.prefill_replicas]
+        self.dec_devices = [list(r.devices) for r in plan.decode_replicas]
+        self._links.clear()
+
     def link(self, src_replica: int, dst_replica: int) -> Tuple[float, float]:
         """(alpha_s, bandwidth_Bps) for one prefill->decode link."""
         key = (src_replica, dst_replica)

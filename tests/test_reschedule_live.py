@@ -1,0 +1,425 @@
+"""Live replica re-designation: plan epochs applied to a running Gateway.
+
+Covers the §3.4 closing-the-loop refactor — `plan_diff`/`PlanDelta`,
+`LowerLevelSolver.seed`, phase-switchable `Replica`s, and
+`Gateway.apply_plan` epoch transitions: in-flight requests on a flipping
+decode replica are requeued and complete with zero token loss, routing
+dimensions always match the live replica lists, parameters are never
+reloaded, node failure composes as drop_nodes -> delta -> apply_plan, and
+the profiler-gated `maybe_reschedule` path (observed rate, empty-window
+guard). Plus the shed-mass-preserving routing refresh regression."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced
+from repro.core import parallel as par
+from repro.core import scheduler, tabu
+from repro.core.cluster import make_paper_cloud
+from repro.core.orchestrator import Orchestration, SloSpec
+from repro.core.workload import CONVERSATION
+from repro.models import build
+from repro.serving.engine import DecodeEngine, PrefillEngine, Replica
+from repro.serving.gateway import (DECODING, DONE, QUEUED, Gateway,
+                                   ServeRequest, gateway_from_plan)
+from repro.serving.transport import SimNetworkTransport
+
+CFG_FULL = get_config("llama-30b")
+SLO = SloSpec(ttft_s=2.0, tpot_s=0.15, e2e_s=30.0)
+
+# four groups on the paper cloud, each big enough to hold LLaMA-30B:
+# 2x A6000 nodes, the paired A5000 nodes, the A40 node
+GROUPS = ((0, 1, 2, 3), (4, 5, 6, 7), tuple(range(8, 16)),
+          tuple(range(16, 24)))
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return make_paper_cloud()
+
+
+@pytest.fixture(scope="module")
+def solver(cluster):
+    return scheduler.LowerLevelSolver(cluster, CFG_FULL, CONVERSATION, 2.0,
+                                      SLO)
+
+
+def _mk_plan(solver, phases):
+    sol = tabu.Solution(GROUPS, tuple(phases))
+    score, replicas, o = solver.solve(sol)
+    assert replicas, "manual solution must deduce"
+    return scheduler.DeploymentPlan(solution=sol, replicas=replicas,
+                                    orchestration=o, score=score)
+
+
+@pytest.fixture(scope="module")
+def plan_a(solver):
+    return _mk_plan(solver, ("prefill", "prefill", "decode", "decode"))
+
+
+@pytest.fixture(scope="module")
+def plan_b(solver):
+    # both decodes flip to prefill and vice versa: every in-flight decode
+    # request must cross the requeue path
+    return _mk_plan(solver, ("decode", "decode", "prefill", "prefill"))
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompt(cfg, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+def _routing_dims_match(gw):
+    if gw.o is None:
+        return True       # uniform alive routing has no dimensions to break
+    return (gw.o.X.shape[0] == len(gw.pre)
+            and gw.o.Y.shape == (len(gw.pre), len(gw.dec)))
+
+
+# -- scheduler layer ----------------------------------------------------------
+
+
+def test_plan_diff_flips_kept_dropped_added(solver, plan_a, plan_b):
+    delta = scheduler.plan_diff(plan_a, plan_b)
+    assert len(delta.flips) == 4 and not delta.kept
+    assert not delta.dropped and not delta.added and not delta.is_noop
+    flips = {g: (a, b) for g, a, b in delta.flips}
+    assert flips[GROUPS[0]] == ("prefill", "decode")
+    assert flips[GROUPS[2]] == ("decode", "prefill")
+    # identical plans diff to a no-op
+    assert scheduler.plan_diff(plan_a, plan_a).is_noop
+    # a shrunk plan reports the missing group as dropped
+    shrunk_sol = tabu.Solution(GROUPS[:3], ("prefill", "prefill", "decode"))
+    score, reps, o = solver.solve(shrunk_sol)
+    shrunk = scheduler.DeploymentPlan(solution=shrunk_sol, replicas=reps,
+                                      orchestration=o, score=score)
+    d2 = scheduler.plan_diff(plan_a, shrunk)
+    assert d2.dropped == [(GROUPS[3], "decode")]
+    assert scheduler.plan_diff(shrunk, plan_a).added == \
+        [(GROUPS[3], "decode")]
+
+
+def test_solver_seed_freezes_deductions(cluster, plan_a, monkeypatch):
+    s = scheduler.LowerLevelSolver(cluster, CFG_FULL, CONVERSATION, 2.0,
+                                   SLO)
+    s.seed(plan_a)
+
+    def boom(*a, **kw):
+        raise AssertionError("seeded groups must never re-deduce")
+
+    monkeypatch.setattr(par, "deduce", boom)
+    for r in plan_a.replicas:
+        for ph in ("prefill", "decode"):
+            got = s.deduce(tuple(r.devices), ph)
+            assert got is not None and got[0] is r.pc
+
+
+def test_drop_nodes_drops_groups_outright(solver, plan_a, cluster):
+    """Regression pin for the intended semantics: a group losing ANY
+    device leaves the solution entirely — its surviving devices are NOT
+    folded into other groups (that would re-shard resident params)."""
+    dead = [GROUPS[2][0]]          # one device of the third group
+    shrunk = scheduler.drop_nodes(cluster, plan_a, dead)
+    assert shrunk.groups == (GROUPS[0], GROUPS[1], GROUPS[3])
+    assert shrunk.phases == ("prefill", "prefill", "decode")
+    survivors = set(GROUPS[2]) - set(dead)
+    for g in shrunk.groups:
+        assert not (set(g) & survivors), \
+            "survivors of a dropped group must not be re-absorbed"
+
+
+# -- engine layer -------------------------------------------------------------
+
+
+def test_replica_switch_phase_keeps_param_buffers(small_model):
+    cfg, params = small_model
+    rep = Replica(cfg, params, phase="prefill", max_seq=64,
+                  decode_kw=dict(max_slots=2, chunk_size=2))
+    leaves_before = [id(x) for x in jax.tree_util.tree_leaves(params)]
+    assert isinstance(rep.engine, PrefillEngine)
+    rep.switch_phase()
+    assert isinstance(rep.engine, DecodeEngine) and rep.phase == "decode"
+    assert rep.engine.params is params, "flip must re-use resident params"
+    assert [id(x) for x in jax.tree_util.tree_leaves(rep.engine.params)] \
+        == leaves_before, "no parameter buffer may be copied or reloaded"
+    # flipping back re-enters the cached (warm) engine
+    pre = rep._engines["prefill"]
+    rep.switch_phase("prefill")
+    assert rep.engine is pre and rep.switches == 2
+
+
+def test_replica_refuses_undrained_flip(small_model):
+    cfg, params = small_model
+    rep = Replica(cfg, params, phase="decode", max_seq=64,
+                  decode_kw=dict(max_slots=2, chunk_size=2))
+    from repro.serving.engine import GenRequest
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    req = GenRequest(0, _prompt(cfg), max_new_tokens=8)
+    for r, w, f in pre.run([req], compress=True, backend="ref"):
+        assert rep.engine.admit(r, w, f, backend="ref")
+    assert not rep.drained
+    with pytest.raises(RuntimeError, match="undrained"):
+        rep.switch_phase()
+    rep.engine.release(0)
+    assert rep.drained
+    rep.switch_phase()          # drained: flip succeeds
+    assert rep.phase == "prefill"
+
+
+# -- gateway layer: epoch transitions ----------------------------------------
+
+
+def test_apply_plan_epoch_transition_no_token_loss(small_model, plan_a,
+                                                   plan_b):
+    """The acceptance scenario in miniature: a full phase swap applied to
+    a running gateway — in-flight decode requests requeue and complete
+    (QUEUED -> ... -> DONE, exact token counts, no duplicate streaming),
+    routing dimensions match the live lists at every point, and no
+    parameter buffer is reloaded."""
+    cfg, params = small_model
+    gw = gateway_from_plan(plan_a, cfg, params, max_seq=64, max_slots=4,
+                           chunk_size=2, backend="ref")
+    assert _routing_dims_match(gw) and gw.epoch == 0
+    streamed = {}
+
+    def count(h, tok):
+        streamed[h.request.rid] = streamed.get(h.request.rid, 0) + 1
+
+    hs = [gw.submit(ServeRequest(i, _prompt(cfg, 8 + 2 * (i % 3), seed=i),
+                                 max_new_tokens=16), on_token=count)
+          for i in range(6)]
+    while not any(h.state == DECODING for h in hs):
+        gw.pump()
+    in_flight = [h for h in hs if h.state == DECODING]
+    assert in_flight, "need live decode traffic to flip under"
+    leaf_ids = {id(x) for x in jax.tree_util.tree_leaves(params)}
+
+    delta = scheduler.plan_diff(plan_a, plan_b)
+    n_requeued = gw.apply_plan(delta)
+
+    assert gw.epoch == 1
+    assert n_requeued == len(in_flight)
+    for h in in_flight:
+        assert h.state == QUEUED and h.restarts == 1
+        assert [s for _, s in h.history[-2:]] == [DECODING, QUEUED]
+    # dimensions + designation reflect the new plan immediately
+    assert _routing_dims_match(gw) and gw.o is not None
+    assert {h.group for h in gw.pre} == {GROUPS[2], GROUPS[3]}
+    assert {h.group for h in gw.dec} == {GROUPS[0], GROUPS[1]}
+    for h in gw.pre + gw.dec:
+        assert h.client.phase == h.phase
+    # the no-reload invariant: every engine still points at the SAME
+    # parameter buffers it was constructed with
+    for h in gw.pre + gw.dec:
+        assert {id(x) for x in
+                jax.tree_util.tree_leaves(h.engine.params)} == leaf_ids
+
+    gw.run_until_drained()
+    assert all(h.state == DONE and len(h.tokens) == 16 for h in hs), \
+        [h.state for h in hs]
+    # zero token loss AND zero duplicates through the requeue
+    assert streamed == {i: 16 for i in range(6)}
+    assert _routing_dims_match(gw)
+    assert any(e.startswith("epoch 1:") for e in gw.events)
+
+
+def test_apply_plan_rejects_added_groups_and_untagged(small_model, plan_a,
+                                                      plan_b, solver):
+    cfg, params = small_model
+    gw = gateway_from_plan(plan_a, cfg, params, max_seq=64, max_slots=2,
+                           chunk_size=2, backend="ref")
+    grown_sol = tabu.Solution(GROUPS + (tuple(range(24, 32)),),
+                              plan_a.solution.phases + ("decode",))
+    score, reps, o = solver.solve(grown_sol)
+    grown = scheduler.DeploymentPlan(solution=grown_sol, replicas=reps,
+                                     orchestration=o, score=score)
+    with pytest.raises(ValueError, match="cannot materialize"):
+        gw.apply_plan(scheduler.plan_diff(plan_a, grown))
+    # plan-less gateways cannot take epochs at all
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    dec = DecodeEngine(cfg, params, max_slots=2, max_seq=64)
+    bare = Gateway([pre], [dec], backend="ref")
+    with pytest.raises(ValueError, match="group-tagged"):
+        bare.apply_plan(scheduler.plan_diff(plan_a, plan_b))
+
+
+def test_apply_plan_rebinds_sim_transport(small_model, plan_a, plan_b,
+                                          cluster):
+    cfg, params = small_model
+    tr = SimNetworkTransport.from_plan(cluster, plan_a)
+    gw = gateway_from_plan(plan_a, cfg, params, transport=tr, max_seq=64,
+                           max_slots=2, chunk_size=2, backend="ref")
+    tr.link(0, 0)
+    assert tr.pre_devices == [list(r.devices)
+                              for r in plan_a.prefill_replicas]
+    gw.apply_plan(scheduler.plan_diff(plan_a, plan_b))
+    assert tr.pre_devices == [list(r.devices)
+                              for r in plan_b.prefill_replicas]
+    assert tr.dec_devices == [list(r.devices)
+                              for r in plan_b.decode_replicas]
+    # the cached alpha-beta entries were dropped with the old epoch's
+    # indices; the lazily rebuilt (0,0) link crosses the NEW groups
+    assert not tr._links
+    _, bw = tr.link(0, 0)
+    assert bw == pytest.approx(cluster.min_bw_between(
+        plan_b.prefill_replicas[0].devices,
+        plan_b.decode_replicas[0].devices))
+    gw.run_until_drained()
+
+
+def test_node_failure_reschedule_mid_trace(small_model, plan_a, cluster,
+                                           solver):
+    """drop_nodes -> lightweight reschedule -> plan_diff -> apply_plan on
+    a gateway with traffic in flight: the dead group's requests requeue,
+    the trace finishes on the survivors."""
+    cfg, params = small_model
+    gw = gateway_from_plan(plan_a, cfg, params, max_seq=64, max_slots=4,
+                           chunk_size=2, backend="ref")
+    hs = [gw.submit(ServeRequest(i, _prompt(cfg, 10, seed=i),
+                                 max_new_tokens=12)) for i in range(5)]
+    while not any(h.state == DECODING for h in hs):
+        gw.pump()
+    dead_group = gw.dec[0].group
+    shrunk = scheduler.drop_nodes(cluster, plan_a, list(dead_group))
+    new_plan = scheduler.reschedule_lightweight(
+        cluster, CFG_FULL, plan_a, CONVERSATION, 2.0, SLO,
+        init_solution=shrunk)
+    delta = scheduler.plan_diff(plan_a, new_plan)
+    assert any(g == dead_group for g, _ in delta.dropped)
+    gw.apply_plan(delta)
+    assert gw.epoch == 1 and _routing_dims_match(gw)
+    assert all(h.group != dead_group for h in gw.pre + gw.dec)
+    assert len(gw.pre) + len(gw.dec) == 3
+    gw.run_until_drained()
+    assert all(h.state == DONE and len(h.tokens) == 12 for h in hs), \
+        [h.state for h in hs]
+
+
+def test_live_workload_shift_end_to_end(small_model, plan_a, plan_b,
+                                        cluster):
+    """Acceptance: a workload-shift trace through the real Gateway
+    triggers shift detection; `maybe_reschedule` applies a phase-flip
+    plan to the running service with no restart, no parameter reload,
+    and zero dropped in-flight requests."""
+    cfg, params = small_model
+    gw = gateway_from_plan(plan_a, cfg, params, max_seq=64, max_slots=4,
+                           chunk_size=2, backend="ref")
+    leaf_ids = {id(x) for x in jax.tree_util.tree_leaves(params)}
+    # phase 1: short-output traffic -> baseline
+    first = [gw.submit(ServeRequest(i, _prompt(cfg, 10, seed=i),
+                                    max_new_tokens=3)) for i in range(10)]
+    gw.run_until_drained()
+    assert all(h.state == DONE for h in first)
+    gw.profiler.set_baseline()
+    assert not gw.profiler.shift_detected()
+    # phase 2: long-output traffic; keep some of it in flight
+    second = [gw.submit(ServeRequest(100 + i, _prompt(cfg, 10, seed=i),
+                                     max_new_tokens=12)) for i in range(8)]
+    while sum(h.state == DONE for h in second) < 4:
+        gw.pump()
+    third = [gw.submit(ServeRequest(200 + i, _prompt(cfg, 10, seed=i),
+                                    max_new_tokens=12)) for i in range(4)]
+    assert gw.profiler.shift_detected(), "mean_out 3 -> 12 must register"
+
+    new_plan = gw.maybe_reschedule(
+        cluster, CFG_FULL, rate=2.0, slo=SLO,
+        search_fn=lambda *a, **kw: plan_b)
+    assert new_plan is plan_b and gw.epoch == 1
+    assert _routing_dims_match(gw)
+    assert {h.group for h in gw.dec} == {GROUPS[0], GROUPS[1]}
+    for h in gw.pre + gw.dec:       # no reload, no restart
+        assert {id(x) for x in
+                jax.tree_util.tree_leaves(h.engine.params)} == leaf_ids
+    gw.run_until_drained()
+    done = [h for h in first + second + third]
+    assert all(h.state == DONE for h in done), [h.state for h in done]
+    assert all(len(h.tokens) == 12 for h in second + third)
+    assert any("lightweight rescheduling" in e for e in gw.events)
+
+
+# -- satellite regressions ----------------------------------------------------
+
+
+def test_maybe_reschedule_survives_empty_profiler(small_model, plan_a,
+                                                  cluster):
+    """A shift signal with fewer than 8 window records must be a no-op,
+    not a crash (`as_workload()` returns None)."""
+    cfg, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    dec = DecodeEngine(cfg, params, max_slots=2, max_seq=64)
+    gw = Gateway([pre], [dec], backend="ref")
+    gw.profiler.shift_detected = lambda: True          # force the signal
+    assert gw.profiler.as_workload() is None
+    out = gw.maybe_reschedule(cluster, CFG_FULL, plan_a, 2.0, SLO)
+    assert out is None and gw.epoch == 0
+
+
+def test_maybe_reschedule_uses_observed_rate(small_model, plan_a, cluster):
+    cfg, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    dec = DecodeEngine(cfg, params, max_slots=2, max_seq=64)
+    gw = Gateway([pre], [dec], backend="ref")
+    for i in range(10):
+        gw.profiler.record(1024, 16, t=float(i))
+    gw.profiler.set_baseline()
+    for i in range(30):
+        gw.profiler.record(1024, 140, t=float(10 + i))
+    seen = {}
+
+    def capture(cluster_, cfg_, plan_, wl_, rate_, slo_):
+        seen["rate"], seen["wl"] = rate_, wl_
+        return plan_
+
+    stale_rate = 99.0
+    out = gw.maybe_reschedule(cluster, CFG_FULL, plan_a, stale_rate, SLO,
+                              search_fn=capture)
+    assert out is plan_a
+    observed = 40 / 39.0            # 40 records over 39 seconds
+    assert seen["rate"] == pytest.approx(observed, rel=0.01)
+    assert seen["rate"] != stale_rate
+    assert seen["wl"].mean_out > 100        # the observed window, not stale
+
+
+def test_refresh_routing_preserves_shed_mass(small_model):
+    """When the TSTP shed mass (X.sum() < 1), the latency reweight must
+    NOT renormalize the unserved mass back onto saturated replicas."""
+    cfg, params = small_model
+
+    class _Dummy:                   # routing-only: never pumped
+        pass
+
+    o = Orchestration(X=np.array([0.45, 0.15]),
+                      Y=np.array([[0.7, 0.3], [0.5, 0.5]]),
+                      Z=np.zeros((2, 2)), D=np.ones((2, 2)),
+                      attainment=0.6, served_frac=0.6)
+    gw = Gateway([_Dummy(), _Dummy()], [_Dummy(), _Dummy()],
+                 orchestration=o, backend="ref")
+    gw.pre[0].ema_latency = 0.01
+    gw.pre[1].ema_latency = 0.10    # straggler
+    gw.dec[0].ema_latency = 0.02
+    gw.dec[1].ema_latency = 0.20    # straggler
+    gw.refresh_routing_from_latency()
+    assert o.X.sum() == pytest.approx(0.60), \
+        "shed mass must stay shed after the reweight"
+    assert o.X[0] > o.X[1], "traffic must shift toward the fast prefill"
+    for i in range(2):
+        assert o.Y[i].sum() == pytest.approx(1.0)
+    assert o.Y[0, 0] > 0.7, "decode mass must shift toward the fast replica"
+
+
+def test_gateway_from_plan_binds_groups(small_model, plan_a):
+    cfg, params = small_model
+    gw = gateway_from_plan(plan_a, cfg, params, max_seq=64, max_slots=2,
+                           chunk_size=2, backend="ref")
+    assert [h.group for h in gw.pre] == [GROUPS[0], GROUPS[1]]
+    assert [h.group for h in gw.dec] == [GROUPS[2], GROUPS[3]]
+    assert all(h.switchable for h in gw.pre + gw.dec)
+    assert gw.plan is plan_a and gw.o is plan_a.orchestration
