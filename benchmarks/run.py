@@ -21,10 +21,10 @@ def main() -> None:
 
     from benchmarks import (bench_case_study, bench_kernels,
                             bench_kv_compression, bench_network_effect,
-                            bench_ratio_sweep, bench_rescheduling,
-                            bench_scheduling_time, bench_serving_api,
-                            bench_simulator_accuracy, bench_slo_attainment,
-                            bench_throughput)
+                            bench_paged_kv, bench_ratio_sweep,
+                            bench_rescheduling, bench_scheduling_time,
+                            bench_serving_api, bench_simulator_accuracy,
+                            bench_slo_attainment, bench_throughput)
 
     suites = {
         "slo": (bench_slo_attainment, "Fig 7-8 SLO attainment"),
@@ -34,6 +34,8 @@ def main() -> None:
         "sched_time": (bench_scheduling_time, "Fig 10 scheduling time"),
         "rescheduling": (bench_rescheduling,
                          "Fig 11/Table 4 rescheduling (sim + live flip)"),
+        "paged_kv": (bench_paged_kv,
+                     "paged int4-resident KV: capacity + tok/s vs dense"),
         "kvcomp": (bench_kv_compression, "Fig 12/18, Tables 2/8 KV comp"),
         "ratio": (bench_ratio_sweep, "Fig 6/14 prefill:decode ratio"),
         "network": (bench_network_effect, "Table 5 network effect"),

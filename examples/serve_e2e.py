@@ -42,6 +42,14 @@ def main():
                     help="per-request TTFT deadline in s (0 = none)")
     ap.add_argument("--e2e-slo", type=float, default=0.0,
                     help="per-request E2E deadline in s (0 = none)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged decode cache)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool budget per decode engine (0 = parity "
+                         "with the dense max_slots x max_seq budget)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="use the dense slotted decode cache instead of "
+                         "the paged int4-resident pool")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -51,8 +59,13 @@ def main():
           f"vocab={cfg.vocab_size}")
 
     prefill = PrefillEngine(cfg, params, max_seq=128)
-    decodes = [DecodeEngine(cfg, params, max_slots=4, max_seq=128)
+    decodes = [DecodeEngine(cfg, params, max_slots=4, max_seq=128,
+                            paged=not args.no_paged,
+                            page_size=args.page_size,
+                            num_pages=args.pages or None)
                for _ in range(2)]
+    if decodes[0].paged_fallback:
+        print(f"note: {decodes[0].paged_fallback}")
     if args.transport == "sim":
         # shared-ethernet-class link, full-model wire bytes (the reduced
         # engine computes, the FULL model's KV crosses the network)
@@ -118,6 +131,14 @@ def main():
     steps = sum(d.steps_run for d in decodes)
     print(f"decode host syncs: {syncs} for {steps} device steps "
           f"({steps / max(syncs, 1):.1f} steps/sync)")
+    if decodes[0].paged:
+        for i, d in enumerate(decodes):
+            st = d.page_stats()
+            print(f"decode {i} page pool: {st['pages']} pages x "
+                  f"{st['page_size']} tok, peak {st['peak_in_use']} in use, "
+                  f"{st['zero_copy_inserts']} zero-dequant wire inserts "
+                  f"({st['reencoded_inserts']} re-encoded), "
+                  f"{st['alloc_failures']} admission stalls")
     if gw.events:
         print("events:", gw.events[:5])
     n_done = s["states"].get(DONE, 0)

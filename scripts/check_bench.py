@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fail CI when tokens/s drops vs the committed
+baseline.
+
+Compares every numeric ``tokens_per_s`` leaf (dotted path, found
+recursively) of a freshly produced BENCH_*.json against the committed
+baseline copy of the same file. A leaf regresses when
+
+    fresh < baseline * (1 - tolerance)        (default tolerance 20%)
+
+Leaves present only in the baseline or only in the fresh file are SKIPPED
+(new suites and retired metrics don't break the gate), as is a missing
+baseline file entirely — the gate only ever compares what both sides have.
+
+Usage (CI snapshots baselines before the bench run overwrites them):
+
+    cp BENCH_throughput.json BENCH_paged_kv.json ci-baselines/
+    python -m benchmarks.run --suite throughput ...
+    python scripts/check_bench.py --baseline-dir ci-baselines \\
+        BENCH_throughput.json BENCH_paged_kv.json [--tolerance 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+METRIC_KEY = "tokens_per_s"
+
+
+def metric_leaves(obj, prefix: str = ""):
+    """Yield (dotted_path, value) for every numeric tokens_per_s leaf."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if k == METRIC_KEY and isinstance(v, (int, float)):
+                yield path, float(v)
+            else:
+                yield from metric_leaves(v, path)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from metric_leaves(v, f"{prefix}[{i}]")
+
+
+def check_file(fresh_path: Path, baseline_path: Path,
+               tolerance: float) -> list:
+    """Returns a list of failure strings (empty = pass)."""
+    if not baseline_path.exists():
+        print(f"  {fresh_path}: no committed baseline "
+              f"({baseline_path}) — skipped")
+        return []
+    if not fresh_path.exists():
+        return [f"{fresh_path}: bench output missing (suite did not run?)"]
+    fresh = dict(metric_leaves(json.loads(fresh_path.read_text())))
+    base = dict(metric_leaves(json.loads(baseline_path.read_text())))
+    failures = []
+    for path in sorted(base):
+        if path not in fresh:
+            print(f"  {fresh_path}:{path}: absent in fresh output — skipped")
+            continue
+        b, f = base[path], fresh[path]
+        if b <= 0:
+            continue
+        drop = 1.0 - f / b
+        status = "FAIL" if drop > tolerance else "ok"
+        print(f"  {fresh_path}:{path}: baseline {b:.1f} -> fresh {f:.1f} "
+              f"({-drop*100:+.1f}%) [{status}]")
+        if drop > tolerance:
+            failures.append(
+                f"{fresh_path}:{path} dropped {drop*100:.1f}% "
+                f"(> {tolerance*100:.0f}% tolerance): "
+                f"{b:.1f} -> {f:.1f} tok/s")
+    for path in sorted(set(fresh) - set(base)):
+        print(f"  {fresh_path}:{path}: new metric "
+              f"({fresh[path]:.1f}) — no baseline, skipped")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+",
+                    help="fresh BENCH_*.json files to gate")
+    ap.add_argument("--baseline-dir", default="ci-baselines",
+                    help="directory holding the committed baseline copies")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional tokens/s drop (default 0.2)")
+    args = ap.parse_args()
+
+    failures = []
+    for f in args.files:
+        fresh = Path(f)
+        failures += check_file(fresh, Path(args.baseline_dir) / fresh.name,
+                               args.tolerance)
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 smoke: the repo's canonical test command (see ROADMAP.md), plus —
-# when SMOKE_E2E=1 — the open-loop streaming example and the serving-API
-# goodput bench (both under a timeout), so the request-lifecycle path is
-# exercised end to end on every PR.
+# when SMOKE_E2E=1 — the open-loop streaming example (paged int4-resident
+# decode cache by default) and the serving-API / rescheduling benches
+# (both under a timeout), so the request-lifecycle path is exercised end
+# to end on every PR. SMOKE_TIER1=0 skips the pytest stage (CI's e2e-bench
+# job runs it in the separate tier1 job).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+if [[ "${SMOKE_TIER1:-1}" == "1" ]]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+fi
 
 if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
-    echo "== open-loop streaming serve_e2e =="
+    echo "== open-loop streaming serve_e2e (paged KV cache) =="
     timeout 600 python examples/serve_e2e.py \
         --requests 6 --rate 2 --max-new 6
     echo "== serving_api bench (goodput per transport) =="
@@ -21,4 +26,8 @@ if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
         python -m benchmarks.run --suite rescheduling --quick
     test -s BENCH_rescheduling.json
+    echo "== paged_kv bench (capacity + tok/s vs dense) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m benchmarks.run --suite paged_kv --quick
+    test -s BENCH_paged_kv.json
 fi

@@ -23,6 +23,12 @@ KERNEL_OVERHEAD = 8e-6   # fixed per-layer launch/dispatch overhead (s)
 
 # int4 wire format: 4 bits/elem + (scale+zero = 8B f32) per 128-elem group
 INT4_WIRE_FACTOR = (4.0 / 16.0) + 8.0 / (128 * BYTES)
+# int4-RESIDENT decode cache (paged pool, DESIGN.md §7): same encoding at
+# rest, so both the capacity term and decode's KV read traffic shrink by it
+INT4_RESIDENT_FACTOR = INT4_WIRE_FACTOR
+# fixed-size KV pages (tokens per page) for the paged capacity arithmetic;
+# matches serving's DEFAULT_PAGE_SIZE
+PAGE_SIZE = 16
 
 
 @dataclass
@@ -44,15 +50,32 @@ _KV_CACHE: dict = {}
 _STATE_CACHE: dict = {}
 
 
-def kv_bytes_per_token(cfg: ModelConfig) -> float:
-    """KV (or recurrent-state amortized) bytes per token across all layers."""
-    hit = _KV_CACHE.get(cfg)
+def kv_bytes_per_token(cfg: ModelConfig, *, resident: str = "bf16") -> float:
+    """KV (or recurrent-state amortized) bytes per token across all layers.
+
+    ``resident="int4"`` applies the paged pool's at-rest compression
+    (group-wise int4 + scale/zero overhead) — the footprint decode
+    capacity and decode HBM reads actually pay with the paged cache."""
+    key = (cfg, resident)
+    hit = _KV_CACHE.get(key)
     if hit is not None:
         return hit
     att_layers = sum(1 for l in range(cfg.num_layers) if cfg.is_attn_layer(l)
                      and cfg.family != "ssm")
-    _KV_CACHE[cfg] = 2 * att_layers * cfg.kv_dim * BYTES
-    return _KV_CACHE[cfg]
+    raw = 2 * att_layers * cfg.kv_dim * BYTES
+    _KV_CACHE[key] = raw * (INT4_RESIDENT_FACTOR if resident == "int4"
+                            else 1.0)
+    return _KV_CACHE[key]
+
+
+def paged_kv_supported(cfg: ModelConfig) -> bool:
+    """Mirror of ``models.paged.paged_supported`` without importing the
+    model stack: the cost model credits int4-resident paging only to
+    pure-attention archs (recurrent/SWA/audio keep dense arithmetic)."""
+    if cfg.family in ("ssm", "hybrid", "audio") or cfg.sliding_window \
+            or cfg.attn_logit_softcap:
+        return False
+    return True
 
 
 def state_bytes(cfg: ModelConfig, batch: int) -> float:
@@ -133,9 +156,14 @@ def prefill_latency(cluster: ClusterSpec, cfg: ModelConfig,
 
 def decode_step_latency(cluster: ClusterSpec, cfg: ModelConfig,
                         pc: ParallelConfig, batch: int, ctx: int) -> float:
-    """One decode step (one token per sequence, batch sequences)."""
+    """One decode step (one token per sequence, batch sequences).
+
+    Archs served by the paged pool read int4-at-rest KV (the fused-dequant
+    kernel never materializes 16-bit), so their memory-bound KV term
+    shrinks by the residency factor."""
     n_act = cfg.active_param_count()
-    kv_tok = kv_bytes_per_token(cfg)
+    kv_tok = kv_bytes_per_token(
+        cfg, resident="int4" if paged_kv_supported(cfg) else "bf16")
     eff_ctx = min(ctx, cfg.sliding_window or ctx)
     d = cfg.d_model
     total = 0.0
@@ -160,11 +188,40 @@ def decode_step_latency(cluster: ClusterSpec, cfg: ModelConfig,
     return total
 
 
+def decode_page_budget(cluster: ClusterSpec, cfg: ModelConfig,
+                       pc: ParallelConfig, *,
+                       page_size: int = PAGE_SIZE) -> int:
+    """Pages of int4-resident KV the group's remaining HBM can hold (the
+    stage with the least headroom per hosted layer governs)."""
+    page_bytes_full = page_size * kv_bytes_per_token(cfg, resident="int4")
+    worst = math.inf
+    for s, stage in enumerate(pc.stages):
+        devs = _stage_devices(cluster, stage)
+        mem = sum(dv.chip.hbm_bytes for dv in devs) * 0.9
+        frac = pc.layer_partition[s] / cfg.num_layers
+        avail = mem - cfg.active_param_count() * frac * BYTES \
+            - cfg.vocab_size * cfg.d_model * BYTES
+        worst = min(worst, avail / max(page_bytes_full * frac, 1.0))
+    return max(0, int(worst))
+
+
 def max_decode_batch(cluster: ClusterSpec, cfg: ModelConfig,
-                     pc: ParallelConfig, ctx: int) -> int:
-    """Largest batch whose KV fits in the group's remaining memory."""
-    per_seq = (min(ctx, cfg.sliding_window or ctx) * kv_bytes_per_token(cfg)
-               + state_bytes(cfg, 1))
+                     pc: ParallelConfig, ctx: int, *,
+                     page_size: int = PAGE_SIZE) -> int:
+    """Largest concurrent decode batch the group's remaining memory admits.
+
+    Paged-capable archs use PAGE-BUDGET arithmetic: capacity = the
+    group's int4-resident page budget divided by ``ceil(ctx/page_size)``
+    pages per sequence — so the scheduler credits at-rest compression
+    with its real (~7x) concurrency gain instead of assuming a dense
+    bf16 ``batch x max_seq`` slab. Everything else keeps the dense
+    worst-case arithmetic."""
+    eff_ctx = min(ctx, cfg.sliding_window or ctx)
+    if paged_kv_supported(cfg):
+        pages_per_seq = -(-eff_ctx // page_size)
+        budget = decode_page_budget(cluster, cfg, pc, page_size=page_size)
+        return max(1, budget // max(pages_per_seq, 1))
+    per_seq = (eff_ctx * kv_bytes_per_token(cfg) + state_bytes(cfg, 1))
     worst = math.inf
     for s, stage in enumerate(pc.stages):
         devs = _stage_devices(cluster, stage)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import kv_quant as _kq
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
 
@@ -51,6 +52,23 @@ def decode_attention(q, k, v, kv_len, *, backend="auto", block_k=256):
         return _ref.decode_attention_ref(q, k, v, kv_len=kv_len)
     return _dec.decode_attention(q, k, v, kv_len, block_k=block_k,
                                  interpret=(m == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "page_size"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, kv_len, *,
+                           page_size, backend="auto"):
+    """Decode attention over a page-table-indirected KV cache; the int4
+    residency dequantizes INSIDE the kernel (never materializing a 16-bit
+    cache). ``k_pages``/``v_pages``: (packed, scale, zero) triple or a
+    dense (P, page_size, Hkv, hd) array."""
+    m = _mode(backend)
+    if m == "ref":
+        return _ref.paged_decode_attention_ref(q, k_pages, v_pages,
+                                               page_table, kv_len,
+                                               page_size=page_size)
+    return _pa.paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      kv_len, page_size=page_size,
+                                      interpret=(m == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "block_n"))

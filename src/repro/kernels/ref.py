@@ -43,6 +43,41 @@ def decode_attention_ref(q, k, v, *, kv_len=None, sm_scale=None):
     return o.astype(q.dtype)
 
 
+def paged_gather_ref(pages, page_table, *, page_size):
+    """Materialize paged KV into a dense (B, W*page_size, Hkv, hd) f32
+    tensor by gathering each sequence's pages through its page table.
+
+    ``pages`` is either the int4 triple ``(packed (P, page_size*ppr, g//2),
+    scale, zero)`` — dequantized here — or a dense (P, page_size, Hkv, hd)
+    array. The oracle for the fused-dequant Pallas kernel."""
+    pt = jnp.maximum(page_table, 0)               # 0 = trash page
+    if isinstance(pages, (tuple, list)):
+        packed, scale, zero = pages
+        g = packed.shape[-1] * 2
+        x = kv_dequant_ref(packed[pt], scale[pt], zero[pt], dtype=jnp.float32)
+        B, W, R = x.shape[:3]
+        ps = page_size
+        ppr = R // ps
+        return x.reshape(B, W * ps, ppr * g)      # (B, S, Hkv*hd) flat
+    gathered = pages[pt]                          # (B, W, ps, Hkv, hd)
+    B, W, ps, Hkv, hd = gathered.shape
+    return gathered.astype(jnp.float32).reshape(B, W * ps, Hkv * hd)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, kv_len, *,
+                               page_size, sm_scale=None):
+    """q: (B, Hkv, gq, hd); paged K/V as in ``paged_gather_ref``.
+
+    Gathers + dequantizes to dense, then runs the dense decode oracle."""
+    B, Hkv, gq, hd = q.shape
+    k = paged_gather_ref(k_pages, page_table, page_size=page_size)
+    v = paged_gather_ref(v_pages, page_table, page_size=page_size)
+    S = k.shape[1]
+    k = k.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    return decode_attention_ref(q, k, v, kv_len=kv_len, sm_scale=sm_scale)
+
+
 def kv_quant_ref(x):
     """Group-wise int4 quantization over the last axis. x: (N, G).
 

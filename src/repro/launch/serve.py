@@ -62,6 +62,14 @@ def main():
                     help="per-request TTFT deadline in s (0 = none); "
                          "queued requests that provably miss it are shed")
     ap.add_argument("--e2e-slo", type=float, default=0.0)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged decode cache)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="page-pool budget per decode engine (0 = parity "
+                         "with the dense max_slots x max_seq budget)")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="dense slotted decode cache instead of the paged "
+                         "int4-resident pool")
     ap.add_argument("--live-reschedule", action="store_true",
                     help="shift the workload mid-trace and let the "
                          "control plane apply a lightweight reschedule to "
@@ -95,11 +103,16 @@ def main():
                                                   bytes_scale=scale)
     else:
         transport = InProcessTransport()
+    paged_kw = dict(paged=not args.no_paged, page_size=args.page_size,
+                    num_pages=args.pages or None)
     if args.live_reschedule:
         # one phase-switchable Replica per plan replica, so the control
-        # plane can re-designate the running fleet without a reload
+        # plane can re-designate the running fleet without a reload; the
+        # page pool is the DECODE-phase-owned buffer (flips drop/rebuild
+        # it with the cached engine, params stay resident)
         gw = gateway_from_plan(plan, cfg, params, transport=transport,
                                max_seq=96, max_slots=4,
+                               decode_kw=paged_kw,
                                profiler=WorkloadProfiler(
                                    in_scale=IN_SCALE, out_scale=OUT_SCALE),
                                compress=not args.no_compress, backend="ref")
@@ -110,7 +123,8 @@ def main():
         n_dec = max(1, len(plan.decode_replicas))
         pres = [PrefillEngine(cfg, params, max_seq=96)
                 for _ in range(min(n_pre, 4))]
-        decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=96)
+        decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=96,
+                             **paged_kw)
                 for _ in range(min(n_dec, 4))]
         gw = Gateway(pres, decs, transport=transport,
                      orchestration=plan.orchestration,
@@ -179,6 +193,19 @@ def main():
         print(f"  sim network: {transport.transfers} transfers, "
               f"{transport.bytes_sent/1e6:.1f}MB, "
               f"mean hop {transport.mean_delay_s*1e3:.1f}ms")
+    # read the LIVE decode list: a mid-trace plan flip re-designates
+    # replicas, so the construction-time snapshot would miss new pools
+    live_decs = [h.engine for h in gw.dec] if args.live_reschedule else decs
+    paged_decs = [d for d in live_decs
+                  if isinstance(d, DecodeEngine) and d.paged]
+    if paged_decs:
+        st = [d.page_stats() for d in paged_decs]
+        print(f"  paged KV: {sum(s['pages'] for s in st)} pages x "
+              f"{st[0]['page_size']} tok (int4 at rest), peak "
+              f"{sum(s['peak_in_use'] for s in st)} in use, "
+              f"{sum(s['zero_copy_inserts'] for s in st)} zero-dequant "
+              f"wire inserts, "
+              f"{sum(s['reencoded_inserts'] for s in st)} re-encoded")
     if args.live_reschedule:
         requeued = sum(h.restarts for h in handles)
         resident = all(h.engine.params is params

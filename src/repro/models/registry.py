@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from repro.models import transformer, whisper
+from repro.models import paged, transformer, whisper
 
 
 @dataclass
@@ -31,6 +31,12 @@ class ModelApi:
     input_specs: Callable
     cache_specs: Callable
     decode_chunk: Optional[Callable] = None
+    # factory for the paged (page-table, int4-at-rest) decode path:
+    # paged_decode_fns(page_size, backend) -> (step_fn, chunk_fn) with the
+    # layout knobs closed over (they must be static under jit). None when
+    # the arch can't page its cache (recurrent state, SWA ring buffers,
+    # audio, softcap).
+    paged_decode_fns: Optional[Callable] = None
 
 
 def make_decode_chunk(decode_fn: Callable) -> Callable:
@@ -190,10 +196,20 @@ def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
         return jax.eval_shape(
             lambda: init_fn(ecfg, shape.global_batch, shape.seq_len))
 
+    paged_fns = None
+    if paged.paged_supported(cfg):
+        def paged_fns(page_size: int, backend: str = "auto"):
+            def step_fn(params, cache, batch):
+                return paged.decode_step_paged(
+                    cfg, params, cache, batch["tokens"], rt=rt,
+                    page_size=page_size, backend=backend)
+            return step_fn, make_decode_chunk(step_fn)
+
     return ModelApi(cfg=cfg, init=init, loss=loss, prefill=prefill_fn,
                     decode=decode_fn, input_specs=input_specs,
                     cache_specs=cache_specs,
-                    decode_chunk=make_decode_chunk(decode_fn))
+                    decode_chunk=make_decode_chunk(decode_fn),
+                    paged_decode_fns=paged_fns)
 
 
 def build_for_cell(cfg: ModelConfig, shape: ShapeSpec,

@@ -22,9 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import paged as paged_fmt
 from repro.models import registry
-from repro.serving import kv_transfer
+from repro.serving import kv_transfer, page_pool
 from repro.serving.kv_transfer import KVWire
+from repro.serving.page_pool import PagePool, pages_needed
 
 
 @dataclass
@@ -178,11 +180,25 @@ class DecodeEngine:
     all live on device; see ``registry.make_decode_chunk``), so the host is
     touched once per chunk. ``step_reference()`` keeps the one-token-per-
     host-round-trip path for A/B benchmarking and equivalence tests.
+
+    With ``paged=True`` (pure-attention archs) the dense ``[max_slots,
+    max_seq]`` cache is replaced by a page pool that stays int4-quantized
+    at rest (``kv_resident="bf16"`` for ablation): admission reserves
+    ``ceil((prompt + max_new) / page_size)`` pages per request instead of
+    a worst-case ``max_seq`` column, aligned wires scatter into pages with
+    no dequant round-trip, attention dequantizes in-kernel, and capacity
+    is governed by the PAGE BUDGET — ``free_slots()`` truncates to what
+    the pool can actually admit, which is what the gateway's dispatch and
+    shedding read. Unsupported archs fall back to the dense path
+    (``paged_fallback`` records why).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 8,
                  max_seq: int = 512, rt=None, eos_id: int = -1,
-                 chunk_size: int = 8):
+                 chunk_size: int = 8, paged: bool = False,
+                 page_size: int = paged_fmt.DEFAULT_PAGE_SIZE,
+                 num_pages: Optional[int] = None,
+                 kv_resident: str = "int4", paged_backend: str = "auto"):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg, rt=rt)
@@ -190,16 +206,45 @@ class DecodeEngine:
         self.max_seq = max_seq
         self.eos_id = eos_id
         self.chunk_size = chunk_size
-        init_fn = (registry.whisper.init_cache if cfg.family == "audio"
-                   else registry.transformer.init_cache)
-        self.cache = init_fn(cfg, max_slots, max_seq)
+        supported = self.api.paged_decode_fns is not None
+        self.paged = bool(paged) and supported
+        self.paged_fallback = (
+            None if (not paged or supported) else
+            f"{cfg.name}: arch cannot page its decode cache (recurrent "
+            f"state / SWA ring buffer / audio / softcap)")
+        if self.paged:
+            self.page_size = page_size
+            self.table_w = paged_fmt.table_width(max_seq, page_size)
+            if num_pages is None:
+                # parity with the dense max_slots x max_seq budget (+ the
+                # trash page); real deployments size this from HBM instead
+                num_pages = max_slots * self.table_w + 1
+            self.kv_resident = kv_resident
+            self.pool = PagePool(num_pages, page_size)
+            self.cache = paged_fmt.init_paged_cache(
+                cfg, max_slots, max_seq, num_pages, page_size=page_size,
+                resident=kv_resident)
+            step_fn, chunk_fn = self.api.paged_decode_fns(page_size,
+                                                          paged_backend)
+            self._decode = jax.jit(step_fn)
+            self._chunk = jax.jit(
+                chunk_fn, static_argnames=("n_steps", "eos_id", "max_seq"))
+            self._slot_pages: Dict[int, List[int]] = {}
+            self._need_sum = 0      # pages reserved across admissions
+            self._need_n = 0
+            self.zero_copy_inserts = 0
+            self.reencoded_inserts = 0
+        else:
+            init_fn = (registry.whisper.init_cache if cfg.family == "audio"
+                       else registry.transformer.init_cache)
+            self.cache = init_fn(cfg, max_slots, max_seq)
+            self._decode = jax.jit(
+                lambda p, c, b: self.api.decode(p, c, b))
+            self._chunk = jax.jit(
+                self.api.decode_chunk,
+                static_argnames=("n_steps", "eos_id", "max_seq"))
         self.slots: List[Optional[GenRequest]] = [None] * max_slots
         self.cur_token = np.zeros((max_slots,), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, b: self.api.decode(p, c, b))
-        self._chunk = jax.jit(
-            self.api.decode_chunk,
-            static_argnames=("n_steps", "eos_id", "max_seq"))
         # host-sync accounting (benchmarks read these)
         self.host_syncs = 0
         self.steps_run = 0
@@ -207,7 +252,17 @@ class DecodeEngine:
     # -- slot management ----------------------------------------------------
 
     def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s is None]
+        """Admissible slot indices. Paged engines truncate the raw free
+        list to the PAGE BUDGET: free pages divided by the mean reserved
+        pages per admitted request (worst-case table width before any
+        observation) — the number the gateway's dispatch/shedding sees."""
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not self.paged or not free:
+            return free
+        est = (self._need_sum / self._need_n) if self._need_n \
+            else float(self.table_w)
+        cap = int(self.pool.n_free / max(est, 1.0))
+        return free[:max(cap, 0)]
 
     def admit(self, req: GenRequest, wire: KVWire, first_token: int,
               *, backend: str = "auto") -> bool:
@@ -218,9 +273,15 @@ class DecodeEngine:
     def admit_batch(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
                     *, backend: str = "auto"
                     ) -> List[Tuple[GenRequest, KVWire, int]]:
-        """Admit as many requests as there are free slots (batched KV
-        insert: one dequant kernel launch per packed shape across ALL
-        admitted wires). Returns the rejected tail."""
+        """Admit as many requests as the engine has capacity for. Dense:
+        one per free slot (batched KV insert: one dequant kernel launch
+        per packed shape across ALL admitted wires). Paged: admission is
+        ALL-OR-NOTHING per request on the page budget — each request
+        reserves ``ceil((prompt + max_new)/page_size)`` pages up front, so
+        an admitted stream can never die of a mid-decode page fault.
+        Returns the rejected tail (FIFO order preserved)."""
+        if self.paged:
+            return self._admit_batch_paged(items, backend=backend)
         free = self.free_slots()
         take = list(items[:len(free)])
         if take:
@@ -233,13 +294,51 @@ class DecodeEngine:
                 req.out_tokens.append(first)
         return list(items[len(free):])
 
+    def _admit_batch_paged(self, items, *, backend):
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        placed = []
+        for req, wire, first in items:
+            if not free:
+                break
+            budget = min(len(req.tokens) + req.max_new_tokens, self.max_seq)
+            need = min(pages_needed(budget, self.page_size), self.table_w)
+            pages = self.pool.alloc(need, free[0])
+            if pages is None:           # page budget exhausted: stop (FIFO)
+                break
+            slot = free.pop(0)
+            placed.append((req, wire, first, slot, pages))
+        if placed:
+            self.cache, nz, nr = page_pool.insert_wires(
+                self.cache, self.cfg,
+                [(w, s, p) for (_, w, _, s, p) in placed], backend=backend)
+            self.zero_copy_inserts += nz
+            self.reencoded_inserts += nr
+            for req, _, first, slot, pages in placed:
+                self.slots[slot] = req
+                self._slot_pages[slot] = pages
+                self.cur_token[slot] = first
+                req.out_tokens.append(first)
+                self._need_sum += len(pages)
+                self._need_n += 1
+        return list(items[len(placed):])
+
+    def _free_pages_of(self, slot: int):
+        pages = self._slot_pages.pop(slot, [])
+        if pages:
+            self.pool.free(pages)
+
     def release(self, slot: int) -> Optional[GenRequest]:
         """Free one slot (cancellation / failure recovery): clears the
-        request and zeroes the slot's cache length so a later admit starts
-        from a clean masked extent."""
+        request, returns every page to the pool (paged), and zeroes the
+        slot's cache length so a later admit starts from a clean masked
+        extent."""
         req = self.slots[slot]
         self.slots[slot] = None
-        self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
+        if self.paged:
+            self._free_pages_of(slot)
+            self.cache = page_pool.release_slot(self.cache, slot)
+        else:
+            self.cache["lengths"] = self.cache["lengths"].at[slot].set(0)
         return req
 
     @property
@@ -290,6 +389,13 @@ class DecodeEngine:
             # a finished slot would keep its old extent until re-admission
             self.cache["lengths"] = \
                 self.cache["lengths"].at[jnp.asarray(freed)].set(0)
+            if self.paged:
+                # pages go back to the pool the moment the request
+                # finishes; the table row points back at the trash page
+                for i in freed:
+                    self._free_pages_of(i)
+                self.cache["page_table"] = \
+                    self.cache["page_table"].at[jnp.asarray(freed)].set(0)
         return finished
 
     def step_reference(self) -> List[GenRequest]:
@@ -317,7 +423,31 @@ class DecodeEngine:
                 self.slots[i] = None
                 self.cache["lengths"] = \
                     self.cache["lengths"].at[i].set(0)
+                if self.paged:
+                    self._free_pages_of(i)
+                    self.cache["page_table"] = \
+                        self.cache["page_table"].at[i].set(0)
         return finished
+
+    # -- paged accounting ---------------------------------------------------
+
+    def page_stats(self) -> Optional[Dict[str, float]]:
+        """Pool occupancy + internal fragmentation (reserved-but-unused
+        token fraction; generated counts are host-visible, so mid-chunk
+        tokens are slightly understated). None for dense engines."""
+        if not self.paged:
+            return None
+        st = self.pool.stats()
+        reserved = sum(len(p) for p in self._slot_pages.values()) \
+            * self.page_size
+        used = sum(len(r.tokens) + len(r.out_tokens)
+                   for r in self.slots if r is not None)
+        st["resident_tokens"] = used
+        st["reserved_tokens"] = reserved
+        st["internal_frag"] = (1.0 - used / reserved) if reserved else 0.0
+        st["zero_copy_inserts"] = self.zero_copy_inserts
+        st["reencoded_inserts"] = self.reencoded_inserts
+        return st
 
 
 # -- phase-switchable replica -------------------------------------------------
@@ -333,7 +463,9 @@ class Replica:
     phase, so a replica that flips back re-enters a warm jit cache. A
     decode replica must be drained (or its requests requeued by the
     gateway) before flipping — the slotted KV cache does not survive a
-    role change.
+    role change. The page pool is likewise DECODE-phase-owned: it lives on
+    the cached decode engine, so a drained flip leaves an all-free pool
+    behind and a warm re-flip re-enters it without reallocation.
     """
 
     def __init__(self, cfg: ModelConfig, params, *,

@@ -230,6 +230,10 @@ class DecodeClient(Protocol):
         ...
 
     def n_free(self) -> int:
+        """Admissible request count. This is CAPACITY, not slot count:
+        paged engines (DESIGN.md §7) report their page-budget headroom
+        here, so dispatch and deadline shedding follow real KV memory
+        instead of a worst-case ``max_slots x max_seq`` slab."""
         ...
 
     @property

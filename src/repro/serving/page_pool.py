@@ -1,0 +1,205 @@
+"""Host-side page allocator for the paged decode cache + KV-wire insertion.
+
+The device-side page format lives in ``models/paged.py``; this module owns
+the HOST bookkeeping: which pages are free, which slot owns which pages,
+occupancy/fragmentation stats, and the scatter of an arriving ``KVWire``
+into a slot's freshly allocated pages.
+
+Key property (the reason the wire and the pages share one quantization
+layout): a wire produced by the bucketed-prefill fast path
+(``kv_transfer.extract_batch(pad_to=...)``) carries POSITION-ALIGNED int4
+groups — row ``t*ppr + r`` is token ``t``'s r-th group, exactly a page's
+row order — so insertion is a pure uint8/f32 scatter: **no dequantization,
+no requantization, no 16-bit materialization**. Wires with position-
+spanning groups (exact-length extracts pick the group from the flattened
+size) or raw payloads are re-encoded into the page layout on arrival (one
+dequant+quant, still never touching the dense cache layout).
+
+Page 0 is reserved as the TRASH page (see ``models/paged.py``); the
+allocator never hands it out.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.models import paged
+from repro.serving.kv_transfer import KVWire, WireTensor, _dequantize
+
+
+class PagePool:
+    """Fixed-size-page allocator over ``num_pages`` pages (page 0 is the
+    trash page and is never allocated). LIFO free list: a released
+    request's pages are the next handed out, which keeps the hot page set
+    small."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the trash page)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owner: Dict[int, int] = {}          # page -> owner tag
+        # stats
+        self.allocs = 0
+        self.frees = 0
+        self.alloc_failures = 0
+        self.peak_in_use = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_in_use(self) -> int:
+        return len(self._owner)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (total minus the trash page)."""
+        return self.num_pages - 1
+
+    def owned_by(self, owner: int) -> List[int]:
+        return sorted(p for p, o in self._owner.items() if o == owner)
+
+    def alloc(self, n: int, owner: int) -> Optional[List[int]]:
+        """Take ``n`` pages for ``owner`` (a slot index); None if the pool
+        cannot satisfy the request — all-or-nothing, no partial grants."""
+        if n <= 0:
+            return []
+        if n > len(self._free):
+            self.alloc_failures += 1
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        self.allocs += n
+        self.peak_in_use = max(self.peak_in_use, self.n_in_use)
+        return pages
+
+    def free(self, pages: Sequence[int]):
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(f"double free / foreign page {p}")
+            del self._owner[p]
+            self._free.append(p)
+        self.frees += len(pages)
+
+    def occupancy(self) -> float:
+        return self.n_in_use / max(self.capacity, 1)
+
+    def stats(self) -> Dict[str, float]:
+        return {"pages": self.capacity, "page_size": self.page_size,
+                "in_use": self.n_in_use, "free": self.n_free,
+                "occupancy": self.occupancy(),
+                "peak_in_use": self.peak_in_use, "allocs": self.allocs,
+                "frees": self.frees, "alloc_failures": self.alloc_failures}
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return max(1, -(-n_tokens // page_size))
+
+
+def _wire_rows_aligned(wt: WireTensor, g: int, ppr: int) -> bool:
+    """True when an int4 wire tensor's quantization rows map 1:1 onto page
+    rows: same group width, groups never straddling token positions."""
+    if wt.kind != "int4":
+        return False
+    L, ln, Hkv, hd = wt.orig_shape
+    packed = wt.payload["packed"]
+    return (packed.shape[1] == g // 2
+            and packed.shape[0] == L * ln * ppr)
+
+
+def _wire_to_rows(wt: WireTensor, cfg, backend: str):
+    """Return (packed, scale, zero) rows in page row-order for one wire
+    tensor — zero-copy when the wire layout already matches, otherwise
+    re-encoded via one dequant+quant (device ops, no host sync)."""
+    g = paged.page_group(cfg)
+    ppr = paged.groups_per_token(cfg)
+    if _wire_rows_aligned(wt, g, ppr):
+        return (jnp.asarray(wt.payload["packed"]),
+                jnp.asarray(wt.payload["scale"]),
+                jnp.asarray(wt.payload["zero"]), True)
+    dense = _dequantize(wt, backend)               # (L, ln, Hkv, hd)
+    L, ln = dense.shape[:2]
+    rows = dense.reshape(L * ln * ppr, g)
+    packed, scale, zero = ops.kv_quant(rows, backend=backend)
+    return packed, scale, zero, False
+
+
+def insert_wires(cache, cfg, items: Sequence[Tuple[KVWire, int, List[int]]],
+                 *, backend: str = "auto"):
+    """Scatter transferred requests into their allocated pages.
+
+    ``items`` = (wire, slot_index, pages) with ``pages`` already allocated
+    by the :class:`PagePool` (``len(pages) >= ceil(len/page_size)``; the
+    tail of the last page absorbs decode appends). Updates page-table rows
+    and lengths. Returns (cache, n_zero_copy, n_reencoded) — the counters
+    feed the bench's zero-dequant claim."""
+    int4 = "kp" in cache["slot0"]
+    ps = cache_page_size(cache, cfg)
+    ppr = paged.groups_per_token(cfg)
+    g = paged.page_group(cfg)
+    W = cache["page_table"].shape[1]
+    n_zero, n_reenc = 0, 0
+    for wire, slot, pages in items:
+        ln = wire.request_len
+        need = pages_needed(ln, ps)
+        if len(pages) < need or need > W:
+            raise ValueError(
+                f"slot {slot}: {len(pages)} page(s) for a {ln}-token wire "
+                f"(needs {need}, table width {W})")
+        tpos = np.arange(ln)
+        dst_page = np.asarray(pages, np.int32)[tpos // ps]          # (ln,)
+        for name, slot_wire in wire.slots.items():
+            buf = cache[name]
+            for key, base in (("k", "k"), ("v", "v")):
+                wt = slot_wire.get(key)
+                if wt is None:
+                    continue
+                if int4:
+                    packed, scale, zero, aligned = _wire_to_rows(
+                        wt, cfg, backend)
+                    n_zero += int(aligned)
+                    n_reenc += int(not aligned)
+                    L = wt.orig_shape[0]
+                    rows = ((tpos % ps)[:, None] * ppr
+                            + np.arange(ppr)[None])                 # (ln,ppr)
+                    pg = dst_page[:, None]
+                    for suffix, val, width in (
+                            ("p", packed, g // 2), ("s", scale, 1),
+                            ("z", zero, 1)):
+                        dst = buf[base + suffix]
+                        cache[name][base + suffix] = dst.at[:, pg, rows].set(
+                            val.reshape(L, ln, ppr, width).astype(dst.dtype))
+                else:
+                    dense = _dequantize(wt, backend)     # (L, ln, Hkv, hd)
+                    dst = buf[base]
+                    cache[name][base] = dst.at[
+                        :, dst_page, tpos % ps].set(dense.astype(dst.dtype))
+        row = np.zeros((W,), np.int32)                   # rest -> trash
+        row[:len(pages)] = pages
+        cache["page_table"] = cache["page_table"].at[slot].set(
+            jnp.asarray(row))
+        cache["lengths"] = cache["lengths"].at[slot].set(ln)
+    return cache, n_zero, n_reenc
+
+
+def release_slot(cache, slot: int):
+    """Point a released slot's table row back at the trash page and zero
+    its length (the pages themselves go back through ``PagePool.free``)."""
+    cache["page_table"] = cache["page_table"].at[slot].set(0)
+    cache["lengths"] = cache["lengths"].at[slot].set(0)
+    return cache
+
+
+def cache_page_size(cache, cfg) -> int:
+    """Recover page_size from the cache shapes (token rows per page)."""
+    slot = cache["slot0"]
+    if "kp" in slot:
+        return slot["kp"].shape[2] // paged.groups_per_token(cfg)
+    return slot["k"].shape[2]
