@@ -1,0 +1,222 @@
+"""Fault tolerance under chaos: injected crash + spot preemption mid-trace.
+
+The robustness claim (ROADMAP item 4 / DESIGN.md §8): with the recovery
+paths armed — crash confirmation -> requeue-through-prefill + failover
+reschedule, preemption notice -> page-granular KV migration within the
+grace window — an open-loop trace that loses TWO of three decode
+replicas mid-stream still completes every accepted request, and SLO
+attainment stays strictly above a no-handling baseline (same trace, same
+fault times, replicas simply vanish with their residents).
+
+Both runs serve real reduced-config engines behind a plan-bound gateway
+(1 prefill + 3 paged decode replicas on paper-cloud groups). The handled
+run wires the faults through ``install_chaos`` (busiest-victim
+resolution, deferred until the victim holds work) so the failure path
+under test is the production one. Emits ``BENCH_fault_tolerance.json``;
+the handled attainment leaf is named ``slo_attainment`` so the CI gate
+(``check_bench.py --metrics slo_attainment``) tracks only the handled
+number — the baseline is *supposed* to be bad.
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import CFG, SLO, cloud, row
+from repro.core import scheduler, tabu
+from repro.core.workload import CONVERSATION
+
+BENCH_JSON = Path("BENCH_fault_tolerance.json")
+
+GROUPS = ((0, 1, 2, 3), (4, 5, 6, 7), tuple(range(8, 16)),
+          tuple(range(16, 24)))
+PHASES = ("prefill", "decode", "decode", "decode")
+
+
+def _trace(cfg, n_req, rate, max_new, e2e_deadline, seed=5):
+    from repro.serving.gateway import ServeRequest
+    rng = np.random.default_rng(seed)
+    arrivals, t = [], 0.0
+    for rid in range(n_req):
+        t += rng.exponential(1.0 / rate)
+        arrivals.append((t, ServeRequest(
+            rid,
+            rng.integers(1, cfg.vocab_size,
+                         int(rng.choice([10, 12, 16]))).astype(np.int32),
+            max_new_tokens=max_new, e2e_deadline_s=e2e_deadline)))
+    return arrivals
+
+
+def _metrics(handles, e2e_deadline, max_new, wall):
+    done = [h for h in handles if h.state == "DONE"]
+    met = [h for h in done if h.e2e <= e2e_deadline]
+    lost = [h for h in handles if not h.is_terminal or h.state == "FAILED"]
+    expected = sum(h.request.max_new_tokens for h in handles)
+    delivered = sum(len(h.tokens) for h in done)
+    return {"n_submitted": len(handles), "n_done": len(done),
+            "n_lost": len(lost),
+            "tokens_expected": expected, "tokens_delivered": delivered,
+            "tokens_lost": expected - delivered,
+            "restarts": sum(h.restarts for h in handles),
+            "wall_s": wall,
+            "_attain": len(met) / max(len(handles), 1)}
+
+
+def _mk_gateway(cfg, params, plan):
+    from repro.serving.gateway import gateway_from_plan, warmup_engines
+    gw = gateway_from_plan(plan, cfg, params, max_seq=96, max_slots=2,
+                           chunk_size=2, backend="ref",
+                           decode_kw={"paged": True, "page_size": 8})
+    warmup_engines([h.engine for h in gw.pre], [h.engine for h in gw.dec],
+                   cfg.vocab_size, backend="ref", prompt_lens=(12, 16))
+    return gw
+
+
+def _busiest(gw):
+    alive = [j for j, d in enumerate(gw.dec) if d.status == "alive"]
+    if not alive:
+        return None
+    return max(alive, key=lambda j: len(gw.dec[j].client.resident()))
+
+
+def run(quick: bool = False):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build
+    from repro.serving.faults import (CRASH, PREEMPT, FaultEvent,
+                                      FaultSchedule, install_chaos)
+    from repro.serving.gateway import drive_open_loop
+
+    cluster = cloud()
+    rate = 6.0
+    n_req = 18 if quick else 36
+    max_new = 16 if quick else 24
+    e2e_deadline = 30.0
+    span = n_req / rate
+    t_crash, t_preempt = 0.35 * span, 0.7 * span
+    grace_s = 0.75
+
+    solver = scheduler.LowerLevelSolver(cluster, CFG, CONVERSATION, rate,
+                                        SLO)
+    sol = tabu.Solution(GROUPS, PHASES)
+    score, reps, o = solver.solve(sol)
+    assert reps, "the fault-tolerance plan must deduce"
+    plan = scheduler.DeploymentPlan(solution=sol, replicas=reps,
+                                    orchestration=o, score=score)
+
+    def pinned_search(cluster_, cfg_, plan_, wl, rate_, slo_, *,
+                      init_solution=None, **kw):
+        """Failover search pinned to the survivors (drop_nodes already
+        chose the groups; re-orchestrate only, keep the bench fast)."""
+        sc, rr, oo = solver.solve(init_solution)
+        if not rr:
+            raise RuntimeError("survivor solution did not deduce")
+        return scheduler.DeploymentPlan(solution=init_solution, replicas=rr,
+                                        orchestration=oo, score=sc)
+
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    trace = _trace(cfg, n_req, rate, max_new, e2e_deadline)
+
+    # ---- no-handling baseline: replicas vanish, residents stranded ----
+    gw = _mk_gateway(cfg, params, plan)
+    state = {"killed": 0, "start": 0.0}
+
+    def baseline_tick(g):
+        rel = time.time() - state["start"]
+        due = (t_crash, t_preempt + grace_s)   # preemption ignored: the
+        if state["killed"] >= len(due):        # node just dies at grace end
+            return
+        if rel >= due[state["killed"]]:
+            vic = _busiest(g)
+            if vic is None or not g.dec[vic].client.resident():
+                return                         # wait for a busy victim
+            g.kill_replica("decode", vic, recover=False)
+            state["killed"] += 1
+
+    state["start"] = time.time()
+    handles = drive_open_loop(gw, trace, tick=baseline_tick,
+                              tick_interval_s=0.05)
+    base = _metrics(handles, e2e_deadline, max_new,
+                    time.time() - state["start"])
+    base["attainment"] = base.pop("_attain")
+    base["n_replicas_killed"] = state["killed"]
+
+    # ---- handled: chaos-injected crash + preemption, recovery armed ----
+    gw = _mk_gateway(cfg, params, plan)
+    schedule = FaultSchedule([
+        FaultEvent(t=t_crash, kind=CRASH, phase="decode", idx=-1,
+                   require_busy=True),
+        FaultEvent(t=t_preempt, kind=PREEMPT, phase="decode", idx=-1,
+                   grace_s=grace_s, require_busy=True)])
+    gw.set_failover(cluster, CFG, SLO, workload=CONVERSATION, rate=rate,
+                    search_fn=pinned_search)
+    ctl = install_chaos(gw, schedule)
+    rec = {"fired_at": None, "epoch_at": None}
+
+    def handled_tick(g):
+        if ctl.fired and rec["fired_at"] is None:
+            rec["fired_at"] = time.time()
+        if g.epoch >= 1 and rec["epoch_at"] is None:
+            rec["epoch_at"] = time.time()
+
+    t0 = time.time()
+    handles = drive_open_loop(gw, trace, tick=handled_tick,
+                              tick_interval_s=0.05)
+    hdl = _metrics(handles, e2e_deadline, max_new, time.time() - t0)
+    hdl["slo_attainment"] = hdl.pop("_attain")
+    st = gw.stats()
+    hdl["counters"] = st["counters"]
+    hdl["page_pool"] = st["page_pool"]
+    hdl["epoch"] = gw.epoch
+    hdl["faults_fired"] = ctl.fired
+    hdl["recovery_reschedule_s"] = (
+        rec["epoch_at"] - rec["fired_at"]
+        if rec["epoch_at"] and rec["fired_at"] else None)
+
+    # ---- acceptance: zero loss, and strictly better than no handling ----
+    if hdl["n_lost"] > 0:
+        raise RuntimeError(
+            f"fault handling lost {hdl['n_lost']} accepted request(s)")
+    if [f["kind"] for f in ctl.fired] != [CRASH, PREEMPT]:
+        raise RuntimeError(f"chaos events misfired: {ctl.fired}")
+    if base["n_lost"] > 0 and hdl["slo_attainment"] <= base["attainment"]:
+        raise RuntimeError(
+            f"handled attainment {hdl['slo_attainment']:.3f} not above "
+            f"no-handling baseline {base['attainment']:.3f}")
+
+    report = {
+        "trace": {"n_requests": n_req, "rate": rate, "max_new": max_new,
+                  "e2e_deadline_s": e2e_deadline, "t_crash_s": t_crash,
+                  "t_preempt_s": t_preempt, "grace_s": grace_s,
+                  "plan": "P:1 D:3 (paged int4 KV, page_size=8)"},
+        "baseline_no_handling": base,
+        "handled": hdl,
+        "attainment_gain": hdl["slo_attainment"] - base["attainment"],
+    }
+    BENCH_JSON.write_text(json.dumps(report, indent=2))
+    rows = [
+        row("fault_baseline", base["wall_s"] * 1e6,
+            f"attain={base['attainment']:.2f};lost={base['n_lost']};"
+            f"tokens_lost={base['tokens_lost']};"
+            f"killed={base['n_replicas_killed']}"),
+        row("fault_handled", hdl["wall_s"] * 1e6,
+            f"slo_attain={hdl['slo_attainment']:.2f};lost={hdl['n_lost']};"
+            f"migrated={hdl['counters']['migrations']};"
+            f"requeues={hdl['counters']['requeues']};"
+            f"epoch={hdl['epoch']}"),
+        row("fault_tolerance_json", 0.0, f"json={BENCH_JSON}"),
+    ]
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

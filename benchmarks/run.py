@@ -19,12 +19,13 @@ def main() -> None:
                          "throughput suite also writes BENCH_throughput.json)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_case_study, bench_kernels,
-                            bench_kv_compression, bench_network_effect,
-                            bench_paged_kv, bench_ratio_sweep,
-                            bench_rescheduling, bench_scheduling_time,
-                            bench_serving_api, bench_simulator_accuracy,
-                            bench_slo_attainment, bench_throughput)
+    from benchmarks import (bench_case_study, bench_fault_tolerance,
+                            bench_kernels, bench_kv_compression,
+                            bench_network_effect, bench_paged_kv,
+                            bench_ratio_sweep, bench_rescheduling,
+                            bench_scheduling_time, bench_serving_api,
+                            bench_simulator_accuracy, bench_slo_attainment,
+                            bench_throughput)
 
     suites = {
         "slo": (bench_slo_attainment, "Fig 7-8 SLO attainment"),
@@ -36,6 +37,9 @@ def main() -> None:
                          "Fig 11/Table 4 rescheduling (sim + live flip)"),
         "paged_kv": (bench_paged_kv,
                      "paged int4-resident KV: capacity + tok/s vs dense"),
+        "fault_tolerance": (bench_fault_tolerance,
+                            "chaos crash+preemption: SLO attainment vs "
+                            "no-handling baseline"),
         "kvcomp": (bench_kv_compression, "Fig 12/18, Tables 2/8 KV comp"),
         "ratio": (bench_ratio_sweep, "Fig 6/14 prefill:decode ratio"),
         "network": (bench_network_effect, "Table 5 network effect"),
@@ -43,7 +47,8 @@ def main() -> None:
         "case": (bench_case_study, "Table 3 case study"),
         "kernels": (bench_kernels, "kernel micro + v5e roofline"),
     }
-    aliases = {"resched": "rescheduling"}     # legacy suite names
+    aliases = {"resched": "rescheduling",     # legacy suite names
+               "faults": "fault_tolerance"}
     only = {aliases.get(s, s)
             for s in f"{args.only},{args.suite}".split(",") if s}
     unknown = only - suites.keys()

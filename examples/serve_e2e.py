@@ -50,6 +50,11 @@ def main():
     ap.add_argument("--no-paged", action="store_true",
                     help="use the dense slotted decode cache instead of "
                          "the paged int4-resident pool")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a decode-replica crash and a spot "
+                         "preemption mid-trace (3 decode replicas so a "
+                         "survivor remains; every request must still "
+                         "finish)")
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)
@@ -59,11 +64,12 @@ def main():
           f"vocab={cfg.vocab_size}")
 
     prefill = PrefillEngine(cfg, params, max_seq=128)
+    n_dec = 3 if args.chaos else 2
     decodes = [DecodeEngine(cfg, params, max_slots=4, max_seq=128,
                             paged=not args.no_paged,
                             page_size=args.page_size,
                             num_pages=args.pages or None)
-               for _ in range(2)]
+               for _ in range(n_dec)]
     if decodes[0].paged_fallback:
         print(f"note: {decodes[0].paged_fallback}")
     if args.transport == "sim":
@@ -93,6 +99,20 @@ def main():
             max_new_tokens=args.max_new,
             ttft_deadline_s=args.ttft_slo or float("inf"),
             e2e_deadline_s=args.e2e_slo or float("inf"))))
+
+    ctl = None
+    if args.chaos:
+        from repro.serving.faults import (CRASH, PREEMPT, FaultEvent,
+                                          FaultSchedule, install_chaos)
+        span = args.requests / args.rate
+        schedule = FaultSchedule([
+            FaultEvent(t=0.3 * span, kind=CRASH, phase="decode", idx=-1,
+                       require_busy=True),
+            FaultEvent(t=0.55 * span, kind=PREEMPT, phase="decode", idx=-1,
+                       grace_s=0.75, require_busy=True)])
+        ctl = install_chaos(gw, schedule)
+        print(f"chaos armed: decode crash at ~{0.4*span:.1f}s, spot "
+              f"preemption (grace 0.75s) at ~{0.7*span:.1f}s")
 
     t0 = time.time()
     first_seen = {}
@@ -139,11 +159,31 @@ def main():
                   f"{st['zero_copy_inserts']} zero-dequant wire inserts "
                   f"({st['reencoded_inserts']} re-encoded), "
                   f"{st['alloc_failures']} admission stalls")
+    st = gw.stats()
+    c = st["counters"]
+    print(f"gateway stats: epoch={st['epoch']} retries={c['retries']} "
+          f"requeues={c['requeues']} migrations={c['migrations']} "
+          f"(tokens={c['migrated_tokens']}) "
+          f"preemptions={c['preemptions']} failed={c['failed']}")
+    if st["page_pool"]:
+        print(f"page pool (fleet): "
+              f"{st['page_pool']['alloc_failures']:.0f} admission stalls, "
+              f"{st['page_pool']['in_use']:.0f} pages still in use")
+    print("replicas:", "  ".join(
+        f"{r['phase']}:{r['idx']}={r['status']}"
+        + (f"({r['suspect_why']})" if r["suspect_why"] else "")
+        for r in st["replicas"]))
+    if ctl is not None:
+        print("chaos fired:", [
+            {k: f.get(k) for k in ("kind", "idx", "migrated", "requeued")
+             if k in f} for f in ctl.fired])
     if gw.events:
         print("events:", gw.events[:5])
     n_done = s["states"].get(DONE, 0)
     if n_done < args.requests:
         print(f"WARNING: only {n_done}/{args.requests} requests finished")
+        if args.chaos:
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,10 +1,11 @@
 #!/usr/bin/env python
-"""Bench-regression gate: fail CI when tokens/s drops vs the committed
-baseline.
+"""Bench-regression gate: fail CI when a higher-is-better metric drops vs
+the committed baseline.
 
-Compares every numeric ``tokens_per_s`` leaf (dotted path, found
-recursively) of a freshly produced BENCH_*.json against the committed
-baseline copy of the same file. A leaf regresses when
+Compares every numeric leaf whose key is in ``--metrics`` (dotted path,
+found recursively; default ``tokens_per_s``) of a freshly produced
+BENCH_*.json against the committed baseline copy of the same file. A leaf
+regresses when
 
     fresh < baseline * (1 - tolerance)        (default tolerance 20%)
 
@@ -18,6 +19,8 @@ Usage (CI snapshots baselines before the bench run overwrites them):
     python -m benchmarks.run --suite throughput ...
     python scripts/check_bench.py --baseline-dir ci-baselines \\
         BENCH_throughput.json BENCH_paged_kv.json [--tolerance 0.2]
+    python scripts/check_bench.py --metrics slo_attainment \\
+        --baseline-dir ci-baselines BENCH_fault_tolerance.json
 """
 from __future__ import annotations
 
@@ -26,25 +29,26 @@ import json
 import sys
 from pathlib import Path
 
-METRIC_KEY = "tokens_per_s"
+DEFAULT_METRICS = "tokens_per_s"
 
 
-def metric_leaves(obj, prefix: str = ""):
-    """Yield (dotted_path, value) for every numeric tokens_per_s leaf."""
+def metric_leaves(obj, metrics, prefix: str = ""):
+    """Yield (dotted_path, value) for every numeric leaf keyed in metrics."""
     if isinstance(obj, dict):
         for k, v in obj.items():
             path = f"{prefix}.{k}" if prefix else str(k)
-            if k == METRIC_KEY and isinstance(v, (int, float)):
+            if k in metrics and isinstance(v, (int, float)) \
+                    and not isinstance(v, bool):
                 yield path, float(v)
             else:
-                yield from metric_leaves(v, path)
+                yield from metric_leaves(v, metrics, path)
     elif isinstance(obj, list):
         for i, v in enumerate(obj):
-            yield from metric_leaves(v, f"{prefix}[{i}]")
+            yield from metric_leaves(v, metrics, f"{prefix}[{i}]")
 
 
-def check_file(fresh_path: Path, baseline_path: Path,
-               tolerance: float) -> list:
+def check_file(fresh_path: Path, baseline_path: Path, tolerance: float,
+               metrics=frozenset((DEFAULT_METRICS,))) -> list:
     """Returns a list of failure strings (empty = pass)."""
     if not baseline_path.exists():
         print(f"  {fresh_path}: no committed baseline "
@@ -52,8 +56,9 @@ def check_file(fresh_path: Path, baseline_path: Path,
         return []
     if not fresh_path.exists():
         return [f"{fresh_path}: bench output missing (suite did not run?)"]
-    fresh = dict(metric_leaves(json.loads(fresh_path.read_text())))
-    base = dict(metric_leaves(json.loads(baseline_path.read_text())))
+    fresh = dict(metric_leaves(json.loads(fresh_path.read_text()), metrics))
+    base = dict(metric_leaves(json.loads(baseline_path.read_text()),
+                              metrics))
     failures = []
     for path in sorted(base):
         if path not in fresh:
@@ -64,16 +69,16 @@ def check_file(fresh_path: Path, baseline_path: Path,
             continue
         drop = 1.0 - f / b
         status = "FAIL" if drop > tolerance else "ok"
-        print(f"  {fresh_path}:{path}: baseline {b:.1f} -> fresh {f:.1f} "
+        print(f"  {fresh_path}:{path}: baseline {b:.3f} -> fresh {f:.3f} "
               f"({-drop*100:+.1f}%) [{status}]")
         if drop > tolerance:
             failures.append(
                 f"{fresh_path}:{path} dropped {drop*100:.1f}% "
                 f"(> {tolerance*100:.0f}% tolerance): "
-                f"{b:.1f} -> {f:.1f} tok/s")
+                f"{b:.3f} -> {f:.3f}")
     for path in sorted(set(fresh) - set(base)):
         print(f"  {fresh_path}:{path}: new metric "
-              f"({fresh[path]:.1f}) — no baseline, skipped")
+              f"({fresh[path]:.3f}) — no baseline, skipped")
     return failures
 
 
@@ -84,14 +89,18 @@ def main() -> int:
     ap.add_argument("--baseline-dir", default="ci-baselines",
                     help="directory holding the committed baseline copies")
     ap.add_argument("--tolerance", type=float, default=0.2,
-                    help="allowed fractional tokens/s drop (default 0.2)")
+                    help="allowed fractional metric drop (default 0.2)")
+    ap.add_argument("--metrics", default=DEFAULT_METRICS,
+                    help="comma-separated leaf keys to gate, all "
+                         "higher-is-better (default: tokens_per_s)")
     args = ap.parse_args()
+    metrics = frozenset(m for m in args.metrics.split(",") if m)
 
     failures = []
     for f in args.files:
         fresh = Path(f)
         failures += check_file(fresh, Path(args.baseline_dir) / fresh.name,
-                               args.tolerance)
+                               args.tolerance, metrics)
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
         for msg in failures:

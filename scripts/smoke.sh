@@ -30,4 +30,11 @@ if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
         python -m benchmarks.run --suite paged_kv --quick
     test -s BENCH_paged_kv.json
+    echo "== chaos demo (injected crash + preemption, KV-page migration) =="
+    timeout 600 python examples/serve_e2e.py \
+        --requests 8 --rate 3 --max-new 32 --chaos
+    echo "== fault_tolerance bench (SLO attainment vs no-handling) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m benchmarks.run --suite fault_tolerance --quick
+    test -s BENCH_fault_tolerance.json
 fi

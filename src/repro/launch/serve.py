@@ -213,6 +213,19 @@ def main():
         print(f"  live reschedule: epoch {gw.epoch}, "
               f"P:{len(gw.pre)} D:{len(gw.dec)}, {requeued} requeued "
               f"through flips, params resident (no reload) = {resident}")
+    st = gw.stats()
+    c = st["counters"]
+    print(f"  gateway: epoch={st['epoch']} retries={c['retries']} "
+          f"requeues={c['requeues']} migrations={c['migrations']} "
+          f"preemptions={c['preemptions']} failed={c['failed']}")
+    if st["page_pool"]:
+        print(f"  page pool (fleet): "
+              f"{st['page_pool']['alloc_failures']:.0f} admission stalls, "
+              f"{st['page_pool']['in_use']:.0f} pages still in use")
+    print("  replicas:", "  ".join(
+        f"{r['phase']}:{r['idx']}={r['status']}"
+        + (f"({r['suspect_why']})" if r["suspect_why"] else "")
+        for r in st["replicas"]))
     if gw.events:
         print("  events:", gw.events[:5])
 

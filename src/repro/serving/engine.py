@@ -294,7 +294,7 @@ class DecodeEngine:
                 req.out_tokens.append(first)
         return list(items[len(free):])
 
-    def _admit_batch_paged(self, items, *, backend):
+    def _admit_batch_paged(self, items, *, backend, migrated: bool = False):
         free = [i for i, s in enumerate(self.slots) if s is None]
         placed = []
         for req, wire, first in items:
@@ -317,10 +317,66 @@ class DecodeEngine:
                 self.slots[slot] = req
                 self._slot_pages[slot] = pages
                 self.cur_token[slot] = first
-                req.out_tokens.append(first)
+                if not migrated:
+                    req.out_tokens.append(first)
                 self._need_sum += len(pages)
                 self._need_n += 1
         return list(items[len(placed):])
+
+    # -- live migration (preemption drains) ---------------------------------
+
+    def extract_resident(self, *, compress: bool = True,
+                         backend: str = "auto"
+                         ) -> List[Tuple[int, GenRequest, KVWire, int]]:
+        """Snapshot every resident request as (slot, req, wire, cur_token)
+        for migration to another decode replica.
+
+        The wire covers exactly the tokens whose K/V is in the cache
+        (prompt + generated-so-far); ``cur_token`` — the last emitted
+        token, whose K/V is appended by the NEXT step — rides alongside so
+        the destination resumes mid-stream without regenerating anything.
+        Paged engines gather pages zero-dequant
+        (:func:`~repro.serving.page_pool.extract_slot_wire`); dense ones
+        go through the standard ``kv_transfer.extract`` path. Slots are
+        NOT released — the caller frees them once the handoff commits."""
+        out = []
+        if self.active == 0:
+            return out
+        lengths = np.asarray(self.cache["lengths"])
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            ln = int(lengths[slot])
+            if self.paged:
+                wire = page_pool.extract_slot_wire(
+                    self.cache, self.cfg, ln, self._slot_pages[slot])
+            else:
+                wire = kv_transfer.extract(self.cache, slot, ln,
+                                           compress=compress,
+                                           backend=backend)
+            out.append((slot, req, wire, int(self.cur_token[slot])))
+        return out
+
+    def admit_migrated(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
+                       *, backend: str = "auto"
+                       ) -> List[Tuple[GenRequest, KVWire, int]]:
+        """Admit mid-stream requests migrated off another decode replica:
+        like ``admit_batch`` but the third element is the *resume* token
+        (``cur_token``) — already in ``out_tokens`` on the source, so it is
+        NOT re-appended. Returns the rejected tail."""
+        if self.paged:
+            return self._admit_batch_paged(items, backend=backend,
+                                           migrated=True)
+        free = self.free_slots()
+        take = list(items[:len(free)])
+        if take:
+            self.cache = kv_transfer.insert_batch(
+                self.cache, [(wire, slot) for (_, wire, _), slot
+                             in zip(take, free)], backend=backend)
+            for (req, _, cur), slot in zip(take, free):
+                self.slots[slot] = req
+                self.cur_token[slot] = cur
+        return list(items[len(free):])
 
     def _free_pages_of(self, slot: int):
         pages = self._slot_pages.pop(slot, [])

@@ -4,12 +4,26 @@ The public surface of the serving stack: ``Gateway.submit(ServeRequest)``
 returns a :class:`RequestHandle` carrying an explicit request lifecycle
 
     QUEUED -> PREFILLING -> TRANSFERRING -> DECODING -> DONE
-                                 |               |
-            CANCELLED / REJECTED / FAILED        +-> QUEUED (replica failure)
+                  |              |            |    ^
+                  |              |            |    | (KV page migration,
+                  |              |            v    |  preemption drain)
+                  +--------------+---> QUEUED + TRANSFERRING
+                       (replica failure / retry exhaustion)
+    any non-terminal -> CANCELLED / REJECTED / FAILED
 
 with streaming token delivery (callback and iterator), ``cancel()``,
 per-request deadline/priority, and admission control that sheds requests
 whose TTFT deadline is provably missed while still queued.
+
+Fault tolerance (DESIGN.md §8): an injectable ``clock`` makes every
+timestamp deterministic under test; transient transport errors retry
+with bounded exponential backoff + jitter before falling back to
+requeue-through-prefill; the failure detector distinguishes
+suspected-slow (kept out of routing, still stepped) from confirmed-dead
+(recovered + epoch reschedule via ``set_failover``); and
+``handle_preemption`` drains a spot-preempted decode replica by
+migrating its resident KV page-granular over the transport to surviving
+replicas within the grace window.
 
 Replicas are reached only through the narrow :class:`PrefillClient` /
 :class:`DecodeClient` interfaces and KV state moves only through a
@@ -24,6 +38,7 @@ over this class (``repro.serving.coordinator``).
 from __future__ import annotations
 
 import math
+import random as _random
 import time
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterator, List, Optional, Protocol,
@@ -36,6 +51,8 @@ from repro.core import scheduler as sched
 from repro.core.orchestrator import Orchestration, SloSpec
 from repro.serving.engine import (DecodeEngine, GenRequest, PrefillEngine,
                                   Replica)
+from repro.serving.faults import (ReplicaCrashError, RetryPolicy,
+                                  TransientTransportError)
 from repro.serving.kv_transfer import KVWire
 from repro.serving.profiler import WorkloadProfiler
 from repro.serving.transport import (InProcessTransport, TransferTicket,
@@ -56,9 +73,12 @@ TERMINAL_STATES = frozenset({DONE, CANCELLED, REJECTED, FAILED})
 
 _TRANSITIONS: Dict[str, frozenset] = {
     QUEUED: frozenset({PREFILLING, CANCELLED, REJECTED, FAILED}),
-    PREFILLING: frozenset({TRANSFERRING, CANCELLED, FAILED}),
+    # PREFILLING -> QUEUED: the prefill replica crashed mid-batch
+    PREFILLING: frozenset({TRANSFERRING, QUEUED, CANCELLED, FAILED}),
     TRANSFERRING: frozenset({DECODING, QUEUED, CANCELLED, FAILED}),
-    DECODING: frozenset({DONE, QUEUED, CANCELLED, FAILED}),
+    # DECODING -> TRANSFERRING: mid-stream KV migration off a preempted
+    # decode replica (handle_preemption)
+    DECODING: frozenset({DONE, QUEUED, TRANSFERRING, CANCELLED, FAILED}),
     DONE: frozenset(), CANCELLED: frozenset(),
     REJECTED: frozenset(), FAILED: frozenset(),
 }
@@ -102,7 +122,7 @@ class RequestHandle:
         self.state = QUEUED
         self.reason: Optional[str] = None
         self.restarts = 0
-        self.t_submit = time.time()
+        self.t_submit = gateway.clock()
         self.t_first = -1.0
         self.t_done = -1.0
         self.history: List[Tuple[float, str]] = [(self.t_submit, QUEUED)]
@@ -122,7 +142,10 @@ class RequestHandle:
         if state not in _TRANSITIONS[self.state]:
             raise RuntimeError(f"illegal transition {self.state} -> {state} "
                                f"for request {self.request.rid}")
-        now = now if now is not None else time.time()
+        if state in (FAILED, REJECTED) and reason is None:
+            raise ValueError(f"{state} requires a reason "
+                             f"(request {self.request.rid})")
+        now = now if now is not None else self._gateway.clock()
         self.state = state
         self.history.append((now, state))
         if reason is not None:
@@ -246,6 +269,15 @@ class DecodeClient(Protocol):
     def release(self, req: GenRequest) -> bool:
         ...
 
+    def extract_resident(self, *, compress: bool, backend: str):
+        """(slot, req, wire, cur_token) snapshot of every resident request
+        — the migration source side of a preemption drain."""
+        ...
+
+    def admit_migrated(self, items, *, backend: str):
+        """Admit mid-stream migrated requests (no first-token append)."""
+        ...
+
 
 class LocalPrefillClient:
     """In-process realization around a :class:`PrefillEngine`."""
@@ -289,6 +321,13 @@ class LocalDecodeClient:
                 self.engine.release(i)
                 return True
         return False
+
+    def extract_resident(self, *, compress, backend):
+        return self.engine.extract_resident(compress=compress,
+                                            backend=backend)
+
+    def admit_migrated(self, items, *, backend):
+        return self.engine.admit_migrated(items, backend=backend)
 
 
 class LocalReplicaClient:
@@ -357,6 +396,13 @@ class LocalReplicaClient:
                 return True
         return False
 
+    def extract_resident(self, *, compress, backend):
+        return self._require("decode").extract_resident(compress=compress,
+                                                        backend=backend)
+
+    def admit_migrated(self, items, *, backend):
+        return self._require("decode").admit_migrated(items, backend=backend)
+
 
 def _as_prefill_client(obj) -> PrefillClient:
     if isinstance(obj, Replica):
@@ -374,6 +420,19 @@ def _as_decode_client(obj) -> DecodeClient:
 class ReplicaHandle:
     """Gateway-side view of one replica: liveness + latency tracking.
 
+    The failure detector is status-based (DESIGN.md §8):
+
+    * ``alive`` — in the routing tables, taking new work;
+    * ``suspected`` — kept OUT of routing (missed heartbeats or a
+      latency outlier) but still stepped: resident requests finish, and
+      recovery (a fresh beat / a healthy latency sample / a probe) flips
+      it back to alive. Suspicion is cheap to be wrong about;
+    * ``draining`` — spot-preemption notice received, admissions
+      stopped, resident KV migrating out (transient, within
+      ``handle_preemption``);
+    * ``dead`` — confirmed: requests recovered, failover reschedule
+      queued. Death is terminal for the handle.
+
     ``group`` is the replica's device-group identity from the deployment
     plan (the stable key across plan epochs); it is None for plan-less
     gateways built from bare engine lists, which then cannot take live
@@ -381,14 +440,39 @@ class ReplicaHandle:
     idx: int
     phase: str
     client: object
-    alive: bool = True
+    status: str = "alive"
+    suspect_why: Optional[str] = None   # "heartbeat" | "latency"
     group: Optional[Tuple[int, ...]] = None
     last_heartbeat: float = field(default_factory=time.time)
+    last_track: float = 0.0             # last latency observation
     ema_latency: float = 0.0            # straggler tracking
     min_latency: float = math.inf       # lower bound for deadline shedding
 
-    def beat(self):
-        self.last_heartbeat = time.time()
+    @property
+    def alive(self) -> bool:
+        """Not confirmed-dead (suspected/draining replicas still count —
+        they hold live state). Pre-dating the status model; new code
+        should test ``status`` directly."""
+        return self.status != "dead"
+
+    @alive.setter
+    def alive(self, v: bool):
+        self.status = "alive" if v else "dead"
+
+    @property
+    def dispatchable(self) -> bool:
+        """May take NEW work (suspected replicas are excluded until they
+        recover; draining/dead never come back)."""
+        return self.status == "alive"
+
+    def beat(self, now: Optional[float] = None):
+        self.last_heartbeat = now if now is not None else time.time()
+        # a beat refutes heartbeat-sourced suspicion only: latency
+        # suspicion clears on a healthy sample or a probe, not on beats
+        # (sync clients beat every pump)
+        if self.status == "suspected" and self.suspect_why == "heartbeat":
+            self.status = "alive"
+            self.suspect_why = None
 
     @property
     def engine(self):
@@ -405,8 +489,21 @@ class ReplicaHandle:
 class _Transfer:
     handle: RequestHandle
     ticket: TransferTicket
-    first: int
+    first: int               # first token (normal) / resume token (migrated)
     target: int
+    migrated: bool = False   # mid-stream KV migration, not a fresh prefill
+
+
+@dataclass
+class _RetrySend:
+    """A KV send that hit a transient transport fault, waiting out its
+    backoff before the next attempt."""
+    handle: RequestHandle
+    wire: KVWire
+    first: int
+    src: int                 # prefill replica that produced the wire
+    attempt: int             # next attempt number (1-based)
+    not_before: float
 
 
 # -- the gateway --------------------------------------------------------------
@@ -428,10 +525,19 @@ class Gateway:
                  orchestration: Optional[Orchestration] = None,
                  plan=None, compress: bool = True, backend: str = "auto",
                  heartbeat_timeout: float = 10.0, seed: int = 0,
-                 profiler: Optional[WorkloadProfiler] = None):
-        self.pre = [ReplicaHandle(i, "prefill", _as_prefill_client(e))
+                 profiler: Optional[WorkloadProfiler] = None,
+                 clock: Callable[[], float] = time.time,
+                 retry: Optional[RetryPolicy] = None,
+                 max_restarts: int = 5,
+                 suspect_timeout: Optional[float] = None,
+                 suspect_latency_factor: float = 4.0,
+                 suspect_probe_s: float = 1.0):
+        self.clock = clock               # injectable time source (faults.py)
+        self.pre = [ReplicaHandle(i, "prefill", _as_prefill_client(e),
+                                  last_heartbeat=clock())
                     for i, e in enumerate(prefills)]
-        self.dec = [ReplicaHandle(j, "decode", _as_decode_client(e))
+        self.dec = [ReplicaHandle(j, "decode", _as_decode_client(e),
+                                  last_heartbeat=clock())
                     for j, e in enumerate(decodes)]
         self.transport: Transport = transport or InProcessTransport()
         self.plan = plan                 # current DeploymentPlan, if bound
@@ -443,6 +549,12 @@ class Gateway:
         self.compress = compress
         self.backend = backend
         self.heartbeat_timeout = heartbeat_timeout
+        # suspected-slow threshold: missing beats for half the death
+        # timeout parks a replica out of routing before it is declared dead
+        self.suspect_timeout = (suspect_timeout if suspect_timeout is not None
+                                else heartbeat_timeout / 2.0)
+        self.suspect_latency_factor = suspect_latency_factor
+        self.suspect_probe_s = suspect_probe_s
         self.rng = np.random.default_rng(seed)
         self.profiler = profiler or WorkloadProfiler()
         self.queue: List[RequestHandle] = []
@@ -451,6 +563,21 @@ class Gateway:
         self.events: List[str] = []
         self._by_req: Dict[int, RequestHandle] = {}   # id(GenRequest) -> h
         self._decode_outage_reported = False
+        # fault tolerance (DESIGN.md §8)
+        self.retry = retry or RetryPolicy()
+        self.retry_queue: List[_RetrySend] = []
+        self._retry_rng = _random.Random(seed)
+        self.max_restarts = max_restarts
+        self.chaos = None                # set by faults.install_chaos
+        self._failover = None            # set by set_failover
+        self._pending_failover = False
+        # counters surfaced by stats()
+        self.n_retries = 0
+        self.n_requeues = 0
+        self.n_migrations = 0
+        self.n_migrated_tokens = 0
+        self.n_failed = 0
+        self.n_preemptions = 0
 
     def _bind_plan_groups(self, plan):
         """Tag live replica handles with their plan device groups (matched
@@ -468,8 +595,18 @@ class Gateway:
 
     # -- routing ------------------------------------------------------------
 
+    @staticmethod
+    def _routable(handles: Sequence[ReplicaHandle]) -> np.ndarray:
+        """Routing mask: healthy replicas first; if suspicion emptied the
+        fleet, fall back to the suspected ones (slow beats unserved) —
+        draining/dead replicas never take new work."""
+        m = np.array([h.status == "alive" for h in handles], float)
+        if m.sum() == 0:
+            m = np.array([h.status == "suspected" for h in handles], float)
+        return m
+
     def _X(self) -> np.ndarray:
-        alive = np.array([r.alive for r in self.pre], float)
+        alive = self._routable(self.pre)
         if self.o is not None and self.o.X.shape[0] == len(self.pre):
             x = self.o.X * alive
         else:
@@ -478,7 +615,7 @@ class Gateway:
         return x / s if s > 0 else alive / max(alive.sum(), 1)
 
     def _Y(self, i: int) -> np.ndarray:
-        alive = np.array([r.alive for r in self.dec], float)
+        alive = self._routable(self.dec)
         if self.o is not None and self.o.Y.shape == (len(self.pre),
                                                      len(self.dec)):
             y = self.o.Y[i] * alive
@@ -517,11 +654,13 @@ class Gateway:
         releases the slot (and its cache length) immediately."""
         if h.is_terminal:
             return False
-        now = time.time()
+        now = self.clock()
         if h in self.queue:
             self.queue.remove(h)
         self.transfer_queue = [t for t in self.transfer_queue
                                if t.handle is not h]
+        self.retry_queue = [r for r in self.retry_queue
+                            if r.handle is not h]
         if h.state == DECODING:
             for d in self.dec:
                 if d.client.release(h.req):
@@ -576,10 +715,16 @@ class Gateway:
 
     def pump(self, *, max_prefill_batch: int = 4) -> int:
         """One gateway iteration; returns #finished this round."""
-        now = time.time()
+        if self.chaos is not None:
+            self.chaos.tick(self.clock())
+        if self._pending_failover:
+            self._run_failover()
+        now = self.clock()
         self._check_heartbeats()
+        self._update_suspects(now)
         self._shed_expired(now)
-        # 1. dispatch queued prompts: drain EVERY alive prefill replica
+        self._flush_retries(now)
+        # 1. dispatch queued prompts: drain EVERY routable prefill replica
         #    this round (the TSTP masses only order who gets fed first)
         if self.queue:
             self.queue.sort(key=lambda h: (-h.request.priority, h.t_submit))
@@ -605,67 +750,140 @@ class Gateway:
         return self._step_decodes()
 
     def _dispatch_prefill(self, i: int, batch: List[RequestHandle]):
-        t0 = time.time()
+        t0 = self.clock()
         for h in batch:
             h._transition(PREFILLING, t0)
-        results = self.pre[i].client.prefill(
-            [h.req for h in batch], compress=self.compress,
-            backend=self.backend)
-        t1 = time.time()
-        self._track(self.pre[i], t1 - t0)
-        Y = self._Y(i)
-        routable = Y.sum() > 0
+        try:
+            results = self.pre[i].client.prefill(
+                [h.req for h in batch], compress=self.compress,
+                backend=self.backend)
+        except ReplicaCrashError as e:
+            now = self.clock()
+            self._confirm_dead(self.pre[i], str(e))
+            for h in batch:
+                self._requeue_handle(h, now, f"prefill:{i} crashed")
+            return
+        t1 = self.clock()
+        self._track(self.pre[i], t1 - t0, t1)
         for req, wire, first in results:
             h = self._by_req[id(req)]
             h._transition(TRANSFERRING, t1)
-            # with no alive decode replica the target is a placeholder;
-            # _drain_transfers holds the wire + events
-            j = (int(self.rng.choice(len(self.dec), p=Y)) if routable else 0)
-            ticket = self.transport.send(wire, i, j, now=t1)
-            self.transfer_queue.append(_Transfer(h, ticket, first, j))
+            self._send_wire(h, wire, first, i, t1)
+
+    # -- transient-fault retry (bounded backoff + jitter) --------------------
+
+    def _send_wire(self, h: RequestHandle, wire: KVWire, first: int,
+                   src: int, now: float, attempt: int = 0):
+        """Ship one wire toward a routable decode replica. A transient
+        transport fault schedules a retry instead of losing the request;
+        with no alive decode replica the target is a placeholder and
+        ``_drain_transfers`` holds the wire + events."""
+        Y = self._Y(src)
+        j = (int(self.rng.choice(len(self.dec), p=Y)) if Y.sum() > 0 else 0)
+        try:
+            ticket = self.transport.send(wire, src, j, now=now)
+        except TransientTransportError as e:
+            self._schedule_retry(h, wire, first, src, attempt, now, str(e))
+            return
+        self.transfer_queue.append(_Transfer(h, ticket, first, j))
+
+    def _schedule_retry(self, h: RequestHandle, wire: KVWire, first: int,
+                        src: int, attempt: int, now: float, why: str):
+        if attempt >= self.retry.max_retries:
+            self.events.append(f"request {h.request.rid}: transfer retries "
+                               f"exhausted after {attempt} attempt(s)")
+            self._requeue_handle(h, now, "transfer retries exhausted")
+            return
+        delay = self.retry.delay_s(attempt, self._retry_rng)
+        self.retry_queue.append(
+            _RetrySend(h, wire, first, src, attempt + 1, now + delay))
+        self.n_retries += 1
+        self.events.append(f"request {h.request.rid}: transfer retry "
+                           f"{attempt + 1} in {delay * 1e3:.0f}ms ({why})")
+
+    def _flush_retries(self, now: float):
+        if not self.retry_queue:
+            return
+        due, later = [], []
+        for r in self.retry_queue:
+            if r.handle.is_terminal:
+                continue             # cancelled while backing off
+            (due if r.not_before <= now else later).append(r)
+        self.retry_queue = later
+        for r in due:
+            self._send_wire(r.handle, r.wire, r.first, r.src, now,
+                            attempt=r.attempt)
 
     def _drain_transfers(self):
         if not self.transfer_queue:
             return
-        now = time.time()
+        now = self.clock()
         arrived = [t for t in self.transfer_queue if t.ticket.ready(now)]
         in_flight = [t for t in self.transfer_queue
                      if not t.ticket.ready(now)]
         if not arrived:
             return
-        alive = [j for j, d in enumerate(self.dec) if d.alive]
-        if not alive:
+        usable = [j for j, d in enumerate(self.dec) if d.dispatchable]
+        if not usable:
             # do NOT silently reroute to replica 0 (it is dead too) — keep
             # the wires queued and surface the outage once
             if not self._decode_outage_reported:
                 self.events.append(
                     "all decode replicas dead; KV transfers stalled")
                 self._decode_outage_reported = True
+            self.transfer_queue = in_flight + arrived
             return
         self._decode_outage_reported = False
         by_target: Dict[int, List[_Transfer]] = {}
         for t in arrived:
             j = t.target
-            if not self.dec[j].alive:
-                # reroute to the alive replica with the most free slots
-                j = max(alive, key=lambda jj: self.dec[jj].client.n_free())
+            if not self.dec[j].dispatchable:
+                # reroute to the healthy replica with the most free slots
+                j = max(usable, key=lambda jj: self.dec[jj].client.n_free())
             by_target.setdefault(j, []).append(t)
         still = in_flight
         for j, items in by_target.items():
+            mig = [t for t in items if t.migrated]
+            norm = [t for t in items if not t.migrated]
             n_free = self.dec[j].client.n_free()
-            take, rest = items[:n_free], items[n_free:]
+            take, rest = norm[:n_free], norm[n_free:]
             if take:
-                rejected = self.dec[j].client.admit(
-                    [(t.handle.req, t.ticket.wire, t.first) for t in take],
-                    backend=self.backend)
+                try:
+                    rejected = self.dec[j].client.admit(
+                        [(t.handle.req, t.ticket.wire, t.first)
+                         for t in take], backend=self.backend)
+                except ReplicaCrashError as e:
+                    self._confirm_dead(self.dec[j], str(e))
+                    still.extend(rest + take + mig)   # retry next pump
+                    continue
                 rej_reqs = {id(r) for r, _, _ in rejected}
-                t_adm = time.time()
+                t_adm = self.clock()
                 for t in take:
                     if id(t.handle.req) in rej_reqs:
                         rest.append(t)
                         continue
                     t.handle._transition(DECODING, t_adm)
                     self._sync_tokens(t.handle, t_adm)
+            if mig:
+                # migrated wires resume mid-stream: admit_migrated does
+                # its own capacity check and never re-appends the resume
+                # token; a rejected wire stays queued until the target
+                # frees capacity (or its target dies -> reroute)
+                try:
+                    rejected = self.dec[j].client.admit_migrated(
+                        [(t.handle.req, t.ticket.wire, t.first)
+                         for t in mig], backend=self.backend)
+                except ReplicaCrashError as e:
+                    self._confirm_dead(self.dec[j], str(e))
+                    still.extend(rest + mig)
+                    continue
+                rej_reqs = {id(r) for r, _, _ in rejected}
+                t_adm = self.clock()
+                for t in mig:
+                    if id(t.handle.req) in rej_reqs:
+                        rest.append(t)
+                        continue
+                    t.handle._transition(DECODING, t_adm)
             still.extend(rest)
         self.transfer_queue = still
 
@@ -674,11 +892,15 @@ class Gateway:
         for handle in self.dec:
             if not handle.alive:
                 continue
-            t0 = time.time()
-            finished = handle.client.step()
-            t1 = time.time()
+            t0 = self.clock()
+            try:
+                finished = handle.client.step()
+            except ReplicaCrashError as e:
+                self._confirm_dead(handle, str(e))
+                continue
+            t1 = self.clock()
             if handle.client.active or finished:
-                self._track(handle, t1 - t0)
+                self._track(handle, t1 - t0, t1)
             for req in handle.client.resident():
                 self._sync_tokens(self._by_req[id(req)], t1)
             for req in finished:
@@ -723,30 +945,42 @@ class Gateway:
         if new:
             h._deliver(new, now)
 
+    def _sleep(self, dt: float):
+        """Wait helper that understands virtual clocks: a VirtualClock
+        advances (so simulated wires land and backoffs expire without wall
+        time); a wall clock really sleeps."""
+        adv = getattr(self.clock, "advance", None)
+        if adv is not None:
+            adv(dt)
+        else:
+            time.sleep(dt)
+
     def run_until_drained(self, *, max_iters: int = 10000,
                           poll_s: float = 2e-4) -> List[RequestHandle]:
         """Drive until every submitted request is terminal (or decode is
         wedged); returns terminal handles in completion order."""
         it = 0
-        while (self.queue or self.transfer_queue
+        while (self.queue or self.transfer_queue or self.retry_queue
                or any(d.alive and d.client.active for d in self.dec)) \
                 and it < max_iters:
             n = self.pump()
             it += 1
-            if n == 0 and not self.queue and self.transfer_queue \
+            if n == 0 and not self.queue \
+                    and (self.transfer_queue or self.retry_queue) \
                     and not any(d.alive and d.client.active
                                 for d in self.dec):
-                # nothing computable until a simulated wire lands (or a
-                # dead fleet recovers): don't burn max_iters busy-spinning
-                time.sleep(poll_s)
+                # nothing computable until a simulated wire lands / a
+                # backoff expires (or a dead fleet recovers): don't burn
+                # max_iters busy-spinning
+                self._sleep(poll_s)
         return self.done
 
     # -- fault tolerance ----------------------------------------------------
 
     def _check_heartbeats(self):
-        now = time.time()
+        now = self.clock()
         for h in self.pre + self.dec:
-            if not h.alive:
+            if h.status in ("dead", "draining"):
                 continue
             if getattr(h.client, "synchronous", False):
                 # an in-process client cannot miss a heartbeat: its calls
@@ -754,46 +988,310 @@ class Gateway:
                 # compilation) is not evidence of replica death — only
                 # kill_replica takes a local replica down. Timeout-based
                 # death is for asynchronous/remote clients.
-                h.beat()
+                h.beat(now)
                 continue
-            if now - h.last_heartbeat > self.heartbeat_timeout:
-                h.alive = False
+            silent = now - h.last_heartbeat
+            if silent > self.heartbeat_timeout:
                 self.events.append(f"replica {h.phase}:{h.idx} timed out")
-                self._recover_from(h)
+                self._confirm_dead(
+                    h, f"heartbeat timed out ({silent:.1f}s silent)")
+            elif silent > self.suspect_timeout and h.status == "alive":
+                h.status = "suspected"
+                h.suspect_why = "heartbeat"
+                self.events.append(f"replica {h.phase}:{h.idx} suspected "
+                                   f"({silent:.1f}s without a heartbeat)")
 
-    def kill_replica(self, phase: str, idx: int):
-        """Failure injection (tests/benchmarks)."""
+    def _update_suspects(self, now: float):
+        """Latency-based suspicion: a replica whose EMA latency exceeds
+        ``suspect_latency_factor`` x the fleet median leaves the routing
+        tables (it still steps its resident work). Recovery is either a
+        healthy sample or — for a suspected replica starved of traffic,
+        whose EMA can never refresh — a probe re-admission after
+        ``suspect_probe_s`` without an observation."""
+        for handles in (self.pre, self.dec):
+            obs = [h.ema_latency for h in handles
+                   if h.status in ("alive", "suspected")
+                   and h.ema_latency > 0]
+            if len(obs) >= 2:
+                bar = self.suspect_latency_factor * float(np.median(obs))
+                for h in handles:
+                    if h.ema_latency <= 0 or bar <= 0:
+                        continue
+                    if h.status == "alive" and h.ema_latency > bar:
+                        h.status = "suspected"
+                        h.suspect_why = "latency"
+                        self.events.append(
+                            f"replica {h.phase}:{h.idx} suspected (latency "
+                            f"{h.ema_latency * 1e3:.1f}ms > "
+                            f"{bar * 1e3:.1f}ms)")
+                    elif (h.status == "suspected"
+                          and h.suspect_why == "latency"
+                          and h.ema_latency <= bar):
+                        h.status = "alive"
+                        h.suspect_why = None
+                        self.events.append(
+                            f"replica {h.phase}:{h.idx} recovered "
+                            f"(latency back under the bar)")
+            for h in handles:
+                if (h.status == "suspected" and h.suspect_why == "latency"
+                        and now - h.last_track > self.suspect_probe_s):
+                    h.status = "alive"
+                    h.suspect_why = None
+                    self.events.append(
+                        f"replica {h.phase}:{h.idx} probe: re-admitted "
+                        f"to routing for a fresh measurement")
+
+    def kill_replica(self, phase: str, idx: int, *, recover: bool = True):
+        """Failure injection (tests/benchmarks). ``recover=False`` models
+        the NO-HANDLING baseline: the replica dies and its resident
+        requests are silently stranded (they never reach a terminal
+        state) — the contrast the fault-tolerance bench measures."""
         group = self.pre if phase == "prefill" else self.dec
-        group[idx].alive = False
+        h = group[idx]
+        h.status = "dead"
         self.events.append(f"replica {phase}:{idx} killed")
-        self._recover_from(group[idx])
+        if recover:
+            self._recover_from(h)
+            self._pending_failover = True
+
+    def _confirm_dead(self, h: ReplicaHandle, why: str):
+        """suspected/alive -> dead: recover resident requests and queue a
+        failover reschedule (picked up at the top of the next pump — never
+        mid-iteration, so dispatch loops don't see half-rebuilt replica
+        lists)."""
+        if h.status == "dead":
+            return
+        h.status = "dead"
+        h.suspect_why = None
+        self.events.append(f"replica {h.phase}:{h.idx} confirmed dead "
+                           f"({why})")
+        self._recover_from(h)
+        self._pending_failover = True
 
     def _recover_from(self, h: ReplicaHandle):
         """Requests in a dead decode replica lose their KV — their handles
         transition DECODING -> QUEUED (visible in ``history``, counted in
         ``restarts``) and they re-enter the queue for a fresh prefill on a
-        surviving replica."""
+        surviving replica. A request past ``max_restarts`` FAILs instead
+        of looping forever."""
         if h.phase != "decode":
             return
-        now = time.time()
+        now = self.clock()
         for req in h.client.resident():
             h.client.release(req)
-            hd = self._by_req[id(req)]
-            hd._requeue(now)
-            self.queue.append(hd)
-            self.events.append(f"request {req.rid} re-queued after "
-                               f"decode:{h.idx} failure")
+            hd = self._by_req.get(id(req))
+            if hd is not None:
+                self._requeue_handle(hd, now,
+                                     f"after decode:{h.idx} failure")
+
+    def _requeue_handle(self, hd: RequestHandle, now: float, why: str):
+        """The ONE requeue-through-prefill path (decode death, preemption
+        overflow, retry exhaustion, prefill crash): KV is gone, delivered
+        tokens are kept, the regenerated prefix is suppressed. Gives up
+        with FAILED once ``max_restarts`` attempts are burned."""
+        if hd.is_terminal:
+            return
+        if hd.restarts >= self.max_restarts:
+            hd._transition(FAILED, now,
+                           reason=f"gave up after {hd.restarts} restart(s): "
+                                  f"{why}")
+            self._finish(hd)
+            self.n_failed += 1
+            self.events.append(f"request {hd.request.rid} failed: {why}")
+            return
+        hd._requeue(now)
+        self.queue.append(hd)
+        self.n_requeues += 1
+        self.events.append(f"request {hd.request.rid} re-queued {why}")
+
+    # -- spot preemption: page-granular KV drain -----------------------------
+
+    def handle_preemption(self, phase: str, idx: int,
+                          grace_s: float = 1.0, *,
+                          now: Optional[float] = None) -> Dict[str, int]:
+        """Spot-preemption notice for replica ``phase:idx`` with a grace
+        window of ``grace_s`` seconds (ROADMAP item 4: treat the notice as
+        a planned drain).
+
+        Admissions stop immediately (status ``draining``). For a decode
+        replica, every resident request's KV is extracted PAGE-GRANULAR
+        (zero-dequant for the int4 residency — the pages already hold the
+        wire encoding) and shipped over the transport's decode->decode
+        links to the surviving replica with the most capacity. Transfers
+        whose cumulative delay would outlive the grace window — and
+        everything when no survivor exists — fall back to
+        requeue-through-prefill, so no accepted request is ever lost. The
+        replica is then confirmed dead, which queues the failover
+        reschedule. Returns ``{"migrated", "requeued", "tokens_migrated"}``.
+        """
+        now = now if now is not None else self.clock()
+        handles = self.pre if phase == "prefill" else self.dec
+        h = handles[idx]
+        if h.status == "dead":
+            return {"migrated": 0, "requeued": 0, "tokens_migrated": 0}
+        self.n_preemptions += 1
+        h.status = "draining"
+        self.events.append(f"replica {phase}:{idx} preemption notice "
+                           f"(grace {grace_s:.2f}s)")
+        migrated = requeued = tokens_moved = 0
+        if phase == "decode":
+            try:
+                items = h.client.extract_resident(compress=self.compress,
+                                                  backend=self.backend)
+            except Exception as e:     # died before the drain: requeue-all
+                self.events.append(f"decode:{idx} drain extract failed "
+                                   f"({e}); requeueing residents")
+                items = []
+            survivors = [j for j, d in enumerate(self.dec)
+                         if j != idx and d.status == "alive"]
+            send = getattr(self.transport, "send_decode",
+                           self.transport.send)
+            budget = grace_s
+            for _slot, req, wire, cur in items:
+                hd = self._by_req.get(id(req))
+                if hd is None:
+                    h.client.release(req)
+                    continue
+                ticket = None
+                if survivors and budget > 0:
+                    target = max(survivors,
+                                 key=lambda j: self.dec[j].client.n_free())
+                    ticket = send(wire, idx, target, now=now)
+                    budget -= ticket.delay_s
+                    if budget < 0:
+                        # this transfer would outlive the node: abandon it
+                        ticket = None
+                if ticket is not None:
+                    hd._transition(TRANSFERRING, now)
+                    self.transfer_queue.append(
+                        _Transfer(hd, ticket, cur, target, migrated=True))
+                    migrated += 1
+                    tokens_moved += wire.request_len
+                    self.events.append(
+                        f"request {req.rid} migrating decode:{idx} -> "
+                        f"decode:{target} ({wire.request_len} tokens)")
+                else:
+                    self._requeue_handle(
+                        hd, now, f"(preempted decode:{idx}, "
+                                 f"no migration target/grace)")
+                    requeued += 1
+                h.client.release(req)
+            # anything extract_resident missed goes the requeue path
+            self._recover_from(h)
+        self.n_migrations += migrated
+        self.n_migrated_tokens += tokens_moved
+        self._confirm_dead(h, f"spot preemption (grace {grace_s:.2f}s "
+                              f"elapsed)")
+        self.events.append(f"preemption drain {phase}:{idx}: {migrated} "
+                           f"migrated, {requeued} requeued")
+        return {"migrated": migrated, "requeued": requeued,
+                "tokens_migrated": tokens_moved}
+
+    # -- failover: epoch reschedule excluding dead nodes ---------------------
+
+    def set_failover(self, cluster, cfg: ModelConfig, slo: SloSpec, *,
+                     workload=None, rate: Optional[float] = None,
+                     search_fn=None):
+        """Arm automatic failover rescheduling: when a replica is
+        confirmed dead, the next pump re-plans on the surviving device
+        groups (``drop_nodes`` -> flip-only search seeded with the
+        survivors -> ``plan_diff`` -> ``apply_plan``). ``search_fn`` must
+        accept ``reschedule_lightweight``'s signature (incl.
+        ``init_solution``)."""
+        self._failover = {"cluster": cluster, "cfg": cfg, "slo": slo,
+                          "workload": workload, "rate": rate,
+                          "search_fn": search_fn}
+
+    def _run_failover(self):
+        self._pending_failover = False
+        ctx = self._failover
+        if ctx is None or not self._is_plan_bound():
+            return None
+        plan_groups = {sched._group_key(r.devices) for r in
+                       (list(self.plan.prefill_replicas)
+                        + list(self.plan.decode_replicas))}
+        dead_groups = [h.group for h in self.pre + self.dec
+                       if h.status == "dead" and h.group in plan_groups]
+        if not dead_groups:
+            return None
+        dead_devices = sorted({d for g in dead_groups for d in g})
+        wl = ctx["workload"] or self.profiler.as_workload()
+        if wl is None:
+            self.events.append("failover reschedule skipped: no workload "
+                               "observation yet (pass workload= to "
+                               "set_failover)")
+            return None
+        rate = self.profiler.arrival_rate() or ctx["rate"] or 1.0
+        init = sched.drop_nodes(ctx["cluster"], self.plan, dead_devices)
+        if not init.groups:
+            self.events.append("failover reschedule skipped: no surviving "
+                               "groups")
+            return None
+        search = ctx["search_fn"] or sched.reschedule_lightweight
+        try:
+            new_plan = search(ctx["cluster"], ctx["cfg"], self.plan, wl,
+                              rate, ctx["slo"], init_solution=init)
+            delta = sched.plan_diff(self.plan, new_plan)
+            n = 0 if delta.is_noop else self.apply_plan(delta)
+        except Exception as e:
+            self.events.append(f"failover reschedule failed: {e}")
+            return None
+        self.events.append(f"failover reschedule: dropped devices "
+                           f"{dead_devices}, {n} request(s) requeued")
+        return new_plan
 
     def heartbeat_all(self):
+        now = self.clock()
         for h in self.pre + self.dec:
             if h.alive:
-                h.beat()
+                h.beat(now)
 
-    def _track(self, h: ReplicaHandle, dt: float):
-        h.beat()
+    def _track(self, h: ReplicaHandle, dt: float,
+               now: Optional[float] = None):
+        now = now if now is not None else self.clock()
+        h.beat(now)
+        h.last_track = now
         h.ema_latency = 0.8 * h.ema_latency + 0.2 * dt if h.ema_latency \
             else dt
         h.min_latency = min(h.min_latency, dt)
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """Operational counters for drivers/dashboards: queue depths,
+        recovery counters, aggregated page-pool stats (incl.
+        ``alloc_failures``), and per-replica detector status."""
+        pool: Optional[Dict[str, float]] = None
+        for d in self.dec:
+            eng = d.engine
+            st = eng.page_stats() if hasattr(eng, "page_stats") else None
+            if st is None:
+                continue
+            if pool is None:
+                pool = {k: 0.0 for k in
+                        ("pages", "in_use", "free", "peak_in_use", "allocs",
+                         "frees", "alloc_failures", "zero_copy_inserts",
+                         "reencoded_inserts")}
+            for k in pool:
+                pool[k] += st.get(k, 0)
+        return {
+            "epoch": self.epoch,
+            "queued": len(self.queue),
+            "transfers_in_flight": len(self.transfer_queue),
+            "retries_pending": len(self.retry_queue),
+            "counters": {"retries": self.n_retries,
+                         "requeues": self.n_requeues,
+                         "migrations": self.n_migrations,
+                         "migrated_tokens": self.n_migrated_tokens,
+                         "preemptions": self.n_preemptions,
+                         "failed": self.n_failed},
+            "page_pool": pool,
+            "replicas": [{"phase": h.phase, "idx": h.idx,
+                          "status": h.status,
+                          "suspect_why": h.suspect_why,
+                          "ema_latency_s": round(h.ema_latency, 6)}
+                         for h in self.pre + self.dec],
+        }
 
     # -- straggler mitigation -----------------------------------------------
 
@@ -868,7 +1366,7 @@ class Gateway:
                 f"{[list(g) for g, _ in delta.added]}: a live epoch "
                 f"transition only re-designates resident replicas (run a "
                 f"full redeploy for new groups)")
-        now = time.time()
+        now = self.clock()
         by_group: Dict[Tuple[int, ...], ReplicaHandle] = {}
         for h in self.pre + self.dec:
             if h.group is None:
@@ -958,10 +1456,10 @@ class Gateway:
         n = 0
         for req in list(h.client.resident()):
             h.client.release(req)
-            hd = self._by_req[id(req)]
-            hd._requeue(now)
-            self.queue.append(hd)
-            self.events.append(f"request {req.rid} re-queued: {why}")
+            hd = self._by_req.get(id(req))
+            if hd is None:
+                continue
+            self._requeue_handle(hd, now, f": {why}")
             n += 1
         return n
 
@@ -1110,6 +1608,7 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
     it = 0
     last_tick = t0
     while i < len(pending) or gw.queue or gw.transfer_queue \
+            or gw.retry_queue \
             or any(d.alive and d.client.active for d in gw.dec):
         if tick is not None and time.time() - last_tick >= tick_interval_s:
             tick(gw)
@@ -1118,11 +1617,12 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
         while i < len(pending) and pending[i][0] * time_scale <= now:
             handles.append(gw.submit(pending[i][1], on_token=on_token))
             i += 1
-        busy = (gw.queue or gw.transfer_queue
+        busy = (gw.queue or gw.transfer_queue or gw.retry_queue
                 or any(d.alive and d.client.active for d in gw.dec))
         if busy:
             n = gw.pump()
-            if n == 0 and not gw.queue and gw.transfer_queue \
+            if n == 0 and not gw.queue \
+                    and (gw.transfer_queue or gw.retry_queue) \
                     and not any(d.alive and d.client.active
                                 for d in gw.dec):
                 # only in-flight simulated wires remain: wait for t_ready

@@ -189,6 +189,55 @@ def insert_wires(cache, cfg, items: Sequence[Tuple[KVWire, int, List[int]]],
     return cache, n_zero, n_reenc
 
 
+def extract_slot_wire(cache, cfg, ln: int, pages: Sequence[int],
+                      ) -> KVWire:
+    """Gather one resident slot's pages back into a :class:`KVWire`
+    (the decode->decode migration path of ``Gateway.handle_preemption``).
+
+    For the int4 residency this is a pure page gather — the pages already
+    hold the wire's position-aligned group encoding, so the produced
+    tensors pass ``_wire_rows_aligned`` and scatter zero-copy into the
+    destination pool (no dequant/requant round-trip in either direction).
+    The bf16 residency ships raw tokens. Tokens appended by the in-loop
+    decode quantizer extract bit-identically to wire-inserted ones
+    (``models/paged.py`` keeps the two paths on the same kernel math).
+    """
+    int4 = "kp" in cache["slot0"]
+    ps = cache_page_size(cache, cfg)
+    ppr = paged.groups_per_token(cfg)
+    g = paged.page_group(cfg)
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    if pages_needed(ln, ps) > len(pages):
+        raise ValueError(f"{ln}-token slot spans more than {len(pages)} "
+                         f"page(s)")
+    pg = np.asarray(pages, np.int32)
+    slots: Dict[str, Dict[str, WireTensor]] = {}
+    for name, buf in cache.items():
+        if name in ("page_table", "lengths"):
+            continue
+        out: Dict[str, WireTensor] = {}
+        for key, base in (("k", "k"), ("v", "v")):
+            if int4:
+                payload = {}
+                for suffix, wkey, width in (("p", "packed", g // 2),
+                                            ("s", "scale", 1),
+                                            ("z", "zero", 1)):
+                    a = buf[base + suffix][:, pg]        # (L, n_pg, R, w)
+                    L = a.shape[0]
+                    payload[wkey] = a.reshape(
+                        L, len(pages) * ps, ppr, width)[:, :ln].reshape(
+                        -1, width)
+                out[key] = WireTensor("int4", payload, (L, ln, Hkv, hd))
+            else:
+                a = buf[base][:, pg]                 # (L, n_pg, ps, Hkv, hd)
+                L = a.shape[0]
+                t = a.reshape(L, len(pages) * ps, Hkv, hd)[:, :ln]
+                out[key] = WireTensor("raw", {"x": t}, tuple(t.shape),
+                                      str(t.dtype))
+        slots[name] = out
+    return KVWire(request_len=ln, slots=slots)
+
+
 def release_slot(cache, slot: int):
     """Point a released slot's table row back at the trash page and zero
     its length (the pages themselves go back through ``PagePool.free``)."""

@@ -74,6 +74,11 @@ class InProcessTransport:
         self.transfers += 1
         return TransferTicket(wire, now if now is not None else time.time())
 
+    def send_decode(self, wire: KVWire, src_dec: int, dst_dec: int,
+                    *, now: Optional[float] = None) -> TransferTicket:
+        """Decode->decode KV migration hop (preemption drains): free."""
+        return self.send(wire, src_dec, dst_dec, now=now)
+
 
 class SimNetworkTransport:
     """Alpha-beta cost model per (prefill replica, decode replica) link.
@@ -112,7 +117,7 @@ class SimNetworkTransport:
         self.bytes_sent = 0
         self.total_delay_s = 0.0
         self.min_delay_s = 0.0
-        self._links: Dict[Tuple[int, int], Tuple[float, float]] = {}
+        self._links: Dict[Tuple[str, int, int], Tuple[float, float]] = {}
 
     @classmethod
     def from_plan(cls, cluster, plan, **kw) -> "SimNetworkTransport":
@@ -132,32 +137,48 @@ class SimNetworkTransport:
         self.dec_devices = [list(r.devices) for r in plan.decode_replicas]
         self._links.clear()
 
-    def link(self, src_replica: int, dst_replica: int) -> Tuple[float, float]:
-        """(alpha_s, bandwidth_Bps) for one prefill->decode link."""
-        key = (src_replica, dst_replica)
+    def _link_between(self, key: Tuple[str, int, int],
+                      src_group: Optional[Sequence[int]],
+                      dst_group: Optional[Sequence[int]]) -> Tuple[float, float]:
+        """(alpha_s, bandwidth_Bps) between two device groups, cached."""
         if key in self._links:
             return self._links[key]
         alpha = self.alpha if self.alpha is not None else (
             self.cluster.alpha if self.cluster is not None else 0.0)
         bw = self.bandwidth
         if (bw is None and self.cluster is not None
-                and src_replica < len(self.pre_devices)
-                and dst_replica < len(self.dec_devices)):
-            bw = self.cluster.min_bw_between(self.pre_devices[src_replica],
-                                             self.dec_devices[dst_replica])
+                and src_group is not None and dst_group is not None):
+            bw = self.cluster.min_bw_between(src_group, dst_group)
         if bw is None and self.cluster is not None:
             bw = float(self.cluster.bw[self.cluster.bw > 0].min())
         self._links[key] = (alpha, float(bw))
         return self._links[key]
 
-    def send(self, wire: KVWire, src_replica: int, dst_replica: int,
-             *, now: Optional[float] = None) -> TransferTicket:
+    def link(self, src_replica: int, dst_replica: int) -> Tuple[float, float]:
+        """(alpha_s, bandwidth_Bps) for one prefill->decode link."""
+        src = (self.pre_devices[src_replica]
+               if src_replica < len(self.pre_devices) else None)
+        dst = (self.dec_devices[dst_replica]
+               if dst_replica < len(self.dec_devices) else None)
+        return self._link_between(("pd", src_replica, dst_replica), src, dst)
+
+    def link_decode(self, src_dec: int, dst_dec: int) -> Tuple[float, float]:
+        """(alpha_s, bandwidth_Bps) for a decode->decode migration link
+        (used by ``Gateway.handle_preemption`` to drain KV pages off a
+        preempted replica)."""
+        src = (self.dec_devices[src_dec]
+               if src_dec < len(self.dec_devices) else None)
+        dst = (self.dec_devices[dst_dec]
+               if dst_dec < len(self.dec_devices) else None)
+        return self._link_between(("dd", src_dec, dst_dec), src, dst)
+
+    def _ship(self, wire: KVWire, alpha: float, bw: float,
+              now: Optional[float]) -> TransferTicket:
         now = now if now is not None else time.time()
         wire.materialize()          # the explicit host hop of a real network
         nbytes = (wire.nbytes() if self.count_compressed
                   else wire_bytes_uncompressed(wire))
         nbytes = int(nbytes * self.bytes_scale)
-        alpha, bw = self.link(src_replica, dst_replica)
         delay = alpha + nbytes / max(bw, 1.0)
         self.transfers += 1
         self.bytes_sent += nbytes
@@ -165,6 +186,17 @@ class SimNetworkTransport:
         self.min_delay_s = (delay if self.transfers == 1
                             else min(self.min_delay_s, delay))
         return TransferTicket(wire, now + delay, delay, nbytes)
+
+    def send(self, wire: KVWire, src_replica: int, dst_replica: int,
+             *, now: Optional[float] = None) -> TransferTicket:
+        alpha, bw = self.link(src_replica, dst_replica)
+        return self._ship(wire, alpha, bw, now)
+
+    def send_decode(self, wire: KVWire, src_dec: int, dst_dec: int,
+                    *, now: Optional[float] = None) -> TransferTicket:
+        """Decode->decode KV migration hop (preemption drains)."""
+        alpha, bw = self.link_decode(src_dec, dst_dec)
+        return self._ship(wire, alpha, bw, now)
 
     @property
     def mean_delay_s(self) -> float:

@@ -1,0 +1,522 @@
+"""Fault injection + recovery (ISSUE 6 / DESIGN.md §8).
+
+Covers the chaos layer end to end: seeded reproducible schedules, the
+virtual clock, bounded retry with backoff falling back to
+requeue-through-prefill, the status-based failure detector (suspected
+vs confirmed-dead, heartbeat and latency sources, probe recovery),
+page-exact accounting across every requeue path, spot-preemption drains
+that migrate decode KV page-granular with ZERO token loss (bit-identical
+to an uninterrupted run), the FAILED/REJECTED reason contract from
+every non-terminal state, `Gateway.stats()`, and death composing into a
+failover reschedule that excludes the dead node's devices.
+"""
+import time
+from types import SimpleNamespace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced
+from repro.core import scheduler, tabu
+from repro.core.cluster import make_paper_cloud
+from repro.core.orchestrator import SloSpec
+from repro.core.workload import CONVERSATION
+from repro.models import build
+from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.faults import (CRASH, PREEMPT, STRAGGLER, TRANSIENT,
+                                  ChaosClient, ChaosTransport, FaultEvent,
+                                  FaultSchedule, ReplicaCrashError,
+                                  RetryPolicy, TransientTransportError,
+                                  VirtualClock, install_chaos)
+from repro.serving.gateway import (DECODING, DONE, FAILED, PREFILLING, QUEUED,
+                                   REJECTED, TRANSFERRING, Gateway,
+                                   RequestHandle, ServeRequest,
+                                   gateway_from_plan, warmup_engines)
+from repro.serving.transport import InProcessTransport
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(KEY)
+    return cfg, params
+
+
+def _prompt(cfg, n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+def _gw(cfg, params, *, n_dec=2, max_slots=4, chunk_size=4, paged=False,
+        transport=None, **gw_kw):
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    dkw = dict(max_slots=max_slots, chunk_size=chunk_size, max_seq=64)
+    if paged:
+        dkw.update(paged=True, page_size=8)
+    decs = [DecodeEngine(cfg, params, **dkw) for _ in range(n_dec)]
+    return Gateway([pre], decs, transport=transport, backend="ref", **gw_kw)
+
+
+def _reqs(cfg, n, *, max_new=16, plen=12, **kw):
+    return [ServeRequest(i, _prompt(cfg, plen, seed=i), max_new, **kw)
+            for i in range(n)]
+
+
+# -- schedule / policy / clock (no model) -------------------------------------
+
+
+def test_fault_schedule_reproducible():
+    a = FaultSchedule.random(seed=7, horizon_s=10.0, n_events=4,
+                             kinds=(CRASH, TRANSIENT, STRAGGLER, PREEMPT))
+    b = FaultSchedule.random(seed=7, horizon_s=10.0, n_events=4,
+                             kinds=(CRASH, TRANSIENT, STRAGGLER, PREEMPT))
+    key = lambda e: (e.t, e.kind, e.phase, e.idx, e.duration_s, e.grace_s,
+                     e.slow_s)
+    assert [key(e) for e in a.events] == [key(e) for e in b.events]
+    c = FaultSchedule.random(seed=8, horizon_s=10.0, n_events=4)
+    assert [key(e) for e in a.events] != [key(e) for e in c.events]
+    # events are sorted by fire time, and due() only surfaces point events
+    assert all(x.t <= y.t for x, y in zip(a.events, a.events[1:]))
+    a.arm(100.0)
+    due = a.due(100.0 + 11.0)
+    assert all(e.kind in (CRASH, PREEMPT) for e in due)
+
+
+def test_fault_schedule_windows():
+    s = FaultSchedule([FaultEvent(t=1.0, kind=TRANSIENT, duration_s=0.5),
+                       FaultEvent(t=2.0, kind=STRAGGLER, phase="decode",
+                                  idx=1, duration_s=0.5, slow_s=0.07)])
+    s.arm(10.0)
+    assert not s.transport_faulty(10.9)
+    assert s.transport_faulty(11.0) and s.transport_faulty(11.49)
+    assert not s.transport_faulty(11.5)
+    assert s.straggle_s("decode", 1, 12.2) == pytest.approx(0.07)
+    assert s.straggle_s("decode", 0, 12.2) == 0.0
+    assert s.straggle_s("decode", 1, 12.6) == 0.0
+
+
+def test_retry_policy_backoff():
+    p = RetryPolicy(max_retries=4, base_s=0.02, multiplier=2.0, jitter=0.5,
+                    max_s=0.1)
+    import random
+    rng = random.Random(0)
+    for attempt, nominal in enumerate([0.02, 0.04, 0.08, 0.1, 0.1]):
+        d = p.delay_s(attempt, rng)
+        assert 0.5 * nominal <= d <= 1.5 * nominal
+    # same seed -> same jittered delays
+    a = [p.delay_s(i, random.Random(3)) for i in range(3)]
+    b = [p.delay_s(i, random.Random(3)) for i in range(3)]
+    assert a == b
+
+
+def test_virtual_clock():
+    clk = VirtualClock(5.0)
+    assert clk() == 5.0
+    clk.advance(0.25)
+    clk.sleep(0.25)
+    assert clk() == pytest.approx(5.5)
+
+
+def test_chaos_transport_unit():
+    sent = []
+    inner = SimpleNamespace(
+        send=lambda w, s, d, *, now=None: sent.append(("pd", s, d)) or "tkt",
+        send_decode=lambda w, s, d, *, now=None:
+            sent.append(("dd", s, d)) or "tkt",
+        transfers=0)
+    clk = VirtualClock()
+    s = FaultSchedule([FaultEvent(t=1.0, kind=TRANSIENT, duration_s=0.5)])
+    s.arm(clk())
+    ct = ChaosTransport(inner, s, clk)
+    assert ct.send(None, 0, 1) == "tkt"          # before the window
+    clk.advance(1.2)
+    with pytest.raises(TransientTransportError):
+        ct.send(None, 0, 1)
+    with pytest.raises(TransientTransportError):
+        ct.send_decode(None, 0, 1)
+    assert ct.faults_raised == 2
+    clk.advance(0.5)                             # window over
+    assert ct.send_decode(None, 0, 1) == "tkt"
+    assert ct.transfers == 0                     # attribute forwarding
+
+
+def test_chaos_client_unit():
+    inner = SimpleNamespace(step=lambda: ["stepped"],
+                            resident=lambda: ["r0"],
+                            release=lambda r: True,
+                            n_free=lambda: 3)
+    clk = VirtualClock()
+    s = FaultSchedule([FaultEvent(t=0.0, kind=STRAGGLER, phase="decode",
+                                  idx=0, duration_s=1.0, slow_s=0.2)])
+    s.arm(clk())
+    c = ChaosClient(inner, s, "decode", 0, clk)
+    t0 = clk()
+    assert c.step() == ["stepped"]
+    assert clk() - t0 == pytest.approx(0.2)      # straggler stall, virtual
+    s.mark_crashed(c.cid)
+    assert c.crashed
+    with pytest.raises(ReplicaCrashError):
+        c.step()
+    assert c.n_free() == 0                       # routing steers away
+    assert c.resident() == ["r0"]                # recovery calls still work
+    assert c.release("r0") is True
+
+
+def test_failed_rejected_require_reason():
+    gw = SimpleNamespace(clock=lambda: 0.0)
+
+    def fresh(path):
+        h = RequestHandle(ServeRequest(0, np.ones(4, np.int32), 4),
+                          GenRequest(0, np.ones(4, np.int32), 4), gw)
+        for st in path:
+            h._transition(st)
+        return h
+
+    paths = [(), (PREFILLING,), (PREFILLING, TRANSFERRING),
+             (PREFILLING, TRANSFERRING, DECODING)]
+    for path in paths:
+        h = fresh(path)
+        with pytest.raises(ValueError):
+            h._transition(FAILED)                # no reason -> refused
+        assert h.state == (path[-1] if path else QUEUED)
+        h._transition(FAILED, reason="boom")
+        assert h.state == FAILED and h.reason == "boom"
+    h = fresh(())
+    with pytest.raises(ValueError):
+        h._transition(REJECTED)
+    h._transition(REJECTED, reason="deadline")
+    assert h.reason == "deadline"
+
+
+def test_virtual_clock_deadline_shed():
+    """Deadline shedding is deterministic under an injected clock: no
+    sleeping, no wall time — advance past the TTFT deadline and pump."""
+    clk = VirtualClock()
+    pre = SimpleNamespace(synchronous=True, prefill=lambda *a, **k: [])
+    dec = SimpleNamespace(synchronous=True, step=lambda: [], n_free=lambda: 1,
+                          active=0, resident=lambda: [],
+                          release=lambda r: False)
+    gw = Gateway([pre], [dec], clock=clk)
+    h = gw.submit(ServeRequest(0, np.ones(4, np.int32), 4,
+                               ttft_deadline_s=0.5))
+    clk.advance(1.0)
+    gw.pump()
+    assert h.state == REJECTED
+    assert h.reason is not None and "deadline" in h.reason
+    assert h.history[-1][0] == pytest.approx(1.0)   # virtual timestamp
+
+
+def test_async_heartbeat_suspect_beat_then_dead():
+    """Asynchronous clients go alive -> suspected (half the timeout) ->
+    dead; a beat while merely suspected restores them to routing."""
+    clk = VirtualClock()
+    pre = SimpleNamespace(synchronous=True, prefill=lambda *a, **k: [])
+    fake = SimpleNamespace(synchronous=False, step=lambda: [],
+                           n_free=lambda: 0, active=0, resident=lambda: [],
+                           release=lambda r: False)
+    sync = SimpleNamespace(synchronous=True, step=lambda: [],
+                           n_free=lambda: 1, active=0, resident=lambda: [],
+                           release=lambda r: False)
+    gw = Gateway([pre], [fake, sync], clock=clk, heartbeat_timeout=1.0)
+    gw.pump()
+    assert gw.dec[0].status == "alive"
+    clk.advance(0.6)                      # past suspect_timeout (0.5)
+    gw.pump()
+    assert gw.dec[0].status == "suspected"
+    assert gw.dec[0].suspect_why == "heartbeat"
+    assert any("suspected" in e for e in gw.events)
+    gw.dec[0].beat(clk())                 # a fresh beat refutes suspicion
+    assert gw.dec[0].status == "alive"
+    clk.advance(1.1)                      # past heartbeat_timeout
+    gw.pump()
+    assert gw.dec[0].status == "dead"
+    assert any("timed out" in e for e in gw.events)
+    assert any("confirmed dead" in e for e in gw.events)
+    assert gw.dec[1].status == "alive"    # sync client auto-beats
+    st = gw.stats()
+    assert st["replicas"][1]["status"] == "dead"
+
+
+# -- transient transport faults: retry -> requeue -----------------------------
+
+
+def test_transient_fault_retries_then_delivers(small_model):
+    cfg, params = small_model
+    clk = VirtualClock()
+    sched = FaultSchedule([FaultEvent(t=0.0, kind=TRANSIENT,
+                                      duration_s=0.02)])
+    sched.arm(clk())
+    tr = ChaosTransport(InProcessTransport(), sched, clk)
+    gw = _gw(cfg, params, n_dec=1, transport=tr, clock=clk,
+             retry=RetryPolicy(max_retries=4, base_s=0.03, jitter=0.0))
+    h = gw.submit(ServeRequest(0, _prompt(cfg), 8))
+    gw.run_until_drained()
+    # first send fails inside the window; the 30ms backoff lands after it
+    assert h.state == DONE and len(h.tokens) == 8
+    assert h.restarts == 0                      # retried, never requeued
+    assert gw.n_retries == 1
+    assert tr.faults_raised == 1
+    assert any("transfer retry 1" in e for e in gw.events)
+
+
+def test_retry_exhaustion_requeues_through_prefill(small_model):
+    cfg, params = small_model
+    clk = VirtualClock()
+    sched = FaultSchedule([FaultEvent(t=0.0, kind=TRANSIENT,
+                                      duration_s=0.06)])
+    sched.arm(clk())
+    tr = ChaosTransport(InProcessTransport(), sched, clk)
+    gw = _gw(cfg, params, n_dec=2, transport=tr, clock=clk,
+             retry=RetryPolicy(max_retries=1, base_s=0.04, jitter=0.0))
+    h = gw.submit(ServeRequest(0, _prompt(cfg), 8))
+    gw.run_until_drained()
+    # attempt@0 fails, retry@0.04 fails -> exhausted -> requeue; the second
+    # prefill's retry lands at ~0.08, outside the window -> delivery
+    assert h.state == DONE and len(h.tokens) == 8
+    assert h.restarts >= 1
+    assert any("transfer retries exhausted" in e for e in gw.events)
+    assert any("re-queued" in e for e in gw.events)
+    states = [s for _, s in h.history]
+    assert QUEUED in states[states.index(TRANSFERRING):]  # TRANSFERRING->QUEUED
+    assert gw.stats()["counters"]["requeues"] >= 1
+
+
+def test_retry_exhaustion_fails_at_max_restarts(small_model):
+    cfg, params = small_model
+    clk = VirtualClock()
+    sched = FaultSchedule([FaultEvent(t=0.0, kind=TRANSIENT,
+                                      duration_s=1e9)])
+    sched.arm(clk())
+    tr = ChaosTransport(InProcessTransport(), sched, clk)
+    gw = _gw(cfg, params, n_dec=2, paged=True, transport=tr, clock=clk,
+             retry=RetryPolicy(max_retries=0), max_restarts=0)
+    h = gw.submit(ServeRequest(0, _prompt(cfg), 8))
+    gw.pump()
+    assert h.state == FAILED
+    assert h.reason is not None and "gave up" in h.reason
+    assert gw.n_failed == 1 and h in gw.done
+    assert gw.stats()["counters"]["failed"] == 1
+    # a TRANSFERRING-state failure never touched decode pages: none were
+    # allocated, none freed — nothing to leak (satellite: page accounting)
+    for d in gw.dec:
+        st = d.engine.page_stats()
+        assert st["allocs"] == 0 and st["frees"] == 0 and st["in_use"] == 0
+
+
+# -- decode death: requeue + page accounting ----------------------------------
+
+
+def test_decode_death_frees_pages_exactly_once(small_model):
+    cfg, params = small_model
+    gw = _gw(cfg, params, n_dec=2, paged=True, chunk_size=2)
+    hs = [gw.submit(r) for r in _reqs(cfg, 3, max_new=12)]
+    for _ in range(60):
+        gw.pump()
+        if all(h.state == DECODING for h in hs):
+            break
+    assert all(h.state == DECODING for h in hs)
+    vic = max(range(2), key=lambda j: len(gw.dec[j].client.resident()))
+    eng = gw.dec[vic].engine
+    before = eng.page_stats()
+    assert before["in_use"] > 0
+    gw.kill_replica("decode", vic)
+    after = eng.page_stats()
+    # every resident page freed exactly once (a double free raises inside
+    # PagePool.free), and no new allocations on the dead engine
+    assert after["in_use"] == 0
+    assert after["allocs"] == before["allocs"]
+    assert after["frees"] == before["frees"] + before["in_use"]
+    gw.run_until_drained()
+    assert all(h.state == DONE and len(h.tokens) == 12 for h in hs)
+    for d in gw.dec:
+        st = d.engine.page_stats()
+        assert st["in_use"] == 0 and st["allocs"] == st["frees"]
+    assert gw.stats()["page_pool"]["alloc_failures"] >= 0
+
+
+# -- chaos end-to-end: injected crash mid-trace -------------------------------
+
+
+def test_chaos_crash_recovers_all_requests(small_model):
+    cfg, params = small_model
+    clk = VirtualClock()
+    gw = _gw(cfg, params, n_dec=2, chunk_size=2, clock=clk)
+    sched = FaultSchedule([FaultEvent(t=0.0, kind=CRASH, phase="decode",
+                                      idx=-1, require_busy=True)])
+    ctl = install_chaos(gw, sched, clock=clk)
+    hs = [gw.submit(r) for r in _reqs(cfg, 4, max_new=10)]
+    gw.run_until_drained()
+    assert [f["kind"] for f in ctl.fired] == [CRASH]
+    assert sum(d.status == "dead" for d in gw.dec) == 1
+    assert any("confirmed dead" in e for e in gw.events)
+    # zero accepted requests lost: every stream completes in full, the
+    # victims' restarted attempts dedup their regenerated prefix
+    assert all(h.state == DONE and len(h.tokens) == 10 for h in hs)
+    assert gw.stats()["counters"]["requeues"] >= 1
+
+
+def test_straggler_suspected_then_recovers(small_model):
+    cfg, params = small_model
+    gw = _gw(cfg, params, n_dec=3, max_slots=2, chunk_size=4,
+             suspect_probe_s=0.25)
+    warmup_engines([gw.pre[0].engine], [d.engine for d in gw.dec],
+                   cfg.vocab_size, prompt_lens=(12,), max_new=2,
+                   backend="ref")
+    sched = FaultSchedule([FaultEvent(t=0.0, kind=STRAGGLER, phase="decode",
+                                      idx=0, duration_s=0.5, slow_s=0.3)])
+    install_chaos(gw, sched)
+    hs = [gw.submit(r) for r in _reqs(cfg, 8, max_new=24)]
+    suspected = False
+    for _ in range(4000):
+        gw.pump()
+        suspected = suspected or gw.dec[0].status == "suspected"
+        if all(h.is_terminal for h in hs):
+            break
+    assert all(h.state == DONE for h in hs)
+    assert suspected, "the stalled replica never left the routing tables"
+    assert any("suspected (latency" in e for e in gw.events)
+    # recovery: a healthy sample or the probe re-admission path
+    if gw.dec[0].status != "alive":
+        time.sleep(0.3)
+        gw.pump()
+    assert gw.dec[0].status == "alive"
+    assert any(("recovered" in e) or ("probe" in e) for e in gw.events)
+
+
+# -- spot preemption: page-granular migration ---------------------------------
+
+
+def test_preemption_migrates_kv_zero_loss(small_model):
+    """The tentpole acceptance test: a preemption drain mid-stream moves
+    resident decode KV page-granular to the survivor and every stream
+    finishes BIT-IDENTICAL to an uninterrupted run — zero token loss,
+    zero restarts, zero re-quantization."""
+    cfg, params = small_model
+    reqs = _reqs(cfg, 3, max_new=20)
+    base = _gw(cfg, params, n_dec=2, paged=True, chunk_size=2)
+    bh = [base.submit(r) for r in reqs]
+    base.run_until_drained()
+    want = {h.request.rid: list(h.tokens) for h in bh}
+    assert all(h.state == DONE for h in bh)
+
+    gw = _gw(cfg, params, n_dec=2, paged=True, chunk_size=2)
+    hs = [gw.submit(r) for r in reqs]
+    for _ in range(60):
+        gw.pump()
+        if (all(h.state == DECODING for h in hs)
+                and min(len(h.tokens) for h in hs) >= 2):
+            break
+    assert all(h.state == DECODING for h in hs)
+    mid = {h.request.rid: len(h.tokens) for h in hs}
+    vic = max(range(2), key=lambda j: len(gw.dec[j].client.resident()))
+    n_vic = len(gw.dec[vic].client.resident())
+    assert n_vic >= 1
+    zc0 = sum(d.engine.page_stats()["zero_copy_inserts"] for d in gw.dec)
+    re0 = sum(d.engine.page_stats()["reencoded_inserts"] for d in gw.dec)
+
+    rep = gw.handle_preemption("decode", vic, grace_s=60.0)
+    assert rep["migrated"] == n_vic and rep["requeued"] == 0
+    assert rep["tokens_migrated"] >= n_vic * 13   # 12 prompt + >=1 decoded
+    assert gw.dec[vic].status == "dead"
+    assert gw.dec[vic].engine.page_stats()["in_use"] == 0   # source drained
+    gw.run_until_drained()
+
+    assert all(h.state == DONE for h in hs)
+    assert all(h.restarts == 0 for h in hs)       # migrated, not restarted
+    got = {h.request.rid: list(h.tokens) for h in hs}
+    assert got == want                            # bit-identical streams
+    # the migrated handles crossed DECODING -> TRANSFERRING -> DECODING
+    n_mig_handles = 0
+    for h in hs:
+        states = [s for _, s in h.history]
+        if TRANSFERRING in states[states.index(DECODING):]:
+            n_mig_handles += 1
+    assert n_mig_handles == rep["migrated"]
+    # page-gathered wires scatter zero-copy into the survivor's pool: no
+    # dequant/requant round-trip anywhere on the migration path
+    zc1 = sum(d.engine.page_stats()["zero_copy_inserts"] for d in gw.dec)
+    re1 = sum(d.engine.page_stats()["reencoded_inserts"] for d in gw.dec)
+    per_wire = zc0 // len(hs)       # tensors per wire (k/v x layer groups)
+    assert per_wire > 0 and zc0 == per_wire * len(hs)
+    assert zc1 - zc0 == rep["migrated"] * per_wire
+    assert re1 - re0 == 0
+    st = gw.stats()
+    assert st["counters"]["migrations"] == rep["migrated"]
+    assert st["counters"]["migrated_tokens"] == rep["tokens_migrated"]
+    assert st["counters"]["preemptions"] == 1
+
+
+def test_preemption_zero_grace_requeues(small_model):
+    """No grace budget -> nothing can migrate; every resident falls back
+    to requeue-through-prefill and still completes (zero loss)."""
+    cfg, params = small_model
+    gw = _gw(cfg, params, n_dec=2, chunk_size=2)
+    hs = [gw.submit(r) for r in _reqs(cfg, 2, max_new=10)]
+    for _ in range(60):
+        gw.pump()
+        if all(h.state == DECODING for h in hs):
+            break
+    vic = max(range(2), key=lambda j: len(gw.dec[j].client.resident()))
+    n_vic = len(gw.dec[vic].client.resident())
+    rep = gw.handle_preemption("decode", vic, grace_s=0.0)
+    assert rep["migrated"] == 0 and rep["requeued"] == n_vic
+    assert any("preemption drain" in e for e in gw.events)
+    gw.run_until_drained()
+    assert all(h.state == DONE and len(h.tokens) == 10 for h in hs)
+    assert sum(h.restarts for h in hs) >= n_vic
+
+
+# -- death -> failover reschedule (plan epoch excluding the dead node) --------
+
+
+GROUPS = ((0, 1, 2, 3), (4, 5, 6, 7), tuple(range(8, 16)),
+          tuple(range(16, 24)))
+CFG_FULL = get_config("llama-30b")
+SLO = SloSpec(ttft_s=2.0, tpot_s=0.15, e2e_s=30.0)
+
+
+def test_dead_replica_triggers_failover_reschedule(small_model):
+    cfg, params = small_model
+    cluster = make_paper_cloud()
+    solver = scheduler.LowerLevelSolver(cluster, CFG_FULL, CONVERSATION, 2.0,
+                                        SLO)
+    sol = tabu.Solution(GROUPS, ("prefill", "prefill", "decode", "decode"))
+    score, replicas, o = solver.solve(sol)
+    assert replicas
+    plan = scheduler.DeploymentPlan(solution=sol, replicas=replicas,
+                                    orchestration=o, score=score)
+
+    calls = []
+
+    def pinned(cluster_, cfg_, plan_, wl, rate, slo, *, init_solution=None,
+               **kw):
+        calls.append(init_solution)
+        sc, reps, orch = solver.solve(init_solution)
+        return scheduler.DeploymentPlan(solution=init_solution,
+                                        replicas=reps, orchestration=orch,
+                                        score=sc)
+
+    gw = gateway_from_plan(plan, cfg, params, max_seq=64, max_slots=4,
+                           chunk_size=4, backend="ref")
+    gw.set_failover(cluster, CFG_FULL, SLO, workload=CONVERSATION, rate=2.0,
+                    search_fn=pinned)
+    hs = [gw.submit(r) for r in _reqs(cfg, 3, max_new=8)]
+    for _ in range(30):
+        gw.pump()
+        if any(h.state == DECODING for h in hs):
+            break
+    dead_group = gw.dec[1].group
+    gw.kill_replica("decode", 1)
+    gw.pump()                       # picks up the pending failover
+    assert calls, "failover search never ran"
+    assert gw.epoch == 1
+    live_groups = {h.group for h in gw.pre + gw.dec if h.alive}
+    assert dead_group not in live_groups
+    assert set(calls[0].groups) == live_groups
+    assert any(e.startswith("failover reschedule:") for e in gw.events)
+    gw.run_until_drained()
+    assert all(h.state == DONE and len(h.tokens) == 8 for h in hs)
