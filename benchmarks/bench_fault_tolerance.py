@@ -64,12 +64,11 @@ def _metrics(handles, e2e_deadline, max_new, wall):
 
 
 def _mk_gateway(cfg, params, plan):
-    from repro.serving.gateway import gateway_from_plan, warmup_engines
+    from repro.serving.gateway import gateway_from_plan, warmup_gateway
     gw = gateway_from_plan(plan, cfg, params, max_seq=96, max_slots=2,
                            chunk_size=2, backend="ref",
                            decode_kw={"paged": True, "page_size": 8})
-    warmup_engines([h.engine for h in gw.pre], [h.engine for h in gw.dec],
-                   cfg.vocab_size, backend="ref", prompt_lens=(12, 16))
+    warmup_gateway(gw, cfg.vocab_size, prompt_lens=(12, 16))
     return gw
 
 

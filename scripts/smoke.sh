@@ -9,6 +9,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 if [[ "${SMOKE_TIER1:-1}" == "1" ]]; then
+    echo "== invariant lint (repro.analysis, DESIGN.md §9) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.analysis lint --strict
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 fi
 
@@ -31,10 +34,10 @@ if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
         python -m benchmarks.run --suite paged_kv --quick
     test -s BENCH_paged_kv.json
     echo "== chaos demo (injected crash + preemption, KV-page migration) =="
-    timeout 600 python examples/serve_e2e.py \
+    REPRO_SANITIZE=1 timeout 600 python examples/serve_e2e.py \
         --requests 8 --rate 3 --max-new 32 --chaos
     echo "== fault_tolerance bench (SLO attainment vs no-handling) =="
-    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+    REPRO_SANITIZE=1 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
         python -m benchmarks.run --suite fault_tolerance --quick
     test -s BENCH_fault_tolerance.json
 fi

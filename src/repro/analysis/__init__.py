@@ -1,0 +1,36 @@
+"""Static invariant linter + runtime sanitizers for the serving stack.
+
+Two halves:
+
+* ``repro.analysis.lint`` — stdlib-``ast`` rules R001–R005 over
+  ``src/repro`` and ``benchmarks`` (``python -m repro.analysis lint``).
+  Pure stdlib: importable (and runnable) without jax.
+* ``repro.analysis.sanitizers`` — opt-in runtime audits gated on
+  ``REPRO_SANITIZE=1``: page leak/double-free/use-after-free tracking,
+  request state-machine audits, jit retrace counters, migration-wire
+  alignment.
+
+This package root imports nothing heavy; sanitizer symbols load lazily
+so the lint CLI works in an image with no accelerator stack.
+"""
+from __future__ import annotations
+
+_SANITIZER_SYMBOLS = (
+    "SanitizerError", "sanitize_enabled", "make_sanitized_pool",
+    "audit_paged_engine", "TransitionAuditor", "RetraceMonitor",
+    "check_wire_alignment", "GatewaySanitizer",
+)
+
+__all__ = ("lint_sources", "run_lint", "Finding", "RULES",
+           ) + _SANITIZER_SYMBOLS
+
+
+def __getattr__(name):
+    if name in ("lint_sources", "run_lint", "Finding", "RULES",
+                "collect_files"):
+        from repro.analysis import lint as _lint
+        return getattr(_lint, name)
+    if name in _SANITIZER_SYMBOLS:
+        from repro.analysis import sanitizers as _san
+        return getattr(_san, name)
+    raise AttributeError(name)

@@ -1,0 +1,49 @@
+"""CLI: ``python -m repro.analysis lint [--strict] [paths...]``.
+
+Exits 1 when any finding survives the ``# repro: ignore[Rnnn]`` pragmas
+(and, under ``--strict``, when a pragma suppresses nothing). Stdlib only —
+safe to run before the accelerator stack is installed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.lint import RULES, run_lint
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    lint = sub.add_parser("lint", help="run invariant rules R001-R005")
+    lint.add_argument("paths", nargs="*",
+                      help="files/dirs relative to the repo root "
+                           "(default: src/repro benchmarks)")
+    lint.add_argument("--root", default=".",
+                      help="repo root (default: cwd)")
+    lint.add_argument("--strict", action="store_true",
+                      help="also fail on unused ignore pragmas")
+    lint.add_argument("--list-rules", action="store_true",
+                      help="print the rule table and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid}  {desc}")
+        return 0
+
+    findings = run_lint(args.root, args.paths or None, strict=args.strict)
+    for f in findings:
+        print(f.format())
+    n = len(findings)
+    if n:
+        print(f"\n{n} finding{'s' if n != 1 else ''} "
+              f"(suppress a deliberate violation with "
+              f"`# repro: ignore[Rnnn]` on the offending line)")
+        return 1
+    print("repro.analysis lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

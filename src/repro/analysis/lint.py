@@ -1,0 +1,595 @@
+"""Static AST linter for the serving stack's correctness contracts.
+
+``python -m repro.analysis lint [--strict] [paths...]`` — stdlib ``ast``
+only, no third-party dependencies, so it runs in any CI image before jax
+is even importable.
+
+The rules encode invariants that used to live as "invariant for next
+session" prose in CHANGES.md (now DESIGN.md §9):
+
+* **R001** — no direct ``time.time()`` / ``time.monotonic()`` calls in
+  ``serving/``: every timestamp must come from the gateway's injectable
+  clock or chaos runs under ``VirtualClock`` silently read wall time.
+  (References like ``clock: Callable = time.time`` parameter defaults are
+  fine — only *calls* and ``field(default_factory=time.time)`` leak.)
+* **R002** — no host-synchronizing calls (``.item()``, ``int()``/
+  ``float()`` on array elements, ``np.asarray``, ``jax.device_get``)
+  inside jit-reachable code in ``kernels/`` / ``models/``: ``lax.scan`` /
+  ``fori_loop`` / ``while_loop`` bodies, ``jax.jit``-decorated or
+  -wrapped functions, pallas kernels, and everything they call locally.
+* **R003** — ``gateway.py`` / ``coordinator.py`` / ``benchmarks/`` touch
+  replicas only through the ``PrefillClient`` / ``DecodeClient`` /
+  ``Transport`` seams: no ``.engine`` / ``._engine`` attribute
+  reach-through (an RPC realization has no engine attribute to reach).
+* **R004** — every transition to FAILED / REJECTED carries a ``reason``
+  (and request state is never assigned directly — only through
+  ``_transition``, which validates the state machine).
+* **R005** — wire/page layout lockstep: the quantization group candidates,
+  the group-selection rule, and the int4 nibble packing live ONLY in
+  ``kernels/kv_layout.py``; ``kv_transfer.py`` / ``models/paged.py`` /
+  the kernels must import them. A local copy is a drift waiting to
+  corrupt zero-copy page insertion.
+
+Escape hatch: ``# repro: ignore[Rnnn]`` on the offending line (or the
+line above) suppresses one rule there; ``--strict`` additionally fails on
+pragmas that suppress nothing (so dead pragmas can't rot).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES: Dict[str, str] = {
+    "R001": "no direct wall-clock reads in serving/ (use the injected "
+            "clock)",
+    "R002": "no host-sync calls in jit-reachable kernels/models code",
+    "R003": "replicas are reached only through client/transport seams",
+    "R004": "FAILED/REJECTED transitions must carry a reason",
+    "R005": "wire/page quantization layout must not drift (kv_layout is "
+            "the single source of truth)",
+}
+
+# the ONE module allowed to define the layout contract (R005)
+LAYOUT_MODULE = "src/repro/kernels/kv_layout.py"
+
+# only real rule ids (R001, W001, ...) count as pragmas — prose examples
+# like "ignore[Rnnn]" in docstrings must not register as suppressions
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*ignore\[((?:\s*[RWE]\d{3}\s*,?)+)\]")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+
+# -- pragma handling ----------------------------------------------------------
+
+
+def _pragmas(src: str) -> Dict[int, Set[str]]:
+    """line -> set of rule ids suppressed on that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(src.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+# -- R001: wall-clock reads in serving/ ---------------------------------------
+
+
+def _is_time_attr(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "time"
+            and node.attr in ("time", "monotonic", "monotonic_ns",
+                              "time_ns"))
+
+
+class _R001(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def visit_Call(self, node: ast.Call):
+        if _is_time_attr(node.func):
+            self.findings.append(Finding(
+                "R001", self.path, node.lineno, node.col_offset,
+                f"direct time.{node.func.attr}() call in serving code",
+                "take a `clock` callable (default `time.time` as a "
+                "REFERENCE) and call `self.clock()` / the caller-passed "
+                "`now` so VirtualClock runs stay deterministic"))
+        for kw in node.keywords:
+            if kw.arg == "default_factory" and _is_time_attr(kw.value):
+                self.findings.append(Finding(
+                    "R001", self.path, kw.value.lineno,
+                    kw.value.col_offset,
+                    "field(default_factory=time.time) stamps wall time at "
+                    "construction",
+                    "default to 0.0 (or pass the clock reading explicitly "
+                    "at the construction site)"))
+        self.generic_visit(node)
+
+
+# -- R002: host syncs in jit-reachable code -----------------------------------
+
+_FuncNode = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _jit_like(node: ast.AST) -> bool:
+    """`jit`, `jax.jit`, `pl.pallas_call`, `jax.checkpoint`, `remat` ..."""
+    if isinstance(node, ast.Name):
+        return node.id in ("jit", "pallas_call", "checkpoint", "remat")
+    if isinstance(node, ast.Attribute):
+        return node.attr in ("jit", "pallas_call", "checkpoint", "remat")
+    return False
+
+
+def _loop_body_args(call: ast.Call) -> List[ast.AST]:
+    """Function-valued args of lax control-flow calls."""
+    fn = call.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else "")
+    if name == "scan":
+        return call.args[:1]
+    if name == "fori_loop":
+        return call.args[2:3]
+    if name == "while_loop":
+        return call.args[:2]
+    if name in ("cond", "switch"):
+        return [a for a in call.args[1:] if isinstance(a, _FuncNode)]
+    return []
+
+
+class _JitScopeCollector(ast.NodeVisitor):
+    """Find every function node that jit (or a lax loop / pallas kernel)
+    can reach, including module-local call-graph closure."""
+
+    def __init__(self):
+        self.defs_by_name: Dict[str, List[ast.AST]] = {}
+        self.roots: List[ast.AST] = []
+
+    def visit_FunctionDef(self, node):
+        self.defs_by_name.setdefault(node.name, []).append(node)
+        if any(self._decorator_jits(d) for d in node.decorator_list):
+            self.roots.append(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    @staticmethod
+    def _decorator_jits(dec: ast.AST) -> bool:
+        if _jit_like(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _jit_like(dec.func):
+                return True
+            # functools.partial(jax.jit, ...)
+            f = dec.func
+            partial = (isinstance(f, ast.Attribute) and f.attr == "partial"
+                       ) or (isinstance(f, ast.Name) and f.id == "partial")
+            if partial and dec.args and _jit_like(dec.args[0]):
+                return True
+        return False
+
+    def visit_Call(self, node: ast.Call):
+        targets: List[ast.AST] = []
+        if _jit_like(node.func) and node.args:
+            targets.append(node.args[0])
+        # functools.partial(jit_like, fn)
+        f = node.func
+        partial = (isinstance(f, ast.Attribute) and f.attr == "partial"
+                   ) or (isinstance(f, ast.Name) and f.id == "partial")
+        if partial and len(node.args) >= 2 and _jit_like(node.args[0]):
+            targets.append(node.args[1])
+        targets.extend(_loop_body_args(node))
+        for t in targets:
+            if isinstance(t, _FuncNode):
+                self.roots.append(t)
+            elif isinstance(t, ast.Name):
+                self.roots.extend(self.defs_by_name.get(t.id, []))
+        self.generic_visit(node)
+
+    def reachable(self, tree: ast.Module) -> List[ast.AST]:
+        # two passes: defs may appear after the call that names them
+        self.visit(tree)
+        self.visit(tree)
+        seen: Set[int] = set()
+        order: List[ast.AST] = []
+        work = list(self.roots)
+        while work:
+            fn = work.pop()
+            if id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            order.append(fn)
+            # local call-graph closure: names called inside a reachable
+            # scope whose defs live in this module are reachable too
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Call) and isinstance(sub.func,
+                                                            ast.Name):
+                    work.extend(self.defs_by_name.get(sub.func.id, []))
+        return order
+
+
+def _subscripts_device_data(node: ast.AST) -> bool:
+    """True when an int()/float() argument indexes what is plausibly an
+    array (any subscript not rooted in a static `.shape` chain)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Subscript):
+            base = sub.value
+            static = False
+            for part in ast.walk(base):
+                if isinstance(part, ast.Attribute) and part.attr in (
+                        "shape", "ndim", "size"):
+                    static = True
+            if not static:
+                return True
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute)\
+                and sub.func.attr == "item":
+            return True
+    return False
+
+
+class _R002(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def run(self, tree: ast.Module):
+        scopes = _JitScopeCollector().reachable(tree)
+        reported: Set[Tuple[int, int]] = set()
+        for scope in scopes:
+            for node in ast.walk(scope):
+                if not isinstance(node, ast.Call):
+                    continue
+                key = (node.lineno, node.col_offset)
+                if key in reported:
+                    continue
+                bad = self._banned(node)
+                if bad:
+                    reported.add(key)
+                    self.findings.append(Finding(
+                        "R002", self.path, node.lineno, node.col_offset,
+                        f"{bad} inside a jit-reachable scope forces a "
+                        f"device->host sync (or breaks tracing)",
+                        "keep the value on device (jnp ops / lax.cond); "
+                        "sync once per chunk at the designated host "
+                        "boundary instead"))
+        return self.findings
+
+    @staticmethod
+    def _banned(node: ast.Call) -> Optional[str]:
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "item":
+                return ".item()"
+            if f.attr == "device_get":
+                return "jax.device_get"
+            if isinstance(f.value, ast.Name) and f.value.id in (
+                    "np", "numpy", "onp") and f.attr in (
+                    "asarray", "array", "frombuffer", "copy"):
+                return f"np.{f.attr}"
+        if isinstance(f, ast.Name):
+            if f.id == "device_get":
+                return "device_get"
+            if f.id in ("int", "float") and node.args and \
+                    _subscripts_device_data(node.args[0]):
+                return f"{f.id}() on an array element"
+        return None
+
+
+# -- R003: replica reach-through ----------------------------------------------
+
+
+class _R003(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in ("engine", "_engine") and not self._allowed(
+                node.value):
+            self.findings.append(Finding(
+                "R003", self.path, node.lineno, node.col_offset,
+                f".{node.attr} attribute reach-through bypasses the "
+                f"client/transport seams",
+                "go through PrefillClient/DecodeClient (e.g. "
+                "client.page_stats(), warmup_gateway(gw, ...)) — an RPC "
+                "replica has no engine attribute to reach"))
+        self.generic_visit(node)
+
+    @staticmethod
+    def _allowed(base: ast.AST) -> bool:
+        # self.engine (a replica's own engine) and self.replica.engine
+        # (the LocalReplicaClient property) are the defining sites
+        if isinstance(base, ast.Name) and base.id == "self":
+            return True
+        return (isinstance(base, ast.Attribute) and base.attr == "replica"
+                and isinstance(base.value, ast.Name)
+                and base.value.id == "self")
+
+
+# -- R004: FAILED/REJECTED must carry a reason --------------------------------
+
+_TERMINAL_BAD = ("FAILED", "REJECTED")
+
+
+def _names_state(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name) and node.id in _TERMINAL_BAD:
+        return node.id
+    if isinstance(node, ast.Constant) and node.value in _TERMINAL_BAD:
+        return str(node.value)
+    return None
+
+
+class _R004(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def visit_Call(self, node: ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr == "_transition" \
+                and node.args:
+            st = _names_state(node.args[0])
+            if st is not None:
+                has_reason = len(node.args) >= 3 or any(
+                    kw.arg == "reason"
+                    and not (isinstance(kw.value, ast.Constant)
+                             and kw.value.value is None)
+                    for kw in node.keywords)
+                if not has_reason:
+                    self.findings.append(Finding(
+                        "R004", self.path, node.lineno, node.col_offset,
+                        f"transition to {st} without a reason",
+                        "pass reason=... — operators debug terminal "
+                        "states from RequestHandle.reason"))
+        self.generic_visit(node)
+
+    def visit_Assign(self, node: ast.Assign):
+        st = _names_state(node.value)
+        if st is not None:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Attribute) and tgt.attr == "state":
+                    self.findings.append(Finding(
+                        "R004", self.path, node.lineno, node.col_offset,
+                        f"direct state assignment to {st} bypasses the "
+                        f"state machine",
+                        "use RequestHandle._transition(..., reason=...) — "
+                        "it validates the DESIGN.md §5 transition table"))
+        self.generic_visit(node)
+
+
+# -- R005: layout lockstep ----------------------------------------------------
+
+_R005_IMPORT_REQUIREMENTS: Dict[str, Tuple[str, ...]] = {
+    "src/repro/serving/kv_transfer.py": ("pick_group",),
+    "src/repro/models/paged.py": ("pick_group",),
+    "src/repro/kernels/kv_quant.py": ("pack_nibbles",),
+    "src/repro/kernels/ref.py": ("pack_nibbles",),
+    "src/repro/kernels/paged_attention.py": ("kv_layout",
+                                             "interleave_nibbles"),
+}
+
+
+def _imports_from_layout(tree: ast.Module) -> Set[str]:
+    got: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and \
+                node.module.endswith("kernels.kv_layout"):
+            got.update(a.name for a in node.names)
+        elif isinstance(node, ast.ImportFrom) and node.module and \
+                node.module.endswith("kernels"):
+            got.update(a.name for a in node.names
+                       if a.name == "kv_layout")
+        elif isinstance(node, ast.Import):
+            got.update(a.name.rsplit(".", 1)[-1] for a in node.names
+                       if a.name.endswith("kv_layout"))
+    return got
+
+
+def _r005_file(path: str, tree: ast.Module) -> List[Finding]:
+    """Per-file half of R005: no local copies of the layout contract."""
+    if path == LAYOUT_MODULE or not path.startswith("src/repro/"):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        # (a) a local candidate-group tuple
+        if isinstance(node, ast.Assign) and isinstance(node.value,
+                                                       ast.Tuple):
+            elts = node.value.elts
+            ints = (len(elts) >= 2 and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in elts))
+            named = any(isinstance(t, ast.Name) and "GROUPS" in t.id.upper()
+                        for t in node.targets)
+            if ints and named:
+                out.append(Finding(
+                    "R005", path, node.lineno, node.col_offset,
+                    "local quantization-group candidate tuple can drift "
+                    "from kernels/kv_layout.GROUPS",
+                    "import GROUPS/pick_group from repro.kernels.kv_layout"
+                ))
+        # (b) a local group-selection expression
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "next" and node.args and isinstance(
+                node.args[0], ast.GeneratorExp):
+            gen = node.args[0].generators[0]
+            over_groups = isinstance(gen.iter, ast.Name) and \
+                "GROUPS" in gen.iter.id.upper()
+            mod_test = any(
+                isinstance(c, ast.Compare)
+                and isinstance(c.left, ast.BinOp)
+                and isinstance(c.left.op, ast.Mod)
+                for c in gen.ifs)
+            if over_groups and mod_test:
+                out.append(Finding(
+                    "R005", path, node.lineno, node.col_offset,
+                    "local group-selection logic can drift from "
+                    "kv_layout.pick_group",
+                    "call repro.kernels.kv_layout.pick_group(span)"))
+        # (c) local nibble pack/unpack arithmetic
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.right, ast.Constant):
+            nibble = ((isinstance(node.op, ast.BitAnd)
+                       and node.right.value == 0xF)
+                      or (isinstance(node.op, (ast.LShift, ast.RShift))
+                          and node.right.value == 4))
+            if nibble:
+                out.append(Finding(
+                    "R005", path, node.lineno, node.col_offset,
+                    "local int4 nibble arithmetic can drift from the "
+                    "kv_layout packing order",
+                    "use kv_layout.pack_nibbles / unpack_nibbles / "
+                    "interleave_nibbles"))
+    return out
+
+
+def _r005_cross(trees: Dict[str, ast.Module]) -> List[Finding]:
+    """Cross-file half: the consumers must actually import the contract."""
+    out: List[Finding] = []
+    for path, required in _R005_IMPORT_REQUIREMENTS.items():
+        tree = trees.get(path)
+        if tree is None:
+            continue
+        got = _imports_from_layout(tree)
+        if not any(r in got for r in required):
+            out.append(Finding(
+                "R005", path, 1, 0,
+                f"does not import the layout contract "
+                f"({' / '.join(required)}) from kernels/kv_layout",
+                "a module in the wire/page path that stops importing "
+                "kv_layout has necessarily grown a local copy — move the "
+                "logic back"))
+    if LAYOUT_MODULE in trees:
+        has_groups = any(
+            isinstance(n, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "GROUPS"
+                for t in n.targets)
+            for n in ast.walk(trees[LAYOUT_MODULE]))
+        if not has_groups:
+            out.append(Finding(
+                "R005", LAYOUT_MODULE, 1, 0,
+                "layout module no longer defines GROUPS",
+                "kv_layout.py owns the candidate tuple; do not move it"))
+    return out
+
+
+# -- rule scoping + driver ----------------------------------------------------
+
+
+def _in_scope(rule: str, path: str) -> bool:
+    if rule == "R001":
+        return path.startswith("src/repro/serving/")
+    if rule == "R002":
+        return path.startswith(("src/repro/kernels/", "src/repro/models/"))
+    if rule == "R003":
+        return path in ("src/repro/serving/gateway.py",
+                        "src/repro/serving/coordinator.py") \
+            or path.startswith("benchmarks/")
+    if rule == "R004":
+        return path.startswith(("src/repro/", "benchmarks/"))
+    return True
+
+
+def lint_sources(files: Dict[str, str], *,
+                 strict: bool = False) -> List[Finding]:
+    """Lint a mapping of repo-relative posix paths -> source text.
+
+    This is the testable core: the CLI builds the mapping from the tree,
+    unit tests feed synthetic snippets. Returns findings with pragmas
+    already applied (plus unused-pragma findings under ``strict``)."""
+    findings: List[Finding] = []
+    trees: Dict[str, ast.Module] = {}
+    pragmas: Dict[str, Dict[int, Set[str]]] = {}
+    for path, src in files.items():
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "E000", path, e.lineno or 1, 0,
+                f"syntax error: {e.msg}", ""))
+            continue
+        trees[path] = tree
+        pragmas[path] = _pragmas(src)
+        if _in_scope("R001", path):
+            v = _R001(path)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if _in_scope("R002", path):
+            findings.extend(_R002(path).run(tree))
+        if _in_scope("R003", path):
+            v = _R003(path)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if _in_scope("R004", path):
+            v = _R004(path)
+            v.visit(tree)
+            findings.extend(v.findings)
+        findings.extend(_r005_file(path, tree))
+    findings.extend(_r005_cross(trees))
+    # apply pragmas (a pragma on the finding's line or the line above)
+    used: Set[Tuple[str, int, str]] = set()
+    kept: List[Finding] = []
+    for f in findings:
+        fp = pragmas.get(f.path, {})
+        hit = None
+        for ln in (f.line, f.line - 1):
+            if f.rule in fp.get(ln, ()):
+                hit = ln
+                break
+        if hit is None:
+            kept.append(f)
+        else:
+            used.add((f.path, hit, f.rule))
+    if strict:
+        for path, per_line in pragmas.items():
+            for ln, rules in per_line.items():
+                for r in rules:
+                    if (path, ln, r) not in used:
+                        kept.append(Finding(
+                            "W001", path, ln, 0,
+                            f"unused `# repro: ignore[{r}]` pragma",
+                            "delete it — dead pragmas hide future "
+                            "violations"))
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return kept
+
+
+DEFAULT_ROOTS = ("src/repro", "benchmarks")
+
+
+def collect_files(root, paths: Optional[Sequence[str]] = None
+                  ) -> Dict[str, str]:
+    """Gather ``*.py`` under ``paths`` (default: the linted roots),
+    keyed by repo-relative posix path."""
+    import pathlib
+    root = pathlib.Path(root)
+    out: Dict[str, str] = {}
+    for p in (paths or DEFAULT_ROOTS):
+        base = root / p
+        candidates = [base] if base.is_file() else sorted(
+            base.rglob("*.py")) if base.is_dir() else []
+        for f in candidates:
+            rel = f.relative_to(root).as_posix()
+            out[rel] = f.read_text()
+    return out
+
+
+def run_lint(root=".", paths: Optional[Sequence[str]] = None, *,
+             strict: bool = False) -> List[Finding]:
+    return lint_sources(collect_files(root, paths), strict=strict)

@@ -17,6 +17,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# nibble order is THE layout contract shared with the wire and the paged
+# cache — it lives in kv_layout (lint rule R005), and the helpers are
+# plain jnp expressions so they trace inside the kernel bodies
+from repro.kernels.kv_layout import interleave_nibbles, pack_nibbles
+
 
 def _quant_kernel(x_ref, q_ref, scale_ref, zero_ref):
     x = x_ref[...].astype(jnp.float32)               # (bn, G)
@@ -26,17 +31,13 @@ def _quant_kernel(x_ref, q_ref, scale_ref, zero_ref):
     q = jnp.clip(jnp.round((x - mn) / scale), 0, 15).astype(jnp.uint8)
     bn, G = q.shape
     q2 = q.reshape(bn, G // 2, 2)
-    q_ref[...] = (q2[..., 0] | (q2[..., 1] << 4)).astype(jnp.uint8)
+    q_ref[...] = pack_nibbles(q2[..., 0], q2[..., 1])
     scale_ref[...] = scale
     zero_ref[...] = mn
 
 
 def _dequant_kernel(q_ref, scale_ref, zero_ref, x_ref, *, out_dtype):
-    p = q_ref[...]
-    lo = (p & 0xF).astype(jnp.float32)
-    hi = (p >> 4).astype(jnp.float32)
-    bn, Gh = p.shape
-    q = jnp.stack([lo, hi], axis=-1).reshape(bn, Gh * 2)
+    q = interleave_nibbles(q_ref[...])               # (bn, Gh*2) f32
     x_ref[...] = (q * scale_ref[...] + zero_ref[...]).astype(out_dtype)
 
 

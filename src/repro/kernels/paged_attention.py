@@ -34,17 +34,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import kv_layout
+
 NEG_INF = -1e30
 
 
 def _dequant_rows(packed, scale, zero):
-    """(R, G//2) u8 + (R, 1) scale/zero -> (R, G) f32 (nibble order matches
-    ``kv_quant``: element 2j in the low nibble of byte j, 2j+1 high)."""
-    lo = (packed & 0xF).astype(jnp.float32)
-    hi = (packed >> 4).astype(jnp.float32)
-    R, G2 = packed.shape
-    x = jnp.stack([lo, hi], axis=-1).reshape(R, G2 * 2)
-    return x * scale + zero
+    """(R, G//2) u8 + (R, 1) scale/zero -> (R, G) f32. Nibble order comes
+    from the shared layout contract (``kernels/kv_layout.py``, rule R005):
+    element 2j in the low nibble of byte j, 2j+1 high."""
+    return kv_layout.interleave_nibbles(packed) * scale + zero
 
 
 def _accumulate(q, k, v, *, start, kv_len, sm_scale, m_scr, l_scr, acc_scr):

@@ -6,6 +6,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.kv_layout import interleave_nibbles, pack_nibbles
+
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, sm_scale=None):
     """q: (BH, Sq, hd); k/v: (BHkv, Sk, hd) with BH = BHkv * group."""
@@ -87,16 +89,12 @@ def kv_quant_ref(x):
     mx = xf.max(axis=-1, keepdims=True)
     scale = jnp.maximum(mx - mn, 1e-8) / 15.0
     q = jnp.clip(jnp.round((xf - mn) / scale), 0, 15).astype(jnp.uint8)
-    lo, hi = q[..., 0::2], q[..., 1::2]
-    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    packed = pack_nibbles(q[..., 0::2], q[..., 1::2])
     return packed, scale, mn
 
 
 def kv_dequant_ref(packed, scale, zero, dtype=jnp.bfloat16):
-    lo = (packed & 0xF).astype(jnp.float32)
-    hi = (packed >> 4).astype(jnp.float32)
-    q = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1]
-                                             + (packed.shape[-1] * 2,))
+    q = interleave_nibbles(packed)
     return (q * scale + zero).astype(dtype)
 
 

@@ -41,10 +41,10 @@ from repro.models import layers
 from repro.models.layers import dense, norm_apply
 from repro.models.transformer import (_apply_ffn, _embed_inputs, slot_kinds,
                                       unembed_matrix)
-# the ONE candidate-group tuple (kv_transfer only imports kernels, so no
-# cycle): pages must pick groups exactly like the wire's padded-extract
-# path or zero-copy insertion silently degrades to re-encoding
-from repro.serving.kv_transfer import _GROUPS
+# the ONE group-selection rule (kernels/kv_layout.py — no cycle): pages
+# must pick groups exactly like the wire's padded-extract path or
+# zero-copy insertion silently degrades to re-encoding (lint rule R005)
+from repro.kernels.kv_layout import pick_group
 
 DEFAULT_PAGE_SIZE = 16
 
@@ -52,8 +52,7 @@ DEFAULT_PAGE_SIZE = 16
 def page_group(cfg) -> int:
     """The quantization group width shared with the wire format: the
     largest candidate dividing Hkv*hd (groups never straddle tokens)."""
-    span = cfg.num_kv_heads * cfg.head_dim
-    return next((g for g in _GROUPS if span % g == 0), 0)
+    return pick_group(cfg.num_kv_heads * cfg.head_dim)
 
 
 def groups_per_token(cfg) -> int:

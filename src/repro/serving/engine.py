@@ -14,6 +14,7 @@ holds at most ``log2(max_seq)`` entries per engine.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -48,6 +49,13 @@ class GenRequest:
 
 def _next_pow2(n: int) -> int:
     return 1 << max((n - 1).bit_length(), 0)
+
+
+def _sanitize_enabled() -> bool:
+    """``REPRO_SANITIZE=1`` swaps the page pool for the allocation-site-
+    tracking variant and audits migrated wires (repro.analysis)."""
+    return os.environ.get("REPRO_SANITIZE", "").strip() not in (
+        "", "0", "false", "no")
 
 
 class PrefillEngine:
@@ -220,7 +228,11 @@ class DecodeEngine:
                 # trash page); real deployments size this from HBM instead
                 num_pages = max_slots * self.table_w + 1
             self.kv_resident = kv_resident
-            self.pool = PagePool(num_pages, page_size)
+            if _sanitize_enabled():
+                from repro.analysis.sanitizers import make_sanitized_pool
+                self.pool = make_sanitized_pool(num_pages, page_size)
+            else:
+                self.pool = PagePool(num_pages, page_size)
             self.cache = paged_fmt.init_paged_cache(
                 cfg, max_slots, max_seq, num_pages, page_size=page_size,
                 resident=kv_resident)
@@ -295,6 +307,14 @@ class DecodeEngine:
         return list(items[len(free):])
 
     def _admit_batch_paged(self, items, *, backend, migrated: bool = False):
+        if migrated and _sanitize_enabled():
+            # a migrated wire re-encoding (instead of zero-copy page
+            # scatter) means extract_slot_wire/insert_wires drifted apart
+            from repro.analysis.sanitizers import check_wire_alignment
+            for req, wire, _ in items:
+                check_wire_alignment(wire, self.cfg,
+                                     context=f"admit_migrated "
+                                             f"rid={req.rid}")
         free = [i for i, s in enumerate(self.slots) if s is None]
         placed = []
         for req, wire, first in items:
@@ -381,7 +401,7 @@ class DecodeEngine:
     def _free_pages_of(self, slot: int):
         pages = self._slot_pages.pop(slot, [])
         if pages:
-            self.pool.free(pages)
+            self.pool.free(pages, owner=slot)
 
     def release(self, slot: int) -> Optional[GenRequest]:
         """Free one slot (cancellation / failure recovery): clears the
@@ -400,6 +420,17 @@ class DecodeEngine:
     @property
     def active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    @property
+    def jit_cache_size(self) -> int:
+        """Total compiled variants across the decode jits (the sanitizer's
+        retrace monitor flags growth after warmup)."""
+        n = 0
+        for fn in (self._decode, self._chunk):
+            sz = getattr(fn, "_cache_size", None)
+            if callable(sz):
+                n += sz()
+        return n
 
     # -- stepping -----------------------------------------------------------
 
@@ -503,6 +534,12 @@ class DecodeEngine:
         st["internal_frag"] = (1.0 - used / reserved) if reserved else 0.0
         st["zero_copy_inserts"] = self.zero_copy_inserts
         st["reencoded_inserts"] = self.reencoded_inserts
+        # pages the pool holds for slots that no longer reference them —
+        # should be 0 always; a release path that skipped pool.free shows
+        # up here (and trips the REPRO_SANITIZE drain audit)
+        referenced = {p for ps in self._slot_pages.values() for p in ps}
+        st["leaked_pages"] = sum(1 for p in self.pool._owner
+                                 if p not in referenced)
         return st
 
 

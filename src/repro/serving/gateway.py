@@ -38,6 +38,7 @@ over this class (``repro.serving.coordinator``).
 from __future__ import annotations
 
 import math
+import os
 import random as _random
 import time
 from dataclasses import dataclass, field
@@ -278,6 +279,12 @@ class DecodeClient(Protocol):
         """Admit mid-stream migrated requests (no first-token append)."""
         ...
 
+    def page_stats(self) -> Optional[Dict[str, float]]:
+        """Page-pool counters (incl. ``leaked_pages``) for paged engines;
+        None for dense ones. The observability seam ``Gateway.stats()``
+        aggregates — NOT an engine attribute reach-through (rule R003)."""
+        ...
+
 
 class LocalPrefillClient:
     """In-process realization around a :class:`PrefillEngine`."""
@@ -289,6 +296,9 @@ class LocalPrefillClient:
 
     def prefill(self, reqs, *, compress, backend):
         return self.engine.run(reqs, compress=compress, backend=backend)
+
+    def jit_cache_size(self) -> int:
+        return self.engine.jit_cache_size
 
 
 class LocalDecodeClient:
@@ -328,6 +338,13 @@ class LocalDecodeClient:
 
     def admit_migrated(self, items, *, backend):
         return self.engine.admit_migrated(items, backend=backend)
+
+    def page_stats(self):
+        ps = getattr(self.engine, "page_stats", None)
+        return ps() if callable(ps) else None
+
+    def jit_cache_size(self) -> int:
+        return self.engine.jit_cache_size
 
 
 class LocalReplicaClient:
@@ -403,6 +420,13 @@ class LocalReplicaClient:
     def admit_migrated(self, items, *, backend):
         return self._require("decode").admit_migrated(items, backend=backend)
 
+    def page_stats(self):
+        ps = getattr(self._require("decode"), "page_stats", None)
+        return ps() if callable(ps) else None
+
+    def jit_cache_size(self) -> int:
+        return self.replica.engine.jit_cache_size
+
 
 def _as_prefill_client(obj) -> PrefillClient:
     if isinstance(obj, Replica):
@@ -443,7 +467,7 @@ class ReplicaHandle:
     status: str = "alive"
     suspect_why: Optional[str] = None   # "heartbeat" | "latency"
     group: Optional[Tuple[int, ...]] = None
-    last_heartbeat: float = field(default_factory=time.time)
+    last_heartbeat: float = 0.0   # gateway stamps clock() at construction
     last_track: float = 0.0             # last latency observation
     ema_latency: float = 0.0            # straggler tracking
     min_latency: float = math.inf       # lower bound for deadline shedding
@@ -465,8 +489,10 @@ class ReplicaHandle:
         recover; draining/dead never come back)."""
         return self.status == "alive"
 
-    def beat(self, now: Optional[float] = None):
-        self.last_heartbeat = now if now is not None else time.time()
+    def beat(self, now: float):
+        """Record a liveness signal at gateway-clock time ``now`` (always
+        caller-supplied — the handle has no clock of its own, rule R001)."""
+        self.last_heartbeat = now
         # a beat refutes heartbeat-sourced suspicion only: latency
         # suspicion clears on a healthy sample or a probe, not on beats
         # (sync clients beat every pump)
@@ -539,7 +565,8 @@ class Gateway:
         self.dec = [ReplicaHandle(j, "decode", _as_decode_client(e),
                                   last_heartbeat=clock())
                     for j, e in enumerate(decodes)]
-        self.transport: Transport = transport or InProcessTransport()
+        self.transport: Transport = transport or InProcessTransport(
+            clock=clock)
         self.plan = plan                 # current DeploymentPlan, if bound
         self.epoch = 0                   # bumped by every apply_plan
         if plan is not None:
@@ -556,7 +583,7 @@ class Gateway:
         self.suspect_latency_factor = suspect_latency_factor
         self.suspect_probe_s = suspect_probe_s
         self.rng = np.random.default_rng(seed)
-        self.profiler = profiler or WorkloadProfiler()
+        self.profiler = profiler or WorkloadProfiler(clock=clock)
         self.queue: List[RequestHandle] = []
         self.transfer_queue: List[_Transfer] = []
         self.done: List[RequestHandle] = []
@@ -578,6 +605,13 @@ class Gateway:
         self.n_migrated_tokens = 0
         self.n_failed = 0
         self.n_preemptions = 0
+        # runtime sanitizers (REPRO_SANITIZE=1): lazy import keeps the
+        # analysis package out of the hot path when disabled
+        self.sanitizer = None
+        if os.environ.get("REPRO_SANITIZE", "").strip() not in (
+                "", "0", "false", "no"):
+            from repro.analysis.sanitizers import GatewaySanitizer
+            self.sanitizer = GatewaySanitizer()
 
     def _bind_plan_groups(self, plan):
         """Tag live replica handles with their plan device groups (matched
@@ -907,7 +941,8 @@ class Gateway:
                 h = self._by_req[id(req)]
                 self._sync_tokens(h, t1)
                 h._transition(DONE, t1)
-                self.profiler.record(len(req.tokens), len(req.out_tokens))
+                self.profiler.record(len(req.tokens), len(req.out_tokens),
+                                     t1)
                 self._finish(h)
                 n_done += 1
         return n_done
@@ -918,6 +953,8 @@ class Gateway:
         itself stays in ``done`` until ``clear_finished``)."""
         self._by_req.pop(id(h.req), None)
         self.done.append(h)
+        if self.sanitizer is not None:
+            self.sanitizer.on_finish(h)
 
     def clear_finished(self) -> List[RequestHandle]:
         """Hand over (and forget) terminal handles + events — call
@@ -973,7 +1010,16 @@ class Gateway:
                 # backoff expires (or a dead fleet recovers): don't burn
                 # max_iters busy-spinning
                 self._sleep(poll_s)
+        self.sanitize_check("run_until_drained")
         return self.done
+
+    def sanitize_check(self, context: str = "drain"):
+        """Run the ``REPRO_SANITIZE=1`` audits now: page leaks /
+        ownership drift on live decode replicas, state-machine violations
+        on finished requests, steady-state jit retraces. No-op when
+        sanitizers are disabled."""
+        if self.sanitizer is not None:
+            self.sanitizer.check(self, context=context)
 
     # -- fault tolerance ----------------------------------------------------
 
@@ -1263,18 +1309,20 @@ class Gateway:
         ``alloc_failures``), and per-replica detector status."""
         pool: Optional[Dict[str, float]] = None
         for d in self.dec:
-            eng = d.engine
-            st = eng.page_stats() if hasattr(eng, "page_stats") else None
+            # through the client seam (rule R003): an RPC client serves
+            # page stats over the wire, there is no engine to reach into
+            ps = getattr(d.client, "page_stats", None)
+            st = ps() if callable(ps) else None
             if st is None:
                 continue
             if pool is None:
                 pool = {k: 0.0 for k in
                         ("pages", "in_use", "free", "peak_in_use", "allocs",
-                         "frees", "alloc_failures", "zero_copy_inserts",
-                         "reencoded_inserts")}
+                         "frees", "alloc_failures", "leaked_pages",
+                         "zero_copy_inserts", "reencoded_inserts")}
             for k in pool:
                 pool[k] += st.get(k, 0)
-        return {
+        out = {
             "epoch": self.epoch,
             "queued": len(self.queue),
             "transfers_in_flight": len(self.transfer_queue),
@@ -1292,6 +1340,9 @@ class Gateway:
                           "ema_latency_s": round(h.ema_latency, 6)}
                          for h in self.pre + self.dec],
         }
+        if self.sanitizer is not None:
+            out["sanitizer"] = self.sanitizer.stats()
+        return out
 
     # -- straggler mitigation -----------------------------------------------
 
@@ -1583,6 +1634,36 @@ def warmup_engines(prefills: Sequence[PrefillEngine],
                 dec.step()
 
 
+def warmup_gateway(gw: Gateway, vocab_size: int, *,
+                   prompt_lens: Sequence[int] = (8,), max_new: int = 2):
+    """:func:`warmup_engines` for a constructed :class:`Gateway`: drives
+    the same compile-priming traffic through the replica CLIENT seams
+    (rule R003 — works unchanged when the clients are RPC proxies), and
+    marks the post-warmup point for the sanitizer's jit-retrace monitor.
+    Heartbeats are refreshed afterwards so compile time is not mistaken
+    for replica death."""
+    rng = np.random.default_rng(0)
+    pres = [h.client for h in gw.pre]
+    decs = [h.client for h in gw.dec]
+    for ln in prompt_lens:
+        for k in range(max(len(pres), len(decs))):
+            pre = pres[k % len(pres)]
+            dec = decs[k % len(decs)]
+            req = GenRequest(-1, rng.integers(
+                1, vocab_size, int(ln)).astype(np.int32), max_new)
+            items = pre.prefill([req], compress=gw.compress,
+                                backend=gw.backend)
+            rejected = dec.admit(items, backend=gw.backend)
+            if rejected:
+                raise RuntimeError(f"warmup request rejected by decode "
+                                   f"replica ({len(rejected)} items)")
+            while dec.active:
+                dec.step()
+    gw.heartbeat_all()
+    if gw.sanitizer is not None:
+        gw.sanitizer.on_steady(gw)
+
+
 def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
                                                           ServeRequest]], *,
                     time_scale: float = 1.0, max_iters: int = 200000,
@@ -1596,13 +1677,20 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
     — dumping the whole trace at t=0 makes every E2E number meaningless.
 
     ``tick`` is the control-plane hook: it fires at most every
-    ``tick_interval_s`` of wall time with the gateway as argument — the
-    place to run ``maybe_reschedule`` / ``refresh_routing_from_latency``
-    (or inject failures) against live traffic.
+    ``tick_interval_s`` of driver-clock time with the gateway as argument
+    — the place to run ``maybe_reschedule`` /
+    ``refresh_routing_from_latency`` (or inject failures) against live
+    traffic.
+
+    Time flows through ``gw.clock`` / ``gw._sleep`` (rule R001): with the
+    default wall clock the behavior is unchanged, while a
+    :class:`~repro.serving.faults.VirtualClock` makes the whole open-loop
+    run deterministic (idle waits advance virtual time instead of
+    sleeping).
     """
     pending = sorted(arrivals, key=lambda a: a[0])
     gw.heartbeat_all()      # time spent in setup/warmup is not a failure
-    t0 = time.time()
+    t0 = gw.clock()
     handles: List[RequestHandle] = []
     i = 0
     it = 0
@@ -1610,10 +1698,10 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
     while i < len(pending) or gw.queue or gw.transfer_queue \
             or gw.retry_queue \
             or any(d.alive and d.client.active for d in gw.dec):
-        if tick is not None and time.time() - last_tick >= tick_interval_s:
+        if tick is not None and gw.clock() - last_tick >= tick_interval_s:
             tick(gw)
-            last_tick = time.time()
-        now = time.time() - t0
+            last_tick = gw.clock()
+        now = gw.clock() - t0
         while i < len(pending) and pending[i][0] * time_scale <= now:
             handles.append(gw.submit(pending[i][1], on_token=on_token))
             i += 1
@@ -1628,13 +1716,14 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
                 # only in-flight simulated wires remain: wait for t_ready
                 # instead of burning the iteration budget (same wedge
                 # guard as run_until_drained)
-                time.sleep(2e-4)
+                gw._sleep(2e-4)
         elif i < len(pending):
             # idle until the next arrival — don't burn the iteration budget
-            time.sleep(min(pending[i][0] * time_scale - now, 5e-3))
+            gw._sleep(min(pending[i][0] * time_scale - now, 5e-3))
         it += 1
         if it > max_iters:
             break
+    gw.sanitize_check("drive_open_loop")
     return handles
 
 

@@ -24,11 +24,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
+# the ONE layout contract (candidate groups + selection rule) — local
+# copies of these constants are forbidden (lint rule R005)
+from repro.kernels.kv_layout import GROUPS as _GROUPS
+from repro.kernels.kv_layout import pick_group as _pick_group
 
-# Candidate quantization group widths (lane dim of the pallas kernel).
-# 128-wide groups keep the scale/zero overhead at ~3% even for small
-# head_dims; fall back to smaller even groups, then raw.
-_GROUPS = (128, 64, 32, 16, 8, 4, 2)
 # Row-tile size for the quant kernels; the kernel handles ragged tails
 # (ceil-div grid), so one fixed block => one jit variant per flat shape.
 _BLOCK_N = 256
@@ -71,10 +71,6 @@ class KVWire:
         for t, p in zip(tensors, host):
             t.payload = p
         return self
-
-
-def _pick_group(n: int) -> int:
-    return next((g for g in _GROUPS if n % g == 0), 0)
 
 
 def _quantize_stacked(xs: Sequence[jnp.ndarray], backend: str,

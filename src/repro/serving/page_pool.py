@@ -80,10 +80,23 @@ class PagePool:
         self.peak_in_use = max(self.peak_in_use, self.n_in_use)
         return pages
 
-    def free(self, pages: Sequence[int]):
+    def free(self, pages: Sequence[int], owner: Optional[int] = None):
+        """Return pages to the free list. Validates the WHOLE batch before
+        mutating anything, so a bad call (double free, page listed twice,
+        page owned by someone else when ``owner`` is given) raises without
+        corrupting the free list with a partial free."""
+        seen = set()
         for p in pages:
-            if p not in self._owner:
+            if p in seen:
+                raise ValueError(f"page {p} listed twice in one free()")
+            seen.add(p)
+            actual = self._owner.get(p)
+            if actual is None:
                 raise ValueError(f"double free / foreign page {p}")
+            if owner is not None and actual != owner:
+                raise ValueError(
+                    f"page {p} is owned by slot {actual}, not {owner}")
+        for p in pages:
             del self._owner[p]
             self._free.append(p)
         self.frees += len(pages)

@@ -7,7 +7,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass
-from typing import Deque, Optional, Tuple
+from typing import Callable, Deque, Optional, Tuple
 
 from repro.core.workload import Workload
 
@@ -35,21 +35,23 @@ class WorkloadProfiler:
     describes the full-model trace."""
 
     def __init__(self, *, window: int = 200, shift_threshold: float = 0.4,
-                 in_scale: float = 1.0, out_scale: float = 1.0):
+                 in_scale: float = 1.0, out_scale: float = 1.0,
+                 clock: Optional[Callable[[], float]] = None):
         self.window = window
         self.shift_threshold = shift_threshold
         self.in_scale = in_scale
         self.out_scale = out_scale
+        self.clock = clock if clock is not None else time.time
         self._records: Deque[Tuple[float, int, int]] = deque(maxlen=window)
         self._arrivals: Deque[float] = deque(maxlen=window)
         self._baseline: Optional[WindowStats] = None
 
     def record(self, n_in: int, n_out: int, t: Optional[float] = None):
-        self._records.append((t if t is not None else time.time(),
+        self._records.append((t if t is not None else self.clock(),
                               n_in, n_out))
 
     def record_arrival(self, t: Optional[float] = None):
-        self._arrivals.append(t if t is not None else time.time())
+        self._arrivals.append(t if t is not None else self.clock())
 
     def arrival_rate(self) -> Optional[float]:
         """Offered load over the arrival window; None until 8 arrivals."""

@@ -25,21 +25,25 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import (Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple)
 
 from repro.serving.kv_transfer import KVWire, wire_bytes_uncompressed
 
 
 @dataclass
 class TransferTicket:
-    """One in-flight prefill->decode KV transfer."""
+    """One in-flight prefill->decode KV transfer. ``clock`` is the issuing
+    transport's clock (a REFERENCE to ``time.time`` by default, so ticket
+    readiness follows a VirtualClock when one is injected — rule R001)."""
     wire: KVWire
-    t_ready: float          # wall-clock time the wire is usable downstream
+    t_ready: float          # clock time the wire is usable downstream
     delay_s: float = 0.0
     nbytes: int = 0
+    clock: Callable[[], float] = time.time
 
     def ready(self, now: Optional[float] = None) -> bool:
-        return (now if now is not None else time.time()) >= self.t_ready
+        return (now if now is not None else self.clock()) >= self.t_ready
 
 
 class Transport(Protocol):
@@ -63,8 +67,10 @@ class InProcessTransport:
     serialize, and preserves the deprecated ``materialize_wires``
     Coordinator flag)."""
 
-    def __init__(self, *, materialize: bool = False):
+    def __init__(self, *, materialize: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
         self.materialize = materialize
+        self.clock = clock if clock is not None else time.time
         self.transfers = 0
 
     def send(self, wire: KVWire, src_replica: int, dst_replica: int,
@@ -72,7 +78,8 @@ class InProcessTransport:
         if self.materialize:
             wire.materialize()
         self.transfers += 1
-        return TransferTicket(wire, now if now is not None else time.time())
+        return TransferTicket(wire, now if now is not None else self.clock(),
+                              clock=self.clock)
 
     def send_decode(self, wire: KVWire, src_dec: int, dst_dec: int,
                     *, now: Optional[float] = None) -> TransferTicket:
@@ -100,7 +107,8 @@ class SimNetworkTransport:
                  alpha: Optional[float] = None,
                  bandwidth: Optional[float] = None,
                  bytes_scale: float = 1.0,
-                 count_compressed: bool = True):
+                 count_compressed: bool = True,
+                 clock: Optional[Callable[[], float]] = None):
         if cluster is None and bandwidth is None:
             raise ValueError("SimNetworkTransport needs a ClusterSpec or an "
                              "explicit bandwidth")
@@ -111,6 +119,7 @@ class SimNetworkTransport:
         self.bandwidth = bandwidth
         self.bytes_scale = bytes_scale
         self.count_compressed = count_compressed
+        self.clock = clock if clock is not None else time.time
         # accounting (benchmarks read these; min_delay_s is the gateway's
         # lower bound for deadline shedding)
         self.transfers = 0
@@ -174,7 +183,7 @@ class SimNetworkTransport:
 
     def _ship(self, wire: KVWire, alpha: float, bw: float,
               now: Optional[float]) -> TransferTicket:
-        now = now if now is not None else time.time()
+        now = now if now is not None else self.clock()
         wire.materialize()          # the explicit host hop of a real network
         nbytes = (wire.nbytes() if self.count_compressed
                   else wire_bytes_uncompressed(wire))
@@ -185,7 +194,8 @@ class SimNetworkTransport:
         self.total_delay_s += delay
         self.min_delay_s = (delay if self.transfers == 1
                             else min(self.min_delay_s, delay))
-        return TransferTicket(wire, now + delay, delay, nbytes)
+        return TransferTicket(wire, now + delay, delay, nbytes,
+                              clock=self.clock)
 
     def send(self, wire: KVWire, src_replica: int, dst_replica: int,
              *, now: Optional[float] = None) -> TransferTicket:

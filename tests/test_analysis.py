@@ -1,0 +1,466 @@
+"""repro.analysis: the R001-R005 invariant linter and the REPRO_SANITIZE
+runtime sanitizers (ISSUE 7).
+
+Lint rules are exercised on synthetic source snippets through the
+``lint_sources`` core (each rule fires on a bad snippet and stays quiet on
+the fixed version, plus the pragma escape hatch), and the REAL tree must
+lint clean under ``--strict``. Sanitizer tests plant actual faults — a
+leak, a double free, a free under the wrong owner, an illegal transition,
+a misaligned migration wire — and assert each is caught with a message
+that names the offending site.
+"""
+import math
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import Finding, lint_sources, run_lint
+from repro.analysis.sanitizers import (RetraceMonitor, SanitizerError,
+                                       TransitionAuditor,
+                                       check_wire_alignment,
+                                       make_sanitized_pool)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def rules_of(files, **kw):
+    return [f.rule for f in lint_sources(files, **kw)]
+
+
+# -- R001: wall-clock reads in serving/ ---------------------------------------
+
+
+def test_r001_fires_on_direct_call():
+    src = ("import time\n"
+           "def pump(self):\n"
+           "    now = time.time()\n"
+           "    return now\n")
+    fs = {"src/repro/serving/foo.py": src}
+    assert rules_of(fs) == ["R001"]
+    # monotonic too
+    fs = {"src/repro/serving/foo.py": src.replace("time.time()",
+                                                  "time.monotonic()")}
+    assert rules_of(fs) == ["R001"]
+
+
+def test_r001_quiet_on_injected_clock():
+    src = ("import time\n"
+           "class G:\n"
+           "    def __init__(self, clock=time.time):\n"   # reference: fine
+           "        self.clock = clock\n"
+           "    def pump(self):\n"
+           "        return self.clock()\n")
+    assert rules_of({"src/repro/serving/foo.py": src}) == []
+    # same violation outside serving/ is out of scope
+    bad = "import time\nnow = time.time()\n"
+    assert rules_of({"src/repro/core/foo.py": bad}) == []
+
+
+def test_r001_default_factory():
+    src = ("import time\n"
+           "from dataclasses import dataclass, field\n"
+           "@dataclass\n"
+           "class H:\n"
+           "    last: float = field(default_factory=time.time)\n")
+    assert rules_of({"src/repro/serving/foo.py": src}) == ["R001"]
+
+
+# -- R002: host syncs in jit-reachable code -----------------------------------
+
+
+def test_r002_item_in_scan_body():
+    src = ("from jax import lax\n"
+           "def outer(xs):\n"
+           "    def body(c, x):\n"
+           "        n = x.item()\n"
+           "        return c + n, x\n"
+           "    return lax.scan(body, 0, xs)\n")
+    assert rules_of({"src/repro/kernels/foo.py": src}) == ["R002"]
+    # the same .item() at the host boundary (not jit-reachable) is fine
+    ok = ("def summarize(x):\n"
+          "    return x.item()\n")
+    assert rules_of({"src/repro/kernels/foo.py": ok}) == []
+
+
+def test_r002_jit_decorated_and_called():
+    src = ("import jax\n"
+           "import numpy as np\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return helper(x)\n"
+           "def helper(x):\n"
+           "    return np.asarray(x)\n")     # reachable via local call graph
+    assert rules_of({"src/repro/models/foo.py": src}) == ["R002"]
+
+
+def test_r002_int_cast_static_vs_device():
+    bad = ("from jax import lax\n"
+           "def step(lengths):\n"
+           "    def body(i, c):\n"
+           "        return c + int(lengths[i])\n"
+           "    return lax.fori_loop(0, 4, body, 0)\n")
+    assert rules_of({"src/repro/models/foo.py": bad}) == ["R002"]
+    ok = ("import jax, math\n"
+          "@jax.jit\n"
+          "def f(x, head_dim, pct):\n"
+          "    half = int(head_dim * pct) // 2 * 2\n"     # static python int
+          "    b = int(x.shape[0])\n"                     # shape: static
+          "    return x[:b, :half]\n")
+    assert rules_of({"src/repro/models/foo.py": ok}) == []
+
+
+# -- R003: replica reach-through ----------------------------------------------
+
+
+def test_r003_reach_through():
+    bad = "def peek(gw):\n    return gw.dec[0].engine.params\n"
+    assert rules_of({"benchmarks/bench_x.py": bad}) == ["R003"]
+    assert rules_of({"src/repro/serving/gateway.py": bad}) == ["R003"]
+    # defining sites are allowed: self.engine / self.replica.engine
+    ok = ("class C:\n"
+          "    @property\n"
+          "    def engine(self):\n"
+          "        return self.replica.engine\n"
+          "    def use(self):\n"
+          "        return self.engine\n")
+    assert rules_of({"src/repro/serving/gateway.py": ok}) == []
+    # out of scope: the engine module itself builds engines
+    assert rules_of({"src/repro/serving/engine.py": bad}) == []
+
+
+# -- R004: FAILED/REJECTED must carry a reason --------------------------------
+
+
+def test_r004_reason_required():
+    bad = ("def kill(h, now, FAILED='FAILED'):\n"
+           "    h._transition(FAILED, now)\n")
+    assert rules_of({"src/repro/serving/gateway.py": bad}) == ["R004"]
+    ok = ("def kill(h, now, FAILED='FAILED'):\n"
+          "    h._transition(FAILED, now, reason='replica died')\n")
+    assert rules_of({"src/repro/serving/gateway.py": ok}) == []
+
+
+def test_r004_direct_state_assign():
+    bad = ("def hack(h, FAILED='FAILED'):\n"
+           "    h.state = FAILED\n")
+    assert rules_of({"src/repro/serving/gateway.py": bad}) == ["R004"]
+
+
+# -- R005: layout lockstep ----------------------------------------------------
+
+
+def test_r005_local_group_tuple():
+    bad = "MY_GROUPS = (128, 64, 32, 16, 8, 4, 2)\n"
+    assert rules_of({"src/repro/serving/new_wire.py": bad}) == ["R005"]
+    # tuples of non-ints (device groups) are not the layout contract
+    ok = "GROUPS = ((0, 1), (2, 3))\n"
+    assert rules_of({"src/repro/serving/new_wire.py": ok}) == []
+
+
+def test_r005_local_selection_and_nibbles():
+    sel = ("from repro.kernels.kv_layout import GROUPS\n"
+           "def pick(span):\n"
+           "    return next((g for g in GROUPS if span % g == 0), 0)\n")
+    assert rules_of({"src/repro/serving/new_wire.py": sel}) == ["R005"]
+    nib = "def unpack(p):\n    return (p & 0xF), (p >> 4)\n"
+    assert set(rules_of({"src/repro/models/new_paged.py": nib})) == {"R005"}
+    # the layout module itself is exempt from the nibble rule (but must
+    # keep defining GROUPS)
+    layout = "GROUPS = (128, 64, 32, 16, 8, 4, 2)\n" + nib
+    assert rules_of({"src/repro/kernels/kv_layout.py": layout}) == []
+
+
+def test_r005_consumer_must_import_contract():
+    # a kv_transfer.py that grew its own copy and dropped the import
+    rogue = ("_GROUPS2 = [128, 64]\n"
+             "def _pick_group(span):\n"
+             "    return 128\n")
+    found = lint_sources({"src/repro/serving/kv_transfer.py": rogue})
+    assert any(f.rule == "R005" and "import" in f.message for f in found)
+
+
+# -- pragmas ------------------------------------------------------------------
+
+
+def test_pragma_suppresses_and_strict_flags_unused():
+    bad = ("import time\n"
+           "now = time.time()  # repro: ignore[R001]\n")
+    assert rules_of({"src/repro/serving/foo.py": bad}) == []
+    above = ("import time\n"
+             "# repro: ignore[R001]\n"
+             "now = time.time()\n")
+    assert rules_of({"src/repro/serving/foo.py": above}) == []
+    # wrong rule id does not suppress
+    wrong = ("import time\n"
+             "now = time.time()  # repro: ignore[R003]\n")
+    assert rules_of({"src/repro/serving/foo.py": wrong},
+                    strict=False) == ["R001"]
+    # strict: the R003 pragma above suppressed nothing -> W001 (+ the R001)
+    assert sorted(rules_of({"src/repro/serving/foo.py": wrong},
+                           strict=True)) == ["R001", "W001"]
+
+
+def test_finding_format_carries_hint():
+    f = Finding("R001", "a.py", 3, 1, "boom", "fix it")
+    assert "a.py:3:1: R001 boom" in f.format()
+    assert "fix it" in f.format()
+
+
+def test_real_tree_is_clean_strict():
+    assert run_lint(REPO, strict=True) == []
+
+
+# -- sanitizers: page pool ----------------------------------------------------
+
+
+def test_sanitized_pool_double_free_names_both_sites():
+    pool = make_sanitized_pool(8, 4)
+    pages = pool.alloc(2, 0)
+    pool.free(pages, owner=0)
+    with pytest.raises(SanitizerError, match="already freed"):
+        pool.free(pages, owner=0)
+
+
+def test_sanitized_pool_wrong_owner():
+    pool = make_sanitized_pool(8, 4)
+    pages = pool.alloc(1, 0)
+    with pytest.raises(SanitizerError, match="owned by slot 0"):
+        pool.free(pages, owner=3)
+    # the refused free must not have mutated anything
+    assert pool.n_in_use == 1
+    pool.free(pages, owner=0)
+    assert pool.n_in_use == 0
+
+
+def test_sanitized_pool_leak_report_has_alloc_site():
+    pool = make_sanitized_pool(8, 4)
+    pool.alloc(1, 5)
+    with pytest.raises(SanitizerError, match="page leak"):
+        pool.check_empty("teardown")
+
+
+def test_plain_pool_double_free_is_atomic():
+    """Satellite 2: even without sanitize mode, a bad free() raises and
+    leaves the free list uncorrupted (no partial free)."""
+    from repro.serving.page_pool import PagePool
+    pool = PagePool(8, 4)
+    a = pool.alloc(2, 0)
+    b = pool.alloc(2, 1)
+    pool.free(b)
+    before_free, before_use = pool.n_free, pool.n_in_use
+    with pytest.raises(ValueError, match="double free"):
+        pool.free(a + b[:1])          # b[0] already free: whole call refused
+    assert (pool.n_free, pool.n_in_use) == (before_free, before_use)
+    with pytest.raises(ValueError, match="listed twice"):
+        pool.free([a[0], a[0]])
+    with pytest.raises(ValueError, match="owned by slot 0"):
+        pool.free(a, owner=9)
+    pool.free(a, owner=0)             # the good free still works
+    assert pool.n_in_use == 0
+
+
+# -- sanitizers: state machine ------------------------------------------------
+
+
+def _fake_handle(chain, state=None, reason=None, rid=7):
+    hist = [(float(i), s) for i, s in enumerate(chain)]
+    return SimpleNamespace(request=SimpleNamespace(rid=rid), state=state
+                           or chain[-1], history=hist, reason=reason)
+
+
+def test_auditor_accepts_legal_lifecycles():
+    aud = TransitionAuditor()
+    aud.audit(_fake_handle(["QUEUED", "PREFILLING", "TRANSFERRING",
+                            "DECODING", "DONE"]))
+    # preemption migration + failure requeue edges are legal
+    aud.audit(_fake_handle(["QUEUED", "PREFILLING", "TRANSFERRING",
+                            "DECODING", "TRANSFERRING", "DECODING",
+                            "QUEUED", "PREFILLING", "TRANSFERRING",
+                            "DECODING", "DONE"]))
+    aud.audit(_fake_handle(["QUEUED", "REJECTED"], reason="deadline"))
+    assert aud.audited == 3 and aud.illegal == 0
+
+
+def test_auditor_catches_illegal_edge():
+    aud = TransitionAuditor()
+    with pytest.raises(SanitizerError, match="illegal transition "
+                                             "QUEUED -> DONE"):
+        aud.audit(_fake_handle(["QUEUED", "DONE"]))
+
+
+def test_auditor_catches_state_assigned_around_transition():
+    aud = TransitionAuditor()
+    h = _fake_handle(["QUEUED", "PREFILLING"], state="DONE")
+    with pytest.raises(SanitizerError, match="without _transition"):
+        aud.audit(h)
+
+
+def test_auditor_requires_reason_on_failed():
+    aud = TransitionAuditor()
+    with pytest.raises(SanitizerError, match="no reason"):
+        aud.audit(_fake_handle(["QUEUED", "FAILED"]))
+
+
+# -- sanitizers: retrace monitor ----------------------------------------------
+
+
+def test_retrace_monitor_flags_growth():
+    sizes = {"n": 3}
+    client = SimpleNamespace(jit_cache_size=lambda: sizes["n"])
+    gw = SimpleNamespace(pre=[], dec=[SimpleNamespace(client=client)])
+    mon = RetraceMonitor()
+    mon.mark_steady(gw)
+    mon.check(gw)                      # stable: fine
+    sizes["n"] = 5
+    with pytest.raises(SanitizerError, match="retrace"):
+        mon.check(gw, context="steady state")
+
+
+# -- sanitizers: wire alignment -----------------------------------------------
+
+
+def test_misaligned_wire_caught():
+    from repro.configs import get_reduced
+    from repro.serving.kv_transfer import KVWire, WireTensor
+    cfg = get_reduced("llama-30b")
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    span = Hkv * hd
+    ln, L = 4, 1
+    # aligned: group g | span, rows = L*ln*ppr
+    from repro.kernels.kv_layout import pick_group
+    g = pick_group(span)
+    ppr = span // g
+    mk = lambda rows, gg: WireTensor("int4", {
+        "packed": np.zeros((rows, gg // 2), np.uint8),
+        "scale": np.zeros((rows, 1), np.float32),
+        "zero": np.zeros((rows, 1), np.float32)}, (L, ln, Hkv, hd))
+    good = KVWire(request_len=ln,
+                  slots={"slot0": {"k": mk(L * ln * ppr, g),
+                                   "v": mk(L * ln * ppr, g)}})
+    check_wire_alignment(good, cfg)    # no raise
+    # wrong group width (half the page group): what an exact-length
+    # extract with a flattened-size pick can produce
+    bad = KVWire(request_len=ln,
+                 slots={"slot0": {"k": mk(L * ln * ppr * 2, g // 2),
+                                  "v": mk(L * ln * ppr * 2, g // 2)}})
+    with pytest.raises(SanitizerError, match="misaligned migration wire"):
+        check_wire_alignment(bad, cfg, context="test")
+
+
+# -- end to end: sanitized gateway runs ---------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import build
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    return cfg, api.init(jax.random.PRNGKey(0))
+
+
+def _mk_gw(cfg, params, *, paged, clock=None, n_dec=1):
+    from repro.serving.engine import DecodeEngine, PrefillEngine
+    from repro.serving.gateway import Gateway
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    dkw = dict(max_slots=2, chunk_size=2, max_seq=64)
+    if paged:
+        dkw.update(paged=True, page_size=8)
+    decs = [DecodeEngine(cfg, params, **dkw) for _ in range(n_dec)]
+    kw = {"clock": clock} if clock is not None else {}
+    return Gateway([pre], decs, backend="ref", **kw)
+
+
+def _reqs(cfg, n, *, max_new=4, plen=12):
+    from repro.serving.gateway import ServeRequest
+    rng = np.random.default_rng(0)
+    return [ServeRequest(i, rng.integers(1, cfg.vocab_size, plen)
+                         .astype(np.int32), max_new) for i in range(n)]
+
+
+def test_sanitized_gateway_clean_run_and_planted_leak(small_model,
+                                                      monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, params = small_model
+    gw = _mk_gw(cfg, params, paged=True)
+    assert gw.sanitizer is not None
+    for r in _reqs(cfg, 3):
+        gw.submit(r)
+    done = gw.run_until_drained()      # drain runs sanitize_check: clean
+    assert len(done) == 3 and all(h.state == "DONE" for h in done)
+    st = gw.stats()
+    assert st["page_pool"]["leaked_pages"] == 0
+    assert st["sanitizer"]["transitions_audited"] >= 3
+    assert st["sanitizer"]["transition_violations"] == 0
+    # plant a leak: pages the pool owns but no slot references
+    eng = gw.dec[0].engine
+    eng.pool.alloc(1, 0)
+    assert gw.stats()["page_pool"]["leaked_pages"] == 1
+    with pytest.raises(SanitizerError, match="leaked page"):
+        gw.sanitize_check("test")
+
+
+def test_sanitized_engine_double_free_caught(small_model, monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, params = small_model
+    gw = _mk_gw(cfg, params, paged=True)
+    for r in _reqs(cfg, 1):
+        gw.submit(r)
+    gw.run_until_drained()
+    eng = gw.dec[0].engine
+    pages = eng.pool.alloc(2, 0)
+    eng.pool.free(pages, owner=0)
+    with pytest.raises(SanitizerError, match="already freed at"):
+        eng.pool.free(pages, owner=0)  # the exact double-free site named
+
+
+def test_sanitized_gateway_catches_tampered_history(small_model,
+                                                    monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, params = small_model
+    gw = _mk_gw(cfg, params, paged=False)
+    h = gw.submit(_reqs(cfg, 1)[0])
+    gw.run_until_drained()
+    # tamper: rewrite history to a QUEUED -> DONE jump (the class of bug
+    # R004 + the auditor exist for: state bypassing the machine)
+    h.history = [h.history[0], h.history[-1]]
+    with pytest.raises(SanitizerError, match="illegal transition"):
+        gw.sanitize_check("tampered")
+
+
+def test_virtual_clock_run_touches_wall_clock_zero_times(small_model,
+                                                         monkeypatch):
+    """Satellite 1 regression: with an injected VirtualClock, a full
+    submit -> prefill -> transfer -> decode -> drain cycle performs ZERO
+    wall-clock reads anywhere in serving/ (time.time in each serving
+    module's namespace is replaced by a tripwire)."""
+    from repro.serving import faults as faults_mod
+    from repro.serving import gateway as gateway_mod
+    from repro.serving import profiler as profiler_mod
+    from repro.serving import transport as transport_mod
+
+    calls = {"n": 0}
+
+    def tripwire(*a, **k):
+        calls["n"] += 1
+        raise AssertionError("wall clock touched during virtual-clock run")
+
+    fake_time = SimpleNamespace(time=tripwire, monotonic=tripwire,
+                                sleep=tripwire)
+    for mod in (gateway_mod, transport_mod, profiler_mod, faults_mod):
+        monkeypatch.setattr(mod, "time", fake_time)
+
+    cfg, params = small_model
+    clk = faults_mod.VirtualClock(1000.0)
+    gw = _mk_gw(cfg, params, paged=True, clock=clk)
+    for r in _reqs(cfg, 2):
+        gw.submit(r)
+    done = gw.run_until_drained()
+    assert len(done) == 2 and all(h.state == "DONE" for h in done)
+    assert calls["n"] == 0
+    # every recorded timestamp sits on the virtual timeline
+    for h in done:
+        assert all(t >= 1000.0 for t, _ in h.history)

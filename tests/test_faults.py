@@ -366,8 +366,11 @@ def test_straggler_suspected_then_recovers(small_model):
     warmup_engines([gw.pre[0].engine], [d.engine for d in gw.dec],
                    cfg.vocab_size, prompt_lens=(12,), max_new=2,
                    backend="ref")
+    # the window must outlive the first (slow, freshly-batched) prefill
+    # call, or the stall never lands on a decode step and the test only
+    # "passes" via an incidental first-step compile spike
     sched = FaultSchedule([FaultEvent(t=0.0, kind=STRAGGLER, phase="decode",
-                                      idx=0, duration_s=0.5, slow_s=0.3)])
+                                      idx=0, duration_s=1.5, slow_s=0.3)])
     install_chaos(gw, sched)
     hs = [gw.submit(r) for r in _reqs(cfg, 8, max_new=24)]
     suspected = False
