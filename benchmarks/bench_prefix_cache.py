@@ -1,0 +1,220 @@
+"""Prefix-sharing KV cache vs no-sharing on a Zipf shared-prefix trace.
+
+Two measurements on the REAL reduced-config engines (CPU):
+
+1. **warm TTFT on a Zipf trace**: a catalog of M distinct prompts, all
+   sharing one page-aligned "system prompt" prefix and differing in a
+   short unique tail, sampled Zipf-style (weight ∝ 1/rank^s) so repeats
+   dominate. Requests run one at a time (closed loop — no queueing
+   noise) through two gateways over the same trace: decode replicas
+   with ``prefix_sharing=True`` vs identical paged replicas without.
+   A repeat prompt is a FULL radix hit: prefill is skipped outright and
+   the continuation token is seeded at admit, so warm TTFT collapses to
+   queue+admit. Acceptance wants hit rate >= 0.5 and warm TTFT p50
+   >= 5x lower than no-sharing.
+2. **concurrent-decode capacity at fixed cache bytes**: one donated
+   32-token page-aligned chain, then admit full-hit duplicates until the
+   page pool rejects, vs cold admits of the same prompt on a no-sharing
+   engine with the SAME ``num_pages``. Warm admits share the prompt
+   pages (refcounts, zero copies) and allocate only a tail page, so
+   capacity must come out strictly higher.
+
+Emits ``BENCH_prefix_cache.json`` (gated by ``scripts/check_bench.py``:
+``hit_rate``/``capacity_ratio`` higher-is-better, ``ttft_p50``
+lower-is-better).
+"""
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import row
+
+BENCH_JSON = Path("BENCH_prefix_cache.json")
+
+PAGE_SIZE = 16
+SYS_LEN = 64            # shared system-prompt prefix (page-aligned)
+TAIL_LEN = 16           # unique per-catalog-entry tail
+ZIPF_S = 1.3
+
+
+def _catalog(cfg, m, seed=11):
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(1, cfg.vocab_size, SYS_LEN).astype(np.int32)
+    return [np.concatenate([
+        sys_prefix,
+        rng.integers(1, cfg.vocab_size, TAIL_LEN).astype(np.int32)])
+        for _ in range(m)]
+
+
+def _zipf_trace(catalog, n_req, seed=0):
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, len(catalog) + 1) ** ZIPF_S
+    picks = rng.choice(len(catalog), size=n_req, p=w / w.sum())
+    return [catalog[int(k)] for k in picks]
+
+
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if xs else float("nan")
+
+
+def _closed_loop(gw, trace, max_new):
+    """Submit one request at a time and drain: per-request TTFT with no
+    queueing component. Returns (ttfts, warm_mask)."""
+    from repro.serving.gateway import ServeRequest
+    seen, ttfts, warm = set(), [], []
+    for rid, toks in enumerate(trace):
+        key = toks.tobytes()
+        warm.append(key in seen)
+        seen.add(key)
+        h = gw.submit(ServeRequest(rid, toks, max_new_tokens=max_new))
+        gw.run_until_drained()
+        assert h.state == "DONE", f"request {rid} ended {h.state}"
+        ttfts.append(h.ttft)
+    return ttfts, warm
+
+
+def run(quick: bool = False):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models import build
+    from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+    from repro.serving.gateway import Gateway, warmup_engines
+
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    m_catalog = 6
+    n_req = 12 if quick else 24
+    max_new = 4 if quick else 8
+    max_seq = 128
+
+    report = {"model": cfg.name, "page_size": PAGE_SIZE,
+              "catalog": m_catalog, "n_requests": n_req,
+              "prompt_len": SYS_LEN + TAIL_LEN, "zipf_s": ZIPF_S,
+              "max_new_tokens": max_new}
+
+    # 1. Zipf trace: sharing vs no-sharing gateway, same trace -------------
+    catalog = _catalog(cfg, m_catalog)
+    trace = _zipf_trace(catalog, n_req)
+    scenarios = {}
+    for name, sharing in (("sharing", True), ("no_sharing", False)):
+        pre = PrefillEngine(cfg, params, max_seq=max_seq)
+        dec = DecodeEngine(cfg, params, max_slots=4, max_seq=max_seq,
+                           chunk_size=8, paged=True, page_size=PAGE_SIZE,
+                           prefix_sharing=sharing)
+        warmup_engines([pre], [dec], cfg.vocab_size, backend="ref",
+                       prompt_lens=(TAIL_LEN, SYS_LEN + TAIL_LEN))
+        gw = Gateway([pre], [dec], backend="ref")
+        t0 = time.perf_counter()
+        ttfts, warm = _closed_loop(gw, trace, max_new)
+        wall = time.perf_counter() - t0
+        st = gw.stats()
+        pfx, pool = st["prefix"], st["page_pool"]
+        warm_t = [t for t, w in zip(ttfts, warm) if w]
+        cold_t = [t for t, w in zip(ttfts, warm) if not w]
+        scenarios[name] = {
+            "wall_s": wall,
+            "n_warm": len(warm_t),
+            "warm_ttft_p50_s": _pct(warm_t, 50),
+            "warm_ttft_p99_s": _pct(warm_t, 99),
+            "cold_ttft_p50_s": _pct(cold_t, 50),
+            "prefix_hits": pfx["hits"],
+            "prefix_partial": pfx["partial_hits"],
+            "prefix_misses": pfx["misses"],
+            "prefix_hit_rate": pfx["hit_rate"],
+            "hit_tokens": pfx["hit_tokens"],
+            "shared_pages": pool.get("shared_pages", 0),
+            "cow_copies": pool.get("cow_copies", 0),
+            "leaked_pages": pool.get("leaked_pages", 0),
+        }
+        assert scenarios[name]["leaked_pages"] == 0, "page leak in trace"
+    sh, ns = scenarios["sharing"], scenarios["no_sharing"]
+    tot_prompt = n_req * (SYS_LEN + TAIL_LEN)
+    speedup = ns["warm_ttft_p50_s"] / max(sh["warm_ttft_p50_s"], 1e-9)
+    report["trace"] = scenarios
+    report["hit_rate"] = sh["prefix_hit_rate"]
+    report["hit_tokens_frac"] = sh["hit_tokens"] / tot_prompt
+    report["ttft_p50"] = sh["warm_ttft_p50_s"]
+    report["ttft_p99"] = sh["warm_ttft_p99_s"]
+    report["warm_ttft_speedup_p50"] = speedup
+
+    # 2. concurrent-decode capacity at fixed cache bytes -------------------
+    num_pages = 32
+    cap_prompt_len = 32                 # page-aligned: no COW on admit
+    cap_seq = 64
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(1, cfg.vocab_size, cap_prompt_len).astype(np.int32)
+    pre = PrefillEngine(cfg, params, max_seq=cap_seq)
+
+    cold = DecodeEngine(cfg, params, max_slots=64, max_seq=cap_seq,
+                        paged=True, page_size=PAGE_SIZE,
+                        num_pages=num_pages)
+    cold_n = 0
+    while True:
+        req = GenRequest(cold_n, prompt.copy(), max_new_tokens=4)
+        (r, w, f), = pre.run([req], backend="ref")
+        if not cold.admit(r, w, f, backend="ref"):
+            break
+        cold_n += 1
+
+    warm_eng = DecodeEngine(cfg, params, max_slots=64, max_seq=cap_seq,
+                            paged=True, page_size=PAGE_SIZE,
+                            num_pages=num_pages, prefix_sharing=True)
+    donor = GenRequest(999, prompt.copy(), max_new_tokens=2)
+    (r, w, f), = pre.run([donor], backend="ref")
+    assert warm_eng.admit(r, w, f, backend="ref")
+    while warm_eng.active:
+        warm_eng.step()                 # donor retires -> donates its chain
+    warm_n = 0
+    while True:
+        m = warm_eng.prefix_match(prompt)
+        if m is None or not m.full:
+            break
+        req = GenRequest(1000 + warm_n, prompt.copy(), max_new_tokens=4)
+        tag = ("bench-pin", warm_n)
+        if not warm_eng.prefix_pin(m.pages, tag):
+            break
+        ok = warm_eng.admit_prefix(req, m.pages, int(m.next_token))
+        warm_eng.prefix_unpin(tag)
+        if not ok:
+            break
+        warm_n += 1
+    wst = warm_eng.page_stats()
+    cap_ratio = warm_n / max(cold_n, 1)
+    report["capacity"] = {
+        "num_pages": num_pages,
+        "prompt_len": cap_prompt_len,
+        "cold_concurrent": cold_n,
+        "warm_concurrent": warm_n,
+        "warm_shared_pages": wst["shared_pages"],
+        "warm_cow_copies": wst["cow_copies"],
+    }
+    report["capacity_ratio"] = cap_ratio
+
+    BENCH_JSON.write_text(json.dumps(report, indent=2))
+    rows = [
+        row("prefix_cache_warm_ttft", sh["warm_ttft_p50_s"] * 1e6,
+            f"warm_ttft_p50_ms={sh['warm_ttft_p50_s']*1e3:.2f};"
+            f"no_sharing_ms={ns['warm_ttft_p50_s']*1e3:.2f};"
+            f"speedup={speedup:.1f}x;json={BENCH_JSON}"),
+        row("prefix_cache_hit_rate", report["hit_rate"],
+            f"hits={sh['prefix_hits']};partial={sh['prefix_partial']};"
+            f"miss={sh['prefix_misses']};"
+            f"hit_tokens_frac={report['hit_tokens_frac']:.2f}"),
+        row("prefix_cache_capacity", cap_ratio,
+            f"warm_concurrent={warm_n};cold_concurrent={cold_n};"
+            f"ratio={cap_ratio:.1f}x;pages={num_pages}"),
+    ]
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

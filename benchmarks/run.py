@@ -22,10 +22,10 @@ def main() -> None:
     from benchmarks import (bench_case_study, bench_fault_tolerance,
                             bench_kernels, bench_kv_compression,
                             bench_network_effect, bench_paged_kv,
-                            bench_ratio_sweep, bench_rescheduling,
-                            bench_scheduling_time, bench_serving_api,
-                            bench_simulator_accuracy, bench_slo_attainment,
-                            bench_throughput)
+                            bench_prefix_cache, bench_ratio_sweep,
+                            bench_rescheduling, bench_scheduling_time,
+                            bench_serving_api, bench_simulator_accuracy,
+                            bench_slo_attainment, bench_throughput)
 
     suites = {
         "slo": (bench_slo_attainment, "Fig 7-8 SLO attainment"),
@@ -37,6 +37,9 @@ def main() -> None:
                          "Fig 11/Table 4 rescheduling (sim + live flip)"),
         "paged_kv": (bench_paged_kv,
                      "paged int4-resident KV: capacity + tok/s vs dense"),
+        "prefix_cache": (bench_prefix_cache,
+                         "prefix-sharing KV: Zipf hit rate, warm TTFT, "
+                         "capacity vs no-sharing"),
         "fault_tolerance": (bench_fault_tolerance,
                             "chaos crash+preemption: SLO attainment vs "
                             "no-handling baseline"),

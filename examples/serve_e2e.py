@@ -50,6 +50,9 @@ def main():
     ap.add_argument("--no-paged", action="store_true",
                     help="use the dense slotted decode cache instead of "
                          "the paged int4-resident pool")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the radix prefix cache (refcounted "
+                         "copy-on-write page sharing + prefill skip)")
     ap.add_argument("--chaos", action="store_true",
                     help="inject a decode-replica crash and a spot "
                          "preemption mid-trace (3 decode replicas so a "
@@ -68,7 +71,9 @@ def main():
     decodes = [DecodeEngine(cfg, params, max_slots=4, max_seq=128,
                             paged=not args.no_paged,
                             page_size=args.page_size,
-                            num_pages=args.pages or None)
+                            num_pages=args.pages or None,
+                            prefix_sharing=not (args.no_paged
+                                                or args.no_prefix_sharing))
                for _ in range(n_dec)]
     if decodes[0].paged_fallback:
         print(f"note: {decodes[0].paged_fallback}")
@@ -87,16 +92,27 @@ def main():
                    compress=not args.no_compress, backend="ref",
                    prompt_lens=(16, 24, 32))
 
-    # open-loop Poisson trace
-    rng = np.random.default_rng(0)
-    arrivals = []
+    # open-loop Poisson trace: every prompt opens with a shared 16-token
+    # "system prompt" (page-aligned — partial radix hits once the first
+    # request donates its chain), and ~1/3 of requests repeat an earlier
+    # prompt verbatim (full hits: prefill skipped entirely). Seed differs
+    # from warmup_engines' rng(0) so the warmup donations don't collide
+    # with the trace prompts.
+    rng = np.random.default_rng(7)
+    sys_prefix = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+    arrivals, prompts = [], []
     t = 0.0
     for rid in range(args.requests):
         t += rng.exponential(1.0 / args.rate)
-        n_in = int(rng.choice([16, 24, 32]))
+        if prompts and rng.random() < 0.35:
+            toks = prompts[int(rng.integers(len(prompts)))]
+        else:
+            n_in = int(rng.choice([16, 24, 32]))
+            toks = np.concatenate([sys_prefix, rng.integers(
+                1, cfg.vocab_size, n_in - 16).astype(np.int32)])
+            prompts.append(toks)
         arrivals.append((t, ServeRequest(
-            rid, rng.integers(1, cfg.vocab_size, n_in).astype(np.int32),
-            max_new_tokens=args.max_new,
+            rid, toks, max_new_tokens=args.max_new,
             ttft_deadline_s=args.ttft_slo or float("inf"),
             e2e_deadline_s=args.e2e_slo or float("inf"))))
 
@@ -169,6 +185,15 @@ def main():
         print(f"page pool (fleet): "
               f"{st['page_pool']['alloc_failures']:.0f} admission stalls, "
               f"{st['page_pool']['in_use']:.0f} pages still in use")
+    pfx = st["prefix"]
+    if pfx["hits"] or pfx["partial_hits"] or pfx["misses"]:
+        pool = st["page_pool"] or {}
+        print(f"prefix cache: {pfx['hits']} full hits (prefill skipped), "
+              f"{pfx['partial_hits']} partial (suffix prefill), "
+              f"{pfx['misses']} misses "
+              f"(hit rate {pfx['hit_rate']*100:.0f}%, "
+              f"{pfx['hit_tokens']} prompt tokens reused, "
+              f"{pool.get('cow_copies', 0):.0f} COW copies)")
     print("replicas:", "  ".join(
         f"{r['phase']}:{r['idx']}={r['status']}"
         + (f"({r['suspect_why']})" if r["suspect_why"] else "")

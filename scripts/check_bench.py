@@ -1,6 +1,6 @@
 #!/usr/bin/env python
 """Bench-regression gate: fail CI when a higher-is-better metric drops vs
-the committed baseline.
+the committed baseline (or a lower-is-better metric rises).
 
 Compares every numeric leaf whose key is in ``--metrics`` (dotted path,
 found recursively; default ``tokens_per_s``) of a freshly produced
@@ -8,6 +8,11 @@ BENCH_*.json against the committed baseline copy of the same file. A leaf
 regresses when
 
     fresh < baseline * (1 - tolerance)        (default tolerance 20%)
+
+Latency-style leaves named in ``--lower-metrics`` gate in the opposite
+direction: they regress when
+
+    fresh > baseline * (1 + tolerance)
 
 Leaves present only in the baseline or only in the fresh file are SKIPPED
 (new suites and retired metrics don't break the gate), as is a missing
@@ -21,6 +26,9 @@ Usage (CI snapshots baselines before the bench run overwrites them):
         BENCH_throughput.json BENCH_paged_kv.json [--tolerance 0.2]
     python scripts/check_bench.py --metrics slo_attainment \\
         --baseline-dir ci-baselines BENCH_fault_tolerance.json
+    python scripts/check_bench.py --metrics hit_rate \\
+        --lower-metrics ttft_p50 --baseline-dir ci-baselines \\
+        BENCH_prefix_cache.json
 """
 from __future__ import annotations
 
@@ -48,7 +56,8 @@ def metric_leaves(obj, metrics, prefix: str = ""):
 
 
 def check_file(fresh_path: Path, baseline_path: Path, tolerance: float,
-               metrics=frozenset((DEFAULT_METRICS,))) -> list:
+               metrics=frozenset((DEFAULT_METRICS,)),
+               lower_metrics=frozenset()) -> list:
     """Returns a list of failure strings (empty = pass)."""
     if not baseline_path.exists():
         print(f"  {fresh_path}: no committed baseline "
@@ -56,9 +65,10 @@ def check_file(fresh_path: Path, baseline_path: Path, tolerance: float,
         return []
     if not fresh_path.exists():
         return [f"{fresh_path}: bench output missing (suite did not run?)"]
-    fresh = dict(metric_leaves(json.loads(fresh_path.read_text()), metrics))
+    allm = frozenset(metrics) | frozenset(lower_metrics)
+    fresh = dict(metric_leaves(json.loads(fresh_path.read_text()), allm))
     base = dict(metric_leaves(json.loads(baseline_path.read_text()),
-                              metrics))
+                              allm))
     failures = []
     for path in sorted(base):
         if path not in fresh:
@@ -66,6 +76,18 @@ def check_file(fresh_path: Path, baseline_path: Path, tolerance: float,
             continue
         b, f = base[path], fresh[path]
         if b <= 0:
+            continue
+        leaf = path.rsplit(".", 1)[-1]
+        if leaf in lower_metrics:
+            rise = f / b - 1.0
+            status = "FAIL" if rise > tolerance else "ok"
+            print(f"  {fresh_path}:{path}: baseline {b:.3f} -> fresh "
+                  f"{f:.3f} ({rise*100:+.1f}%) [lower-is-better {status}]")
+            if rise > tolerance:
+                failures.append(
+                    f"{fresh_path}:{path} rose {rise*100:.1f}% "
+                    f"(> {tolerance*100:.0f}% tolerance, lower is better): "
+                    f"{b:.3f} -> {f:.3f}")
             continue
         drop = 1.0 - f / b
         status = "FAIL" if drop > tolerance else "ok"
@@ -93,14 +115,18 @@ def main() -> int:
     ap.add_argument("--metrics", default=DEFAULT_METRICS,
                     help="comma-separated leaf keys to gate, all "
                          "higher-is-better (default: tokens_per_s)")
+    ap.add_argument("--lower-metrics", default="",
+                    help="comma-separated leaf keys gated in the opposite "
+                         "direction (latency-style, lower is better)")
     args = ap.parse_args()
     metrics = frozenset(m for m in args.metrics.split(",") if m)
+    lower = frozenset(m for m in args.lower_metrics.split(",") if m)
 
     failures = []
     for f in args.files:
         fresh = Path(f)
         failures += check_file(fresh, Path(args.baseline_dir) / fresh.name,
-                               args.tolerance, metrics)
+                               args.tolerance, metrics, lower)
     if failures:
         print("\nbench regression gate FAILED:", file=sys.stderr)
         for msg in failures:

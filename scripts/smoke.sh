@@ -33,6 +33,10 @@ if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
         python -m benchmarks.run --suite paged_kv --quick
     test -s BENCH_paged_kv.json
+    echo "== prefix_cache bench (Zipf hit rate, warm TTFT vs no-sharing) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m benchmarks.run --suite prefix_cache --quick
+    test -s BENCH_prefix_cache.json
     echo "== chaos demo (injected crash + preemption, KV-page migration) =="
     REPRO_SANITIZE=1 timeout 600 python examples/serve_e2e.py \
         --requests 8 --rate 3 --max-new 32 --chaos

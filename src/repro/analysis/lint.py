@@ -29,6 +29,13 @@ session" prose in CHANGES.md (now DESIGN.md §9):
   ``kernels/kv_layout.py``; ``kv_transfer.py`` / ``models/paged.py`` /
   the kernels must import them. A local copy is a drift waiting to
   corrupt zero-copy page insertion.
+* **R006** — page refcount/free-list mutation lives ONLY in
+  ``serving/page_pool.py``: no reaching into ``PagePool`` internals
+  (``._free``, ``._owners``, ``._by_owner``, ``._grant``, ``._revoke``)
+  from anywhere else. Prefix sharing means a page may have several
+  owners; a caller that pokes the maps directly can free a page another
+  owner still reads (silent KV corruption). Go through
+  ``alloc``/``share``/``free``/``unshare``/``owned_by``/``owners_of``.
 
 Escape hatch: ``# repro: ignore[Rnnn]`` on the offending line (or the
 line above) suppresses one rule there; ``--strict`` additionally fails on
@@ -49,7 +56,12 @@ RULES: Dict[str, str] = {
     "R004": "FAILED/REJECTED transitions must carry a reason",
     "R005": "wire/page quantization layout must not drift (kv_layout is "
             "the single source of truth)",
+    "R006": "page refcount/free-list mutation only in serving/page_pool.py "
+            "(use the PagePool API, never its internals)",
 }
+
+# the ONE module allowed to touch the refcount maps/free list (R006)
+POOL_MODULE = "src/repro/serving/page_pool.py"
 
 # the ONE module allowed to define the layout contract (R005)
 LAYOUT_MODULE = "src/repro/kernels/kv_layout.py"
@@ -374,6 +386,36 @@ class _R004(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+# -- R006: pool internals stay in the pool ------------------------------------
+
+_POOL_INTERNALS = ("_free", "_owners", "_by_owner", "_grant", "_revoke")
+
+
+class _R006(ast.NodeVisitor):
+    """No ``PagePool`` internal access outside ``serving/page_pool.py``.
+
+    ``self._owners`` (etc.) is allowed — a subclass extending the pool
+    (the sanitizer's site-tracking pool) is still "in" the pool; any
+    other base expression is a caller mutating refcount state around the
+    share/free API and breaking the multi-owner invariant."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if node.attr in _POOL_INTERNALS and not (
+                isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            self.findings.append(Finding(
+                "R006", self.path, node.lineno, node.col_offset,
+                f".{node.attr} reaches into PagePool refcount internals",
+                "refcount/free-list mutation lives only in "
+                "serving/page_pool.py — use alloc/share/free/unshare/"
+                "owned_by/owners_of/refcount/pages_in_use"))
+        self.generic_visit(node)
+
+
 # -- R005: layout lockstep ----------------------------------------------------
 
 _R005_IMPORT_REQUIREMENTS: Dict[str, Tuple[str, ...]] = {
@@ -503,6 +545,9 @@ def _in_scope(rule: str, path: str) -> bool:
             or path.startswith("benchmarks/")
     if rule == "R004":
         return path.startswith(("src/repro/", "benchmarks/"))
+    if rule == "R006":
+        return path != POOL_MODULE and path.startswith(
+            ("src/repro/", "benchmarks/"))
     return True
 
 
@@ -538,6 +583,10 @@ def lint_sources(files: Dict[str, str], *,
             findings.extend(v.findings)
         if _in_scope("R004", path):
             v = _R004(path)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if _in_scope("R006", path):
+            v = _R006(path)
             v.visit(tree)
             findings.extend(v.findings)
         findings.extend(_r005_file(path, tree))

@@ -56,6 +56,7 @@ def make_sanitized_pool(num_pages: int, page_size: int):
             super().__init__(n, ps)
             self._alloc_site: Dict[int, str] = {}
             self._free_site: Dict[int, str] = {}
+            self._share_site: Dict[Tuple[int, object], str] = {}
 
         def alloc(self, n, owner):
             pages = super().alloc(n, owner)
@@ -66,9 +67,16 @@ def make_sanitized_pool(num_pages: int, page_size: int):
                     self._free_site.pop(p, None)
             return pages
 
+        def share(self, pages, owner):
+            super().share(pages, owner)
+            site = _site()
+            for p in pages:
+                self._share_site[(p, owner)] = site
+
         def free(self, pages, owner=None):
             for p in pages:
-                if p not in self._owner:
+                owners = self._owners.get(p)
+                if owners is None:
                     prior = self._free_site.get(p)
                     if prior is not None:
                         raise SanitizerError(
@@ -76,47 +84,61 @@ def make_sanitized_pool(num_pages: int, page_size: int):
                             f"at:\n{prior}second free at:\n{_site()}")
                     raise SanitizerError(
                         f"free of never-allocated page {p} at:\n{_site()}")
-                actual = self._owner[p]
-                if owner is not None and actual != owner:
+                if owner is not None and owner not in owners:
+                    held = (f"slot {next(iter(owners))}" if len(owners) == 1
+                            else str(sorted(map(repr, owners))))
                     raise SanitizerError(
-                        f"use-after-free hazard: freeing page {p} as slot "
-                        f"{owner} but it is owned by slot {actual} "
+                        f"use-after-free hazard: releasing page {p} as "
+                        f"owner {owner!r} but it is owned by {held} "
                         f"(allocated at:\n{self._alloc_site.get(p, '?')})"
-                        f"\nfree attempted at:\n{_site()}")
+                        f"\nrelease attempted at:\n{_site()}")
             site = _site()
             super().free(pages, owner)
             for p in pages:
-                self._free_site[p] = site
-                self._alloc_site.pop(p, None)
+                if p not in self._owners:       # refcount hit 0: truly freed
+                    self._free_site[p] = site
+                    self._alloc_site.pop(p, None)
+                if owner is not None:
+                    self._share_site.pop((p, owner), None)
 
         def check_empty(self, context: str = ""):
             """Assert no live pages remain (drained gateway teardown)."""
-            if self._owner:
+            if self._owners:
                 lines = []
-                for p, o in sorted(self._owner.items()):
+                for p in sorted(self._owners):
+                    who = sorted(map(repr, self._owners[p]))
                     lines.append(
-                        f"  page {p} (slot {o}) allocated at:\n"
+                        f"  page {p} (held by {who}) allocated at:\n"
                         f"{self._alloc_site.get(p, '    <unknown>')}")
                 raise SanitizerError(
                     f"page leak{' in ' + context if context else ''}: "
-                    f"{len(self._owner)} page(s) still allocated after "
+                    f"{len(self._owners)} page(s) still referenced after "
                     f"drain:\n" + "\n".join(lines))
 
     return SanitizedPagePool(num_pages, page_size)
 
 
 def audit_paged_engine(engine, context: str = ""):
-    """Cross-check a DecodeEngine's slot->pages map against its pool's
-    owner map: every owned page must belong to a live slot and vice versa
-    (a mismatch means a leak or a stale table row)."""
+    """Cross-check a DecodeEngine's references against its pool's
+    refcounted owner map. The engine's legitimate reference holders are
+    its slot chains, its prefix-cache index, and its in-flight pins —
+    every in-use page must be covered by at least one of them (else a
+    release path leaked it), and every reference the engine holds must be
+    backed by a live refcount under the matching owner tag (else a stale
+    table row points at freed or re-owned pages)."""
     pool = getattr(engine, "pool", None)
     if pool is None:
         return
-    slot_pages = getattr(engine, "_slot_pages", {})
-    engine_view = {p: s for s, ps in slot_pages.items() for p in ps}
-    pool_view = dict(pool._owner)
     where = f" in {context}" if context else ""
-    leaked = sorted(set(pool_view) - set(engine_view))
+    slot_pages = getattr(engine, "_slot_pages", {})
+    cache = getattr(engine, "prefix_cache", None)
+    cache_pages = set(cache.page_set()) if cache is not None else set()
+    pins = dict(getattr(engine, "_pins", {}))
+    referenced = ({p for ps in slot_pages.values() for p in ps}
+                  | cache_pages
+                  | {p for ps in pins.values() for p in ps})
+    in_use = set(pool.pages_in_use())
+    leaked = sorted(in_use - referenced)
     if leaked:
         sites = ""
         alloc_site = getattr(pool, "_alloc_site", {})
@@ -124,19 +146,24 @@ def audit_paged_engine(engine, context: str = ""):
             if p in alloc_site:
                 sites += f"\npage {p} allocated at:\n{alloc_site[p]}"
         raise SanitizerError(
-            f"page leak{where}: pool owns pages {leaked} that no live "
-            f"slot references (a release path skipped pool.free)" + sites)
-    dangling = sorted(set(engine_view) - set(pool_view))
-    if dangling:
-        raise SanitizerError(
-            f"use-after-free{where}: slots reference freed pages "
-            f"{dangling} ({ {p: engine_view[p] for p in dangling} })")
-    for p in engine_view:
-        if pool_view[p] != engine_view[p]:
+            f"page leak{where}: pool holds pages {leaked} that no slot "
+            f"chain, prefix-cache entry, or pin references (a release "
+            f"path skipped pool.free/unshare)" + sites)
+    expected = [(s, p) for s, ps in slot_pages.items() for p in ps]
+    if cache is not None:
+        expected += [(cache.owner, p) for p in cache_pages]
+    expected += [(tag, p) for tag, ps in pins.items() for p in ps]
+    for owner, p in expected:
+        owners = pool.owners_of(p)
+        if not owners:
             raise SanitizerError(
-                f"page ownership mismatch{where}: page {p} owned by slot "
-                f"{pool_view[p]} in the pool but referenced by slot "
-                f"{engine_view[p]} in the engine")
+                f"use-after-free{where}: {owner!r} references freed "
+                f"page {p}")
+        if owner not in owners:
+            raise SanitizerError(
+                f"page ownership mismatch{where}: page {p} referenced by "
+                f"{owner!r} in the engine but refcounted for "
+                f"{sorted(map(repr, owners))} in the pool")
 
 
 # -- request state-machine auditor --------------------------------------------
@@ -144,7 +171,12 @@ def audit_paged_engine(engine, context: str = ""):
 # independent copy of the DESIGN.md §5 transition table — deliberately NOT
 # imported from gateway.py, so a drive-by edit there trips the audit here
 _LEGAL: Dict[str, Tuple[str, ...]] = {
-    "QUEUED": ("PREFILLING", "CANCELLED", "REJECTED", "FAILED"),
+    # QUEUED -> TRANSFERRING is the full-prefix-hit fast path: every
+    # prompt token is already resident in the decode replica's radix
+    # cache, so the request skips the prefill stage outright and only a
+    # page-handle "wire" (no tensors) moves (DESIGN.md §10).
+    "QUEUED": ("PREFILLING", "TRANSFERRING", "CANCELLED", "REJECTED",
+               "FAILED"),
     "PREFILLING": ("TRANSFERRING", "QUEUED", "CANCELLED", "FAILED"),
     "TRANSFERRING": ("DECODING", "QUEUED", "CANCELLED", "FAILED"),
     "DECODING": ("DONE", "QUEUED", "TRANSFERRING", "CANCELLED", "FAILED"),

@@ -233,6 +233,39 @@ def max_decode_batch(cluster: ClusterSpec, cfg: ModelConfig,
     return max(1, int(worst))
 
 
+def effective_prefill_tokens(wl) -> float:
+    """Mean prompt tokens a request actually PREFILLS once the shared radix
+    prefix cache (serving/prefix_cache.py) serves ``wl.prefix_hit_rate`` of
+    prompt tokens: full hits skip prefill outright and partial hits prefill
+    only the suffix past the matched page boundary. Clamped to keep 5% of
+    the prompt even at a measured hit rate of 1.0 — the first occurrence of
+    every prefix is always a cold miss, so planning for literally zero
+    prefill work would starve the prefill fleet of the capacity that
+    *creates* cache entries."""
+    hr = min(max(float(getattr(wl, "prefix_hit_rate", 0.0)), 0.0), 0.95)
+    return max(wl.mean_in * (1.0 - hr), 1.0)
+
+
+def prefix_shared_decode_batch(base_batch: int, wl, *,
+                               page_size: int = PAGE_SIZE) -> int:
+    """Concurrency credit from prefix sharing: the hit fraction of each
+    sequence's PROMPT rides on refcounted pages shared with other residents,
+    so only ``mean_in*(1-hr) + mean_out`` tokens' worth of pages are freshly
+    allocated per admitted sequence. The page budget divided by that smaller
+    per-sequence footprint admits proportionally more concurrent decodes at
+    fixed cache bytes. Generated tokens never share; the same 0.95 clamp as
+    ``effective_prefill_tokens`` keeps the first-occurrence cost real."""
+    hr = min(max(float(getattr(wl, "prefix_hit_rate", 0.0)), 0.0), 0.95)
+    if hr <= 0.0 or base_batch <= 0:
+        return base_batch
+    ctx_full = wl.mean_in + wl.mean_out / 2.0
+    ctx_fresh = wl.mean_in * (1.0 - hr) + wl.mean_out / 2.0
+    pages_full = max(-(-int(ctx_full) // page_size), 1)
+    pages_fresh = max(-(-int(ctx_fresh) // page_size), 1)
+    return max(base_batch,
+               int(base_batch * pages_full / max(pages_fresh, 1)))
+
+
 def kv_transfer_time(cluster: ClusterSpec, cfg: ModelConfig,
                      src: Sequence[int], dst: Sequence[int],
                      n_tokens: int, *, compress: bool = True) -> float:

@@ -70,26 +70,35 @@ def estimate_pair_slo(cluster: ClusterSpec, cfg: ModelConfig,
                       rate_i: float, rate_j: float, slo: SloSpec, *,
                       compress: bool = True) -> float:
     """Analytic SLO attainment for requests taking path (pre -> dec)."""
+    # prefix-cache credit: only the unshared suffix of the mean prompt is
+    # prefilled (full hits skip the prefill stage entirely)
+    eff_in = cm.effective_prefill_tokens(wl)
     s_p = cm.prefill_latency(cluster, cfg,
-                             pre.pc, int(wl.mean_in))
+                             pre.pc, max(int(eff_in), 1))
     rho_p = min(rate_i * s_p, 0.999)
     wait_p = s_p * rho_p / (1 - rho_p)          # M/M/1-ish queue
     ttft_mean = wait_p + s_p
 
-    # decode: fixed-point on concurrent batch
+    # decode: fixed-point on concurrent batch. Shared prefix pages let the
+    # same page budget admit more concurrent sequences (capacity credit);
+    # the attention read cost keeps the FULL context — shared pages are
+    # still dequantized and read every step.
+    bmax = cm.prefix_shared_decode_batch(dec.cost.max_decode_batch, wl)
     B = 8.0
     for _ in range(8):
         tpot = cm.decode_step_latency(cluster, cfg, dec.pc,
                                       max(int(B), 1),
                                       int(wl.mean_in + wl.mean_out / 2))
         B_new = rate_j * wl.mean_out * tpot
-        B = 0.5 * B + 0.5 * min(max(B_new, 1.0), dec.cost.max_decode_batch)
+        B = 0.5 * B + 0.5 * min(max(B_new, 1.0), bmax)
     tpot = cm.decode_step_latency(cluster, cfg, dec.pc, max(int(B), 1),
                                   int(wl.mean_in + wl.mean_out / 2))
-    overload = rate_j * wl.mean_out * tpot > dec.cost.max_decode_batch * 1.05
+    overload = rate_j * wl.mean_out * tpot > bmax * 1.05
 
+    # only freshly prefilled suffix KV transits the wire on the hot path
+    # (full hits skip the transfer stage; page handles move, not tensors)
     t_kv = cm.kv_transfer_time(cluster, cfg, pre.devices, dec.devices,
-                               int(wl.mean_in), compress=compress)
+                               max(int(eff_in), 1), compress=compress)
     e2e_mean = ttft_mean + t_kv + wl.mean_out * tpot
 
     p_ttft = _lognorm_cdf(slo.ttft_s, ttft_mean, wl.cv_in)
@@ -108,7 +117,8 @@ def build_matrix(cluster: ClusterSpec, cfg: ModelConfig,
                  compress: bool = True) -> np.ndarray:
     m, n = len(prefills), len(decodes)
     D = np.zeros((m, n))
-    cap_p = np.array([p.cost.prefill_tokens_per_s / wl.mean_in
+    cap_p = np.array([p.cost.prefill_tokens_per_s
+                      / cm.effective_prefill_tokens(wl)
                       for p in prefills])
     cap_d = np.array([d.cost.decode_tokens_per_s / wl.mean_out
                       for d in decodes])
@@ -159,7 +169,8 @@ def orchestrate(cluster: ClusterSpec, cfg: ModelConfig,
         return None
     D = build_matrix(cluster, cfg, prefills, decodes, wl, rate, slo,
                      compress=compress)
-    cap_p = np.array([p.cost.prefill_tokens_per_s / wl.mean_in
+    cap_p = np.array([p.cost.prefill_tokens_per_s
+                      / cm.effective_prefill_tokens(wl)
                       for p in prefills])
     cap_d = np.array([d.cost.decode_tokens_per_s / wl.mean_out
                       for d in decodes])

@@ -20,6 +20,10 @@ class Workload:
     mean_out: float
     cv_in: float = 0.6          # coefficient of variation (lognormal-ish)
     cv_out: float = 0.9
+    # fraction of prompt TOKENS expected to be served from the shared
+    # radix prefix cache (serving/prefix_cache.py). The cost model credits
+    # this against prefill load and the decode page budget; 0 = no sharing.
+    prefix_hit_rate: float = 0.0
 
 
 CODING = Workload("coding", mean_in=1024, mean_out=16, cv_in=0.5, cv_out=0.8)

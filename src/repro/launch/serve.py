@@ -70,6 +70,9 @@ def main():
     ap.add_argument("--no-paged", action="store_true",
                     help="dense slotted decode cache instead of the paged "
                          "int4-resident pool")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the radix prefix cache (refcounted "
+                         "copy-on-write page sharing + prefill skip)")
     ap.add_argument("--live-reschedule", action="store_true",
                     help="shift the workload mid-trace and let the "
                          "control plane apply a lightweight reschedule to "
@@ -104,7 +107,9 @@ def main():
     else:
         transport = InProcessTransport()
     paged_kw = dict(paged=not args.no_paged, page_size=args.page_size,
-                    num_pages=args.pages or None)
+                    num_pages=args.pages or None,
+                    prefix_sharing=not (args.no_paged
+                                        or args.no_prefix_sharing))
     if args.live_reschedule:
         # one phase-switchable Replica per plan replica, so the control
         # plane can re-designate the running fleet without a reload; the
@@ -222,6 +227,16 @@ def main():
         print(f"  page pool (fleet): "
               f"{st['page_pool']['alloc_failures']:.0f} admission stalls, "
               f"{st['page_pool']['in_use']:.0f} pages still in use")
+    pfx = st["prefix"]
+    if pfx["hits"] or pfx["partial_hits"] or pfx["misses"]:
+        pool = st["page_pool"] or {}
+        print(f"  prefix cache: {pfx['hits']} full hits (prefill skipped), "
+              f"{pfx['partial_hits']} partial (suffix prefill), "
+              f"{pfx['misses']} misses "
+              f"(hit rate {pfx['hit_rate']*100:.0f}%, "
+              f"{pfx['hit_tokens']} prompt tokens reused, "
+              f"{pool.get('cow_copies', 0):.0f} COW copies, "
+              f"{pool.get('prefix_evictions', 0):.0f} evictions)")
     print("  replicas:", "  ".join(
         f"{r['phase']}:{r['idx']}={r['status']}"
         + (f"({r['suspect_why']})" if r["suspect_why"] else "")

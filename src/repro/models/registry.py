@@ -31,6 +31,10 @@ class ModelApi:
     input_specs: Callable
     cache_specs: Callable
     decode_chunk: Optional[Callable] = None
+    # partial-prefix-hit path: prefill only a suffix against dequantized
+    # prefix KV (transformer.prefill_suffix). None for stacks that can't
+    # slice their state at a position boundary (recurrent, audio, SWA).
+    prefill_suffix: Optional[Callable] = None
     # factory for the paged (page-table, int4-at-rest) decode path:
     # paged_decode_fns(page_size, backend) -> (step_fn, chunk_fn) with the
     # layout knobs closed over (they must be static under jit). None when
@@ -185,6 +189,16 @@ def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
         def cache_init(batch_size, max_seq):
             return transformer.init_cache(cfg, batch_size, max_seq)
 
+    suffix_fn = None
+    if cfg.family != "audio" and paged.paged_supported(cfg):
+        def suffix_fn(params, batch, *, max_seq=None):
+            S = batch["tokens"].shape[1]
+            return transformer.prefill_suffix(
+                cfg, params, batch["tokens"], batch["prefix_kv"],
+                batch["prefix_len"], max_seq=max_seq or S, rt=rt,
+                last_pos=batch.get("last_pos"),
+                true_len=batch.get("true_len"))
+
     def input_specs(shape: ShapeSpec):
         ecfg = _effective_cfg(cfg, shape)
         return _token_specs(ecfg, shape)
@@ -209,6 +223,7 @@ def build(cfg: ModelConfig, *, rt: Optional[transformer.Runtime] = None
                     decode=decode_fn, input_specs=input_specs,
                     cache_specs=cache_specs,
                     decode_chunk=make_decode_chunk(decode_fn),
+                    prefill_suffix=suffix_fn,
                     paged_decode_fns=paged_fns)
 
 

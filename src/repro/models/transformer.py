@@ -414,6 +414,129 @@ def prefill(cfg, params, tokens, *, max_seq: int, patch_embeds=None, rt=None,
     return logits, cache
 
 
+def prefill_suffix(cfg, params, tokens, prefix_kv, prefix_len, *,
+                   max_seq: int, rt=None, last_pos=None, true_len=None):
+    """Prefill only a prompt SUFFIX against already-computed prefix KV
+    (the prefix-cache partial-hit path). Returns (logits_last, cache).
+
+    ``tokens (B, S)`` are the suffix tokens (right-padded to the bucket);
+    ``prefix_kv`` maps ``slot{s}`` -> (k, v) of shape
+    ``(n_super, B, P, Hkv, hd)`` — the shared prefix's KV, dequantized
+    from resident pages and right-padded to ``P``; ``prefix_len (B,)``
+    gives each sequence's true prefix length. Suffix queries sit at
+    absolute positions ``prefix_len + i`` (RoPE included) and attend over
+    [prefix ++ suffix] with prefix padding masked. The returned cache
+    holds ONLY the suffix KV at rows ``0..S-1`` (lengths = suffix true
+    lengths), so the bucketed wire extraction is unchanged — wire token
+    ``t`` is absolute position ``prefix_len + t``, spliced onto the
+    shared chain at a page boundary by the decode side.
+
+    Pure-attention stacks only (the same families the paged pool
+    serves); recurrent state cannot be sliced at a position boundary.
+    """
+    kinds = slot_kinds(cfg)
+    assert all(k.split("+")[0] == "attn" for k in kinds), \
+        "prefill_suffix requires a pure-attention stack"
+    assert not cfg.sliding_window, "suffix prefill assumes full attention"
+    x = _embed_inputs(cfg, params, tokens)
+    x = constrain(x, "batch", "seq", None)
+    B, S = x.shape[:2]
+    positions = prefix_len[:, None] + jnp.arange(S)[None, :]
+    n_super = cfg.num_layers // len(kinds)
+
+    def body(carry, blk_and_pkv):
+        x = carry
+        blk, pkv = blk_and_pkv
+        slots_out = {}
+        for s, kind in enumerate(kinds):
+            p = blk[f"slot{s}"]
+            pk, pv = pkv[f"slot{s}"]
+            h = norm_apply(cfg, p["norm1"], x)
+            q, k, v = layers.attn_qkv(cfg, p["attn"], h, positions)
+            K = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+            V = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+            o = _suffix_attention(cfg, q, K, V, prefix_len)
+            out = dense(p["attn"]["wo"], o.reshape(B, S, cfg.q_dim))
+            out = constrain(out, "batch", "seq", None)
+            if cfg.parallel_block and "mlp" in p:
+                x = x + out + layers.mlp_apply(cfg, p["mlp"], h)
+            else:
+                x = x + out
+                if kind.split("+")[1] != "none":
+                    delta, _ = _apply_ffn(cfg, p, kind, x, rt)
+                    x = x + delta
+            x = constrain(x, "batch", "seq", None)
+            slots_out[f"slot{s}"] = (k, v)
+        return x, slots_out
+
+    blocks = params["blocks"]
+    if cfg.scan_layers and n_super > 1:
+        x, caches = lax.scan(body, x, (blocks, prefix_kv))
+    else:
+        ys = []
+        for i in range(n_super):
+            blk_i = jax.tree.map(lambda a: a[i], blocks)
+            pkv_i = jax.tree.map(lambda a: a[i], prefix_kv)
+            x, y = body(x, (blk_i, pkv_i))
+            ys.append(y)
+        caches = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    x = norm_apply(cfg, params["final_norm"], x)
+
+    cache = init_cache(cfg, B, max_seq,
+                       jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    hkv_s = cfg.decode_cache_layout == "hkv_s"
+    for s in range(len(kinds)):
+        k_new, v_new = caches[f"slot{s}"]     # (n_super, B, S, Hkv, hd)
+        s_cache = cache[f"slot{s}"]["k"].shape[3 if hkv_s else 2]
+        upd_len = min(S, s_cache)
+        k_upd, v_upd = k_new[:, :, :upd_len], v_new[:, :, :upd_len]
+        if hkv_s:
+            k_upd = k_upd.transpose(0, 1, 3, 2, 4)
+            v_upd = v_upd.transpose(0, 1, 3, 2, 4)
+        cache[f"slot{s}"]["k"] = lax.dynamic_update_slice(
+            cache[f"slot{s}"]["k"],
+            k_upd.astype(cache[f"slot{s}"]["k"].dtype), (0, 0, 0, 0, 0))
+        cache[f"slot{s}"]["v"] = lax.dynamic_update_slice(
+            cache[f"slot{s}"]["v"],
+            v_upd.astype(cache[f"slot{s}"]["v"].dtype), (0, 0, 0, 0, 0))
+    cache["lengths"] = (jnp.full((B,), S, jnp.int32) if true_len is None
+                        else true_len.astype(jnp.int32))
+    w = unembed_matrix(cfg, params)
+    if last_pos is None:
+        h_last = x[:, -1:]
+    else:
+        h_last = x[jnp.arange(B), last_pos][:, None]
+    logits = (h_last @ w).astype(jnp.float32)
+    return logits, cache
+
+
+def _suffix_attention(cfg, q, K, V, prefix_len):
+    """Attention of suffix queries over [padded prefix ++ suffix] keys.
+
+    q: (B, S, H, hd); K/V: (B, P+S, Hkv, hd). Prefix key j is absolute
+    position j, valid iff j < prefix_len; suffix key j >= P is absolute
+    position prefix_len + (j - P), causally visible to query i iff
+    (j - P) <= i. Scores materialize — suffix buckets are small by
+    construction (that is the point of the partial hit)."""
+    B, S, H, hd = q.shape
+    Sk, Hk = K.shape[1], K.shape[2]
+    P = Sk - S
+    g = H // Hk
+    qh = q.reshape(B, S, Hk, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh, K,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    j = jnp.arange(Sk)[None, None, :]
+    i = jnp.arange(S)[None, :, None]
+    plen = prefix_len[:, None, None]
+    ok = jnp.where(j < P, j < plen, (j - P) <= i)
+    bias = jnp.where(ok, 0.0, layers.NEG_INF)
+    s = s + bias[:, None, None]
+    w = jax.nn.softmax(s, axis=-1).astype(V.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, V,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
 def _decode_attn_hkv(cfg, q, K, V, kv_len):
     """Decode attention over a (B, Hkv, S, hd) cache — contraction dim
     innermost on both operands, so no transposed KV copy materializes

@@ -28,6 +28,7 @@ from repro.models import registry
 from repro.serving import kv_transfer, page_pool
 from repro.serving.kv_transfer import KVWire
 from repro.serving.page_pool import PagePool, pages_needed
+from repro.serving.prefix_cache import PrefixCache, PrefixMatch
 
 
 @dataclass
@@ -45,6 +46,13 @@ class GenRequest:
     t_submit: float = 0.0
     t_first: float = -1.0
     t_done: float = -1.0
+    # prefix-cache partial hit: positions [0, start_pos) are already
+    # resident on the target decode replica (``prefix_pages``); prefill
+    # covers only the suffix, attending over ``prefix_wire``'s KV
+    start_pos: int = 0
+    prefix_pages: Optional[List[int]] = None
+    prefix_wire: Optional[KVWire] = None
+    prefix_replica: int = -1
 
 
 def _next_pow2(n: int) -> int:
@@ -86,6 +94,16 @@ class PrefillEngine:
                          and not cfg.sliding_window
                          and cfg.family != "vlm")
         self._jits: Dict[Tuple[int, int], Callable] = {}
+        # suffix prefill (prefix-cache partial hits): keyed by
+        # (batch, suffix_bucket, prefix_bucket) so the jit cache stays
+        # log2-bounded in both lengths
+        self._suffix_jits: Dict[Tuple[int, int, int], Callable] = {}
+
+    @property
+    def supports_suffix(self) -> bool:
+        """True when this engine can prefill a suffix against resident
+        prefix KV (pure-attention stack, bucketed padding)."""
+        return self.bucketed and self.api.prefill_suffix is not None
 
     def _prefill_fn(self, batch_shape: Tuple[int, int]) -> Callable:
         if batch_shape not in self._jits:
@@ -93,22 +111,49 @@ class PrefillEngine:
                 lambda p, b: self.api.prefill(p, b, max_seq=self.max_seq))
         return self._jits[batch_shape]
 
+    def _suffix_fn(self, key: Tuple[int, int, int]) -> Callable:
+        if key not in self._suffix_jits:
+            self._suffix_jits[key] = jax.jit(
+                lambda p, b: self.api.prefill_suffix(
+                    p, b, max_seq=self.max_seq))
+        return self._suffix_jits[key]
+
     @property
     def jit_cache_size(self) -> int:
-        return len(self._jits)
+        return len(self._jits) + len(self._suffix_jits)
 
     def _bucket_of(self, n: int) -> int:
         return min(max(_next_pow2(n), self.min_bucket), self.max_seq)
 
     def run(self, reqs: List[GenRequest], *, compress: bool = True,
             backend: str = "auto") -> List[Tuple[GenRequest, KVWire, int]]:
-        """Prefill a batch; returns per-request (req, wire, first_token)."""
+        """Prefill a batch; returns per-request (req, wire, first_token).
+        Requests carrying a resident prefix (``start_pos``/``prefix_wire``
+        from a prefix-cache partial hit) take the suffix path: only
+        ``tokens[start_pos:]`` run through the model, attending over the
+        dequantized prefix KV; the returned wire covers the suffix."""
         if not reqs:
             return []
-        if self.bucketed:
-            return self._run_bucketed(reqs, compress=compress,
-                                      backend=backend)
-        return self._run_exact(reqs, compress=compress, backend=backend)
+        suffix = [r for r in reqs
+                  if r.start_pos > 0 and r.prefix_wire is not None]
+        sids = {id(r) for r in suffix}
+        normal = [r for r in reqs if id(r) not in sids]
+        out = []
+        if suffix:
+            if not self.supports_suffix:
+                raise ValueError(
+                    "suffix prefill requested but this engine cannot "
+                    "slice its state at a position boundary")
+            out.extend(self._run_suffix(suffix, compress=compress,
+                                        backend=backend))
+        if normal:
+            if self.bucketed:
+                out.extend(self._run_bucketed(normal, compress=compress,
+                                              backend=backend))
+            else:
+                out.extend(self._run_exact(normal, compress=compress,
+                                           backend=backend))
+        return out
 
     def _run_exact(self, reqs, *, compress, backend):
         """Group by exact prompt length (no padding ever enters attention);
@@ -179,6 +224,58 @@ class PrefillEngine:
             compress=compress, backend=backend, pad_to=Lb)
         return [(r, wires[i], int(first[i])) for i, r in enumerate(group)]
 
+    def _run_suffix(self, reqs, *, compress, backend):
+        """Partial-hit path: group by (suffix bucket, prefix bucket) and
+        prefill only the suffix of each prompt against its dequantized
+        prefix KV. Prefix lengths are page-aligned by construction."""
+        too_long = [r.rid for r in reqs if len(r.tokens) > self.max_seq]
+        if too_long:
+            raise ValueError(
+                f"prompt(s) exceed max_seq={self.max_seq}: rids {too_long}")
+        by_key: Dict[Tuple[int, int], List[GenRequest]] = {}
+        for r in reqs:
+            Lb = self._bucket_of(len(r.tokens) - r.start_pos)
+            Pb = self._bucket_of(r.start_pos)
+            by_key.setdefault((Lb, Pb), []).append(r)
+        out = []
+        for (Lb, Pb), group in by_key.items():
+            for lo in range(0, len(group), self.max_batch):
+                out.extend(self._run_one_suffix_bucket(
+                    group[lo:lo + self.max_batch], Lb, Pb,
+                    compress=compress, backend=backend))
+        return out
+
+    def _run_one_suffix_bucket(self, group, Lb, Pb, *, compress, backend):
+        B = min(_next_pow2(len(group)), self.max_batch)
+        slens = [min(len(r.tokens) - r.start_pos, Lb) for r in group]
+        toks = np.zeros((B, Lb), np.int32)
+        for i, r in enumerate(group):
+            toks[i, :slens[i]] = np.asarray(r.tokens)[r.start_pos:][:slens[i]]
+        last_pos = np.zeros((B,), np.int32)
+        last_pos[:len(group)] = np.asarray(slens) - 1
+        true_len = np.ones((B,), np.int32)
+        true_len[:len(group)] = slens
+        prefix_kv, plen = kv_transfer.dequantize_prefix_batch(
+            [r.prefix_wire for r in group], Pb, backend=backend)
+        if B > len(group):
+            # dummy batch rows: zero-length prefix, masked out entirely
+            pad = B - len(group)
+            prefix_kv = jax.tree.map(
+                lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) *
+                                  (a.ndim - 2)), prefix_kv)
+            plen = jnp.pad(plen, (0, pad))
+        batch = {"tokens": jnp.asarray(toks),
+                 "last_pos": jnp.asarray(last_pos),
+                 "true_len": jnp.asarray(true_len),
+                 "prefix_kv": prefix_kv,
+                 "prefix_len": plen}
+        logits, cache = self._suffix_fn((B, Lb, Pb))(self.params, batch)
+        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        wires = kv_transfer.extract_batch(
+            cache, [(i, slens[i]) for i in range(len(group))],
+            compress=compress, backend=backend, pad_to=Lb)
+        return [(r, wires[i], int(first[i])) for i, r in enumerate(group)]
+
 
 class DecodeEngine:
     """Throughput-oriented: continuous batching over a slotted cache.
@@ -206,7 +303,8 @@ class DecodeEngine:
                  chunk_size: int = 8, paged: bool = False,
                  page_size: int = paged_fmt.DEFAULT_PAGE_SIZE,
                  num_pages: Optional[int] = None,
-                 kv_resident: str = "int4", paged_backend: str = "auto"):
+                 kv_resident: str = "int4", paged_backend: str = "auto",
+                 prefix_sharing: bool = False):
         self.cfg = cfg
         self.params = params
         self.api = registry.build(cfg, rt=rt)
@@ -246,6 +344,13 @@ class DecodeEngine:
             self._need_n = 0
             self.zero_copy_inserts = 0
             self.reencoded_inserts = 0
+            # prefix sharing: finished chains are donated to a radix index
+            # and later requests decode straight off the shared pages
+            self.prefix_cache = (PrefixCache(page_size) if prefix_sharing
+                                 else None)
+            self._pins: Dict[object, List[int]] = {}
+            self.cow_copies = 0
+            self.prefix_admits = 0
         else:
             init_fn = (registry.whisper.init_cache if cfg.family == "audio"
                        else registry.transformer.init_cache)
@@ -273,8 +378,26 @@ class DecodeEngine:
             return free
         est = (self._need_sum / self._need_n) if self._need_n \
             else float(self.table_w)
-        cap = int(self.pool.n_free / max(est, 1.0))
+        # pages held ONLY by the prefix index are reclaimable on demand
+        # (evicted inside _alloc_pages), so they count as capacity — this
+        # is how the hit rate turns into extra concurrent-decode headroom
+        reclaimable = 0
+        if self.prefix_cache is not None:
+            reclaimable = sum(1 for p in self.prefix_cache.page_set()
+                              if self.pool.refcount(p) == 1)
+        cap = int((self.pool.n_free + reclaimable) / max(est, 1.0))
         return free[:max(cap, 0)]
+
+    def _alloc_pages(self, n: int, owner) -> Optional[List[int]]:
+        """Pool alloc with eviction-retry: on failure, evict unshared
+        prefix-cache entries (LRU) to cover the shortfall, then retry."""
+        if n == 0:
+            return []
+        pages = self.pool.alloc(n, owner)
+        if pages is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(self.pool, n - self.pool.n_free)
+            pages = self.pool.alloc(n, owner)
+        return pages
 
     def admit(self, req: GenRequest, wire: KVWire, first_token: int,
               *, backend: str = "auto") -> bool:
@@ -320,28 +443,152 @@ class DecodeEngine:
         for req, wire, first in items:
             if not free:
                 break
+            # partial prefix hit: the wire covers only the suffix; the
+            # shared prefix chain is already resident — share it under
+            # this slot and splice suffix pages after it
+            prefix = (list(req.prefix_pages)
+                      if (not migrated and req.prefix_pages) else [])
             budget = min(len(req.tokens) + req.max_new_tokens, self.max_seq)
-            need = min(pages_needed(budget, self.page_size), self.table_w)
-            pages = self.pool.alloc(need, free[0])
+            need = min(pages_needed(budget, self.page_size), self.table_w) \
+                - len(prefix)
+            need = max(need, pages_needed(wire.request_len, self.page_size))
+            if len(prefix) + need > self.table_w:
+                break                   # chain cannot fit the table row
+            pages = self._alloc_pages(need, free[0])
             if pages is None:           # page budget exhausted: stop (FIFO)
                 break
+            if prefix:
+                try:
+                    self.pool.share(prefix, free[0])
+                except ValueError:
+                    # prefix chain vanished (pin lost); surface as reject
+                    self.pool.free(pages, owner=free[0])
+                    break
             slot = free.pop(0)
-            placed.append((req, wire, first, slot, pages))
+            placed.append((req, wire, first, slot, pages, prefix))
         if placed:
             self.cache, nz, nr = page_pool.insert_wires(
                 self.cache, self.cfg,
-                [(w, s, p) for (_, w, _, s, p) in placed], backend=backend)
+                [(w, s, p, pre) for (_, w, _, s, p, pre) in placed],
+                backend=backend)
             self.zero_copy_inserts += nz
             self.reencoded_inserts += nr
-            for req, _, first, slot, pages in placed:
+            for req, _, first, slot, pages, prefix in placed:
                 self.slots[slot] = req
-                self._slot_pages[slot] = pages
+                self._slot_pages[slot] = prefix + pages
                 self.cur_token[slot] = first
                 if not migrated:
                     req.out_tokens.append(first)
+                # only freshly ALLOCATED pages count toward the per-request
+                # page-need estimate: shared prefixes cost no free pages,
+                # which is exactly the capacity gain free_slots() credits
                 self._need_sum += len(pages)
                 self._need_n += 1
         return list(items[len(placed):])
+
+    # -- prefix sharing -----------------------------------------------------
+
+    def prefix_match(self, tokens) -> Optional[PrefixMatch]:
+        """Probe the radix index with a prompt (gateway dispatch)."""
+        if not self.paged or self.prefix_cache is None:
+            return None
+        return self.prefix_cache.match([int(t) for t in tokens])
+
+    def prefix_pin(self, pages: List[int], tag) -> bool:
+        """Take a reference on matched pages under an in-flight tag so
+        neither eviction nor a donor release can recycle them between
+        match and admission. Idempotence is the caller's problem."""
+        try:
+            self.pool.share(pages, tag)
+        except ValueError:
+            return False
+        self._pins[tag] = list(pages)
+        return True
+
+    def prefix_unpin(self, tag):
+        pages = self._pins.pop(tag, None)
+        if pages:
+            self.pool.unshare(pages, tag)
+
+    def extract_prefix(self, pages: List[int], length: int) -> KVWire:
+        """Gather a (pinned) prefix chain into a wire for the suffix
+        prefill — a pure page gather, no dequantization here."""
+        return page_pool.extract_slot_wire(self.cache, self.cfg, length,
+                                           pages)
+
+    def admit_prefix(self, req: GenRequest, pages: List[int],
+                     next_token: int) -> bool:
+        """Admit a FULL prefix hit: every prompt token's KV is already
+        resident in ``pages`` and ``next_token`` is the known first
+        output, so prefill is skipped entirely — zero transfer, zero
+        dequant. The slot shares the chain; if decode's next append lands
+        in a shared page (prompt ends mid-page), that single page is
+        copy-on-write duplicated first."""
+        if not self.paged:
+            return False
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return False
+        slot = free[0]
+        ln = len(req.tokens)
+        budget = min(ln + req.max_new_tokens, self.max_seq)
+        need_total = min(pages_needed(budget, self.page_size), self.table_w)
+        n_extra = max(need_total - len(pages), 0)
+        cow_at = min(ln // self.page_size, self.table_w - 1)
+        cow = cow_at < len(pages)       # next append hits a shared page
+        alloced = self._alloc_pages(n_extra + int(cow), slot)
+        if alloced is None:
+            return False
+        try:
+            self.pool.share(pages, slot)
+        except ValueError:
+            if alloced:
+                self.pool.free(alloced, owner=slot)
+            return False
+        chain = list(pages) + (alloced[:n_extra] if cow else alloced)
+        if cow:
+            repl = alloced[-1]
+            self.cache = page_pool.copy_page(self.cache, chain[cow_at],
+                                             repl)
+            self.pool.unshare([chain[cow_at]], slot)
+            chain[cow_at] = repl
+            self.cow_copies += 1
+        self.cache = page_pool.set_page_chain(self.cache, slot, chain, ln)
+        self.slots[slot] = req
+        self._slot_pages[slot] = chain
+        self.cur_token[slot] = next_token
+        req.out_tokens.append(next_token)
+        self._need_sum += len(alloced)
+        self._need_n += 1
+        self.prefix_admits += 1
+        return True
+
+    def _retire_slot(self, slot: int, req: GenRequest, kv_len: int):
+        """Release a finished slot's pages, first donating the chain to
+        the prefix index — donated pages live on under the index's owner
+        tag; the rest return to the free list."""
+        if (self.prefix_cache is not None and req is not None
+                and kv_len > 0):
+            chain = self._slot_pages.get(slot, [])
+            n_used = pages_needed(kv_len, self.page_size)
+            if chain and n_used <= len(chain):
+                toks = [int(t) for t in req.tokens] + \
+                    [int(t) for t in req.out_tokens]
+                self.prefix_cache.insert(toks, kv_len, chain[:n_used],
+                                         len(req.tokens), self.pool)
+        self._free_pages_of(slot)
+
+    def clear_prefix(self) -> int:
+        """Drop the radix index AND any in-flight pins (drain / phase
+        flip): releases every cache-held page reference so a drained pool
+        really is all-free. Gateway-side pin records become stale no-ops."""
+        if not self.paged:
+            return 0
+        for tag in list(self._pins):
+            self.prefix_unpin(tag)
+        if self.prefix_cache is None:
+            return 0
+        return self.prefix_cache.clear(self.pool)
 
     # -- live migration (preemption drains) ---------------------------------
 
@@ -455,8 +702,9 @@ class DecodeEngine:
             self.params, self.cache, self._host_state(),
             n_steps=n, eos_id=self.eos_id, max_seq=self.max_seq)
         # the single device->host hop for this chunk
-        toks, valid, cur, still_active = jax.device_get(
-            (toks_d, valid_d, st["cur"], st["active"]))
+        toks, valid, cur, still_active, lengths = jax.device_get(
+            (toks_d, valid_d, st["cur"], st["active"],
+             self.cache["lengths"]))
         self.host_syncs += 1
         self.steps_run += n
         self.cur_token = np.array(cur)   # writable copy (admit mutates it)
@@ -477,10 +725,11 @@ class DecodeEngine:
             self.cache["lengths"] = \
                 self.cache["lengths"].at[jnp.asarray(freed)].set(0)
             if self.paged:
-                # pages go back to the pool the moment the request
-                # finishes; the table row points back at the trash page
-                for i in freed:
-                    self._free_pages_of(i)
+                # finished chains are donated to the prefix index before
+                # the slot's references go back to the pool; the table
+                # row points back at the trash page
+                for req, i in zip(finished, freed):
+                    self._retire_slot(i, req, int(lengths[i]))
                 self.cache["page_table"] = \
                     self.cache["page_table"].at[jnp.asarray(freed)].set(0)
         return finished
@@ -508,10 +757,11 @@ class DecodeEngine:
             if done:
                 finished.append(req)
                 self.slots[i] = None
+                kv_len = int(self.cache["lengths"][i])
                 self.cache["lengths"] = \
                     self.cache["lengths"].at[i].set(0)
                 if self.paged:
-                    self._free_pages_of(i)
+                    self._retire_slot(i, req, kv_len)
                     self.cache["page_table"] = \
                         self.cache["page_table"].at[i].set(0)
         return finished
@@ -534,12 +784,22 @@ class DecodeEngine:
         st["internal_frag"] = (1.0 - used / reserved) if reserved else 0.0
         st["zero_copy_inserts"] = self.zero_copy_inserts
         st["reencoded_inserts"] = self.reencoded_inserts
-        # pages the pool holds for slots that no longer reference them —
-        # should be 0 always; a release path that skipped pool.free shows
-        # up here (and trips the REPRO_SANITIZE drain audit)
+        # pages the pool holds that nothing references — should be 0
+        # always; a release path that skipped pool.free shows up here
+        # (and trips the REPRO_SANITIZE drain audit). The prefix index
+        # and in-flight pins are legitimate holders.
         referenced = {p for ps in self._slot_pages.values() for p in ps}
-        st["leaked_pages"] = sum(1 for p in self.pool._owner
+        if self.prefix_cache is not None:
+            referenced |= self.prefix_cache.page_set()
+        for pinned in self._pins.values():
+            referenced.update(pinned)
+        st["leaked_pages"] = sum(1 for p in self.pool.pages_in_use()
                                  if p not in referenced)
+        st["cow_copies"] = self.cow_copies
+        st["prefix_admits"] = self.prefix_admits
+        if self.prefix_cache is not None:
+            for k, v in self.prefix_cache.stats().items():
+                st[f"prefix_{k}"] = v
         return st
 
 
@@ -611,6 +871,10 @@ class Replica:
                 f"cannot flip an undrained {self.phase} replica "
                 f"({self.engine.active} request(s) resident): drain or "
                 f"requeue them first")
+        if self.phase == "decode" and hasattr(self.engine, "clear_prefix"):
+            # shared prefixes don't survive a role change: release the
+            # index's page references so the pool is left all-free
+            self.engine.clear_prefix()
         self._activate(target)
         self.switches += 1
         return self.engine

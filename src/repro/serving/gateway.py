@@ -4,11 +4,13 @@ The public surface of the serving stack: ``Gateway.submit(ServeRequest)``
 returns a :class:`RequestHandle` carrying an explicit request lifecycle
 
     QUEUED -> PREFILLING -> TRANSFERRING -> DECODING -> DONE
-                  |              |            |    ^
-                  |              |            |    | (KV page migration,
-                  |              |            v    |  preemption drain)
-                  +--------------+---> QUEUED + TRANSFERRING
-                       (replica failure / retry exhaustion)
+       |          |              |            |    ^
+       |          |              |            |    | (KV page migration,
+       |          |              |            v    |  preemption drain)
+       |          +--------------+---> QUEUED + TRANSFERRING
+       |               (replica failure / retry exhaustion)
+       +---> TRANSFERRING   (full prefix-cache hit: prefill skipped, the
+                             "wire" is a page handle on the target replica)
     any non-terminal -> CANCELLED / REJECTED / FAILED
 
 with streaming token delivery (callback and iterator), ``cancel()``,
@@ -73,7 +75,11 @@ FAILED = "FAILED"
 TERMINAL_STATES = frozenset({DONE, CANCELLED, REJECTED, FAILED})
 
 _TRANSITIONS: Dict[str, frozenset] = {
-    QUEUED: frozenset({PREFILLING, CANCELLED, REJECTED, FAILED}),
+    # QUEUED -> TRANSFERRING: full prefix-cache hit — every prompt
+    # token's KV is already resident on a decode replica, so prefill is
+    # skipped and the "transfer" is a page handle (DESIGN.md §10)
+    QUEUED: frozenset({PREFILLING, TRANSFERRING, CANCELLED, REJECTED,
+                       FAILED}),
     # PREFILLING -> QUEUED: the prefill replica crashed mid-batch
     PREFILLING: frozenset({TRANSFERRING, QUEUED, CANCELLED, FAILED}),
     TRANSFERRING: frozenset({DECODING, QUEUED, CANCELLED, FAILED}),
@@ -285,6 +291,13 @@ class DecodeClient(Protocol):
         aggregates — NOT an engine attribute reach-through (rule R003)."""
         ...
 
+    # Prefix-cache seam (optional — the gateway getattr-guards every
+    # call, so clients without sharing simply never match):
+    #   prefix_match(tokens) -> Optional[PrefixMatch]
+    #   prefix_pin(pages, tag) -> bool / prefix_unpin(tag)
+    #   extract_prefix(pages, length) -> KVWire
+    #   admit_prefix(req, pages, next_token) -> bool
+
 
 class LocalPrefillClient:
     """In-process realization around a :class:`PrefillEngine`."""
@@ -296,6 +309,9 @@ class LocalPrefillClient:
 
     def prefill(self, reqs, *, compress, backend):
         return self.engine.run(reqs, compress=compress, backend=backend)
+
+    def supports_suffix(self) -> bool:
+        return self.engine.supports_suffix
 
     def jit_cache_size(self) -> int:
         return self.engine.jit_cache_size
@@ -343,6 +359,21 @@ class LocalDecodeClient:
         ps = getattr(self.engine, "page_stats", None)
         return ps() if callable(ps) else None
 
+    def prefix_match(self, tokens):
+        return self.engine.prefix_match(tokens)
+
+    def prefix_pin(self, pages, tag) -> bool:
+        return self.engine.prefix_pin(pages, tag)
+
+    def prefix_unpin(self, tag):
+        self.engine.prefix_unpin(tag)
+
+    def extract_prefix(self, pages, length):
+        return self.engine.extract_prefix(pages, length)
+
+    def admit_prefix(self, req, pages, next_token) -> bool:
+        return self.engine.admit_prefix(req, pages, next_token)
+
     def jit_cache_size(self) -> int:
         return self.engine.jit_cache_size
 
@@ -387,6 +418,10 @@ class LocalReplicaClient:
         return self._require("prefill").run(reqs, compress=compress,
                                             backend=backend)
 
+    def supports_suffix(self) -> bool:
+        return (self.replica.phase == "prefill"
+                and self.replica.engine.supports_suffix)
+
     # -- DecodeClient --------------------------------------------------------
 
     def admit(self, items, *, backend):
@@ -423,6 +458,21 @@ class LocalReplicaClient:
     def page_stats(self):
         ps = getattr(self._require("decode"), "page_stats", None)
         return ps() if callable(ps) else None
+
+    def prefix_match(self, tokens):
+        return self._require("decode").prefix_match(tokens)
+
+    def prefix_pin(self, pages, tag) -> bool:
+        return self._require("decode").prefix_pin(pages, tag)
+
+    def prefix_unpin(self, tag):
+        self._require("decode").prefix_unpin(tag)
+
+    def extract_prefix(self, pages, length):
+        return self._require("decode").extract_prefix(pages, length)
+
+    def admit_prefix(self, req, pages, next_token) -> bool:
+        return self._require("decode").admit_prefix(req, pages, next_token)
 
     def jit_cache_size(self) -> int:
         return self.replica.engine.jit_cache_size
@@ -514,10 +564,21 @@ class ReplicaHandle:
 @dataclass
 class _Transfer:
     handle: RequestHandle
-    ticket: TransferTicket
+    ticket: Optional[TransferTicket]   # None: nothing moves (full prefix hit)
     first: int               # first token (normal) / resume token (migrated)
     target: int
     migrated: bool = False   # mid-stream KV migration, not a fresh prefill
+    # full prefix-cache hit: the "wire" is a handle onto pages already
+    # resident on ``target`` — admission shares the chain, zero transfer
+    prefix_full: bool = False
+    prefix_pages: Optional[List[int]] = None
+
+    @property
+    def replica_bound(self) -> bool:
+        """True when this transfer only makes sense on its target replica
+        (page handles / suffix wires splicing onto pinned pages) — it is
+        never rerouted, only requeued through prefill."""
+        return self.prefix_full or self.handle.req.start_pos > 0
 
 
 @dataclass
@@ -605,6 +666,12 @@ class Gateway:
         self.n_migrated_tokens = 0
         self.n_failed = 0
         self.n_preemptions = 0
+        # prefix cache (DESIGN.md §10): submit-time radix matches
+        self.n_prefix_hits = 0          # full: prefill skipped entirely
+        self.n_prefix_partial = 0       # suffix-only prefill
+        self.n_prefix_miss = 0
+        self.n_prefix_tokens_hit = 0    # prompt tokens whose KV was reused
+        self._pins: Dict[int, Tuple[ReplicaHandle, object]] = {}  # rid ->
         # runtime sanitizers (REPRO_SANITIZE=1): lazy import keeps the
         # analysis package out of the hot path when disabled
         self.sanitizer = None
@@ -680,8 +747,102 @@ class Gateway:
         gen.t_submit = h.t_submit
         self.profiler.record_arrival(h.t_submit)
         self._by_req[id(gen)] = h
+        # radix-match the prompt against resident prefixes BEFORE
+        # dispatch: a full hit skips prefill entirely (QUEUED ->
+        # TRANSFERRING with a page handle); a partial hit annotates the
+        # request so prefill covers only the suffix
+        if self._try_prefix(h):
+            return h
         self.queue.append(h)
         return h
+
+    # -- prefix cache (DESIGN.md §10) ----------------------------------------
+
+    def _try_prefix(self, h: RequestHandle) -> bool:
+        """Match ``h``'s prompt against every dispatchable decode
+        replica's radix index. Returns True when the request was placed
+        on the transfer queue as a FULL hit (caller must not queue it);
+        a partial hit pins the prefix chain and annotates the request,
+        which still goes through (suffix) prefill."""
+        gen = h.req
+        if len(gen.tokens) == 0:
+            return False
+        best: Optional[Tuple[object, int]] = None
+        for j, d in enumerate(self.dec):
+            if not d.dispatchable:
+                continue
+            pm = getattr(d.client, "prefix_match", None)
+            if not callable(pm):
+                continue
+            m = pm(gen.tokens)
+            if m is None:
+                continue
+            if best is None or (m.full, m.length) > (best[0].full,
+                                                     best[0].length):
+                best = (m, j)
+        plen = len(gen.tokens)
+        if best is None:
+            self.n_prefix_miss += 1
+            self.profiler.record_prefix(plen, 0)
+            return False
+        m, j = best
+        d = self.dec[j]
+        tag = ("prefix-pin", gen.rid)
+        if not m.full:
+            # partial hits need a prefill replica that can run a suffix
+            if not any(p.dispatchable and self._suffix_ok(p)
+                       for p in self.pre):
+                self.n_prefix_miss += 1
+                self.profiler.record_prefix(plen, 0)
+                return False
+        if not d.client.prefix_pin(m.pages, tag):
+            self.n_prefix_miss += 1
+            self.profiler.record_prefix(plen, 0)
+            return False
+        self._pins[gen.rid] = (d, tag)
+        self.n_prefix_tokens_hit += m.length
+        self.profiler.record_prefix(plen, m.length)
+        if m.full:
+            self.n_prefix_hits += 1
+            h._transition(TRANSFERRING, self.clock())
+            self.transfer_queue.append(_Transfer(
+                h, None, int(m.next_token), j, prefix_full=True,
+                prefix_pages=list(m.pages)))
+            self.events.append(
+                f"request {gen.rid}: full prefix hit ({m.length} tokens "
+                f"resident on decode:{j}); prefill skipped")
+            return True
+        self.n_prefix_partial += 1
+        gen.start_pos = m.length
+        gen.prefix_pages = list(m.pages)
+        gen.prefix_replica = j
+        gen.prefix_wire = d.client.extract_prefix(m.pages, m.length)
+        self.events.append(
+            f"request {gen.rid}: partial prefix hit ({m.length}/{plen} "
+            f"tokens resident on decode:{j}); suffix prefill only")
+        return False
+
+    @staticmethod
+    def _suffix_ok(p: ReplicaHandle) -> bool:
+        sup = getattr(p.client, "supports_suffix", None)
+        return bool(sup()) if callable(sup) else False
+
+    def _release_prefix(self, h: RequestHandle):
+        """Drop ``h``'s pin (if any) and clear its prefix annotations so
+        a requeued attempt goes through a normal full prefill."""
+        rec = self._pins.pop(h.request.rid, None)
+        if rec is not None:
+            d, tag = rec
+            if d.status != "dead":
+                try:
+                    d.client.prefix_unpin(tag)
+                except Exception:
+                    pass    # replica flipped/died mid-release: engine-side
+                            # clear_prefix dropped the pin already
+        h.req.start_pos = 0
+        h.req.prefix_pages = None
+        h.req.prefix_wire = None
+        h.req.prefix_replica = -1
 
     def cancel(self, h: RequestHandle) -> bool:
         """Abort a request in any non-terminal state; a mid-decode cancel
@@ -699,6 +860,7 @@ class Gateway:
             for d in self.dec:
                 if d.client.release(h.req):
                     break
+        self._release_prefix(h)
         h._transition(CANCELLED, now, reason="cancelled by client")
         self._finish(h)
         self.events.append(f"request {h.request.rid} cancelled "
@@ -785,7 +947,17 @@ class Gateway:
 
     def _dispatch_prefill(self, i: int, batch: List[RequestHandle]):
         t0 = self.clock()
+        suffix_ok = self._suffix_ok(self.pre[i])
         for h in batch:
+            if h.req.start_pos > 0:
+                # partial-hit annotation is only honored when this prefill
+                # replica can run a suffix AND the pinned decode replica
+                # is still taking work — otherwise fall back to a full
+                # prefill before any suffix wire exists
+                j = h.req.prefix_replica
+                if (not suffix_ok or not (0 <= j < len(self.dec))
+                        or not self.dec[j].dispatchable):
+                    self._release_prefix(h)
             h._transition(PREFILLING, t0)
         try:
             results = self.pre[i].client.prefill(
@@ -812,8 +984,19 @@ class Gateway:
         transport fault schedules a retry instead of losing the request;
         with no alive decode replica the target is a placeholder and
         ``_drain_transfers`` holds the wire + events."""
-        Y = self._Y(src)
-        j = (int(self.rng.choice(len(self.dec), p=Y)) if Y.sum() > 0 else 0)
+        if h.req.start_pos > 0:
+            # suffix wire: only the replica holding the pinned prefix
+            # chain can splice it — no TSTP routing choice to make
+            j = h.req.prefix_replica
+            if not (0 <= j < len(self.dec)) \
+                    or not self.dec[j].dispatchable:
+                self._requeue_handle(h, now, "(pinned prefix replica "
+                                             "lost mid-transfer)")
+                return
+        else:
+            Y = self._Y(src)
+            j = (int(self.rng.choice(len(self.dec), p=Y))
+                 if Y.sum() > 0 else 0)
         try:
             ticket = self.transport.send(wire, src, j, now=now)
         except TransientTransportError as e:
@@ -852,9 +1035,10 @@ class Gateway:
         if not self.transfer_queue:
             return
         now = self.clock()
-        arrived = [t for t in self.transfer_queue if t.ticket.ready(now)]
+        arrived = [t for t in self.transfer_queue
+                   if t.ticket is None or t.ticket.ready(now)]
         in_flight = [t for t in self.transfer_queue
-                     if not t.ticket.ready(now)]
+                     if not (t.ticket is None or t.ticket.ready(now))]
         if not arrived:
             return
         usable = [j for j, d in enumerate(self.dec) if d.dispatchable]
@@ -872,13 +1056,24 @@ class Gateway:
         for t in arrived:
             j = t.target
             if not self.dec[j].dispatchable:
+                if t.replica_bound:
+                    # the pinned pages died with the replica: page handles
+                    # and suffix wires cannot reroute — back through a
+                    # full prefill (pin dropped, annotations cleared)
+                    self._requeue_handle(
+                        t.handle, now,
+                        f"(prefix replica decode:{j} lost)")
+                    continue
                 # reroute to the healthy replica with the most free slots
                 j = max(usable, key=lambda jj: self.dec[jj].client.n_free())
             by_target.setdefault(j, []).append(t)
         still = in_flight
         for j, items in by_target.items():
             mig = [t for t in items if t.migrated]
-            norm = [t for t in items if not t.migrated]
+            pfx = [t for t in items if t.prefix_full]
+            norm = [t for t in items if not t.migrated and not t.prefix_full]
+            if pfx:
+                still.extend(self._admit_prefix_hits(j, pfx))
             n_free = self.dec[j].client.n_free()
             take, rest = norm[:n_free], norm[n_free:]
             if take:
@@ -898,6 +1093,10 @@ class Gateway:
                         continue
                     t.handle._transition(DECODING, t_adm)
                     self._sync_tokens(t.handle, t_adm)
+                    if t.handle.req.start_pos > 0:
+                        # suffix wire spliced: the slot now holds its own
+                        # references on the prefix chain — drop the pin
+                        self._release_prefix(t.handle)
             if mig:
                 # migrated wires resume mid-stream: admit_migrated does
                 # its own capacity check and never re-appends the resume
@@ -920,6 +1119,37 @@ class Gateway:
                     t.handle._transition(DECODING, t_adm)
             still.extend(rest)
         self.transfer_queue = still
+
+    def _admit_prefix_hits(self, j: int, items: List[_Transfer]
+                           ) -> List[_Transfer]:
+        """Admit full prefix hits on their pinned replica: the chain is
+        shared into a fresh slot (copy-on-write if the prompt ends
+        mid-page) and decode resumes from the known next token — no wire,
+        no dequant, TTFT is pure queueing. Returns transfers to keep
+        queued (no slot/page headroom yet)."""
+        rest: List[_Transfer] = []
+        ap = getattr(self.dec[j].client, "admit_prefix", None)
+        for k, t in enumerate(items):
+            if not callable(ap):
+                self._requeue_handle(t.handle, self.clock(),
+                                     "(replica lost prefix support)")
+                continue
+            try:
+                ok = ap(t.handle.req, t.prefix_pages, t.first)
+            except ReplicaCrashError as e:
+                self._confirm_dead(self.dec[j], str(e))
+                # the dead-target bound-transfer path requeues these on
+                # the next pump
+                rest.extend(items[k:])
+                break
+            if ok:
+                t_adm = self.clock()
+                t.handle._transition(DECODING, t_adm)
+                self._sync_tokens(t.handle, t_adm)
+                self._release_prefix(t.handle)
+            else:
+                rest.append(t)
+        return rest
 
     def _step_decodes(self) -> int:
         n_done = 0
@@ -951,6 +1181,7 @@ class Gateway:
         """Terminal bookkeeping: the GenRequest leaves the routing tables
         so a long-running service doesn't grow without bound (the handle
         itself stays in ``done`` until ``clear_finished``)."""
+        self._release_prefix(h)        # no-op unless a pin is still held
         self._by_req.pop(id(h.req), None)
         self.done.append(h)
         if self.sanitizer is not None:
@@ -1137,6 +1368,9 @@ class Gateway:
         with FAILED once ``max_restarts`` attempts are burned."""
         if hd.is_terminal:
             return
+        # a restarted attempt conditions on nothing: pins released, prefix
+        # annotations cleared (it may re-match at the fresh prefill's cost)
+        self._release_prefix(hd)
         if hd.restarts >= self.max_restarts:
             hd._transition(FAILED, now,
                            reason=f"gave up after {hd.restarts} restart(s): "
@@ -1319,9 +1553,23 @@ class Gateway:
                 pool = {k: 0.0 for k in
                         ("pages", "in_use", "free", "peak_in_use", "allocs",
                          "frees", "alloc_failures", "leaked_pages",
-                         "zero_copy_inserts", "reencoded_inserts")}
+                         "zero_copy_inserts", "reencoded_inserts",
+                         "shares", "unshares", "shared_pages", "cow_copies",
+                         "prefix_admits", "prefix_entries", "prefix_pages",
+                         "prefix_evictions", "prefix_donations")}
             for k in pool:
                 pool[k] += st.get(k, 0)
+        probes = self.n_prefix_hits + self.n_prefix_partial \
+            + self.n_prefix_miss
+        prefix = {
+            "hits": self.n_prefix_hits,
+            "partial_hits": self.n_prefix_partial,
+            "misses": self.n_prefix_miss,
+            "hit_rate": ((self.n_prefix_hits + self.n_prefix_partial)
+                         / probes if probes else 0.0),
+            "hit_tokens": self.n_prefix_tokens_hit,
+            "pins_held": len(self._pins),
+        }
         out = {
             "epoch": self.epoch,
             "queued": len(self.queue),
@@ -1334,6 +1582,7 @@ class Gateway:
                          "preemptions": self.n_preemptions,
                          "failed": self.n_failed},
             "page_pool": pool,
+            "prefix": prefix,
             "replicas": [{"phase": h.phase, "idx": h.idx,
                           "status": h.status,
                           "suspect_why": h.suspect_why,
@@ -1469,16 +1718,41 @@ class Gateway:
             new_dec.append(h)
         self.pre, self.dec = new_pre, new_dec
         # 4. retarget in-flight KV transfers (decode indices changed; some
-        #    targets may have flipped away or died)
+        #    targets may have flipped away or died). Prefix-bound
+        #    transfers (page handles / suffix wires) follow their replica
+        #    or fall back to a full prefill — never reroute.
         new_idx = {id(h): j for j, h in enumerate(self.dec)}
         alive = [j for j, d in enumerate(self.dec) if d.alive]
+        keep_t = []
         for t in self.transfer_queue:
             h_old = (old_dec[t.target] if t.target < len(old_dec) else None)
             j = new_idx.get(id(h_old)) if h_old is not None else None
+            if t.replica_bound:
+                if j is None or not self.dec[j].dispatchable:
+                    self._requeue_handle(t.handle, now,
+                                         "(prefix replica left the plan)")
+                    continue
+                t.target = j
+                if t.handle.req.prefix_replica >= 0:
+                    t.handle.req.prefix_replica = j
+                keep_t.append(t)
+                continue
             if j is None or not self.dec[j].alive:
                 j = (max(alive, key=lambda jj: self.dec[jj].client.n_free())
                      if alive else 0)
             t.target = j
+            keep_t.append(t)
+        self.transfer_queue = keep_t
+        # queued partial-hit requests hold pins by decode INDEX: remap to
+        # the new plan's indices or fall back to a full prefill
+        for h in list(self.queue):
+            r = h.req
+            if r.start_pos > 0 and 0 <= r.prefix_replica < len(old_dec):
+                j = new_idx.get(id(old_dec[r.prefix_replica]))
+                if j is None or not self.dec[j].dispatchable:
+                    self._release_prefix(h)
+                else:
+                    r.prefix_replica = j
         # 5. rebuild the transport link table from the new replica->device
         #    map, then atomically install the new routing masses
         if hasattr(self.transport, "rebind_plan"):

@@ -243,6 +243,30 @@ def extract_batch(cache, requests: Sequence[Tuple[int, int]], *,
     return wires
 
 
+def dequantize_prefix_batch(wires: Sequence[KVWire], pad_to: int, *,
+                            backend: str = "auto"):
+    """Stack per-request prefix wires into ``transformer.prefill_suffix``
+    inputs: a ``{slot: (k, v)}`` pytree of ``(L, B, pad_to, Hkv, hd)``
+    bf16 arrays (prefix padded on the right; padding is masked by the
+    suffix attention's ``prefix_len``) plus the ``(B,)`` true prefix
+    lengths. One dequant per tensor; everything stays on device."""
+    out: Dict[str, Tuple[jnp.ndarray, jnp.ndarray]] = {}
+    lens = jnp.asarray([w.request_len for w in wires], jnp.int32)
+    for name in wires[0].slots:
+        stacked = []
+        for key in ("k", "v"):
+            ts = []
+            for w in wires:
+                t = _dequantize(w.slots[name][key], backend)  # (L,ln,Hkv,hd)
+                if t.shape[1] < pad_to:
+                    t = jnp.pad(t, ((0, 0), (0, pad_to - t.shape[1]),
+                                    (0, 0), (0, 0)))
+                ts.append(t[:, :pad_to])
+            stacked.append(jnp.stack(ts, axis=1))
+        out[name] = (stacked[0], stacked[1])
+    return out, lens
+
+
 def insert(cache, wire: KVWire, batch_index: int, *, backend: str = "auto"):
     """Insert a transferred request state into a decode cache pytree."""
     return insert_batch(cache, [(wire, batch_index)], backend=backend)

@@ -20,7 +20,7 @@ allocator never hands it out.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +34,17 @@ class PagePool:
     """Fixed-size-page allocator over ``num_pages`` pages (page 0 is the
     trash page and is never allocated). LIFO free list: a released
     request's pages are the next handed out, which keeps the hot page set
-    small."""
+    small.
+
+    Pages are REFCOUNTED: ``alloc`` grants the first reference,
+    ``share`` adds one for a new owner (prefix-cache sharing), and
+    ``free``/``unshare`` drop one owner's reference — a page returns to
+    the free list only when its last owner releases it. Owner tags are
+    arbitrary hashables (slot indices, the prefix cache's tag, in-flight
+    pin tags); an owner holds at most one reference per page. All
+    refcount/free-list mutation lives HERE (lint rule R006) — everything
+    else goes through this API.
+    """
 
     def __init__(self, num_pages: int, page_size: int):
         if num_pages < 2:
@@ -42,10 +52,13 @@ class PagePool:
         self.num_pages = num_pages
         self.page_size = page_size
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._owner: Dict[int, int] = {}          # page -> owner tag
+        self._owners: Dict[int, Set[Hashable]] = {}   # page -> owner tags
+        self._by_owner: Dict[Hashable, Set[int]] = {}  # owner -> its pages
         # stats
         self.allocs = 0
         self.frees = 0
+        self.shares = 0
+        self.unshares = 0
         self.alloc_failures = 0
         self.peak_in_use = 0
 
@@ -55,17 +68,52 @@ class PagePool:
 
     @property
     def n_in_use(self) -> int:
-        return len(self._owner)
+        return len(self._owners)
+
+    @property
+    def n_shared(self) -> int:
+        """Pages currently held by more than one owner."""
+        return sum(1 for s in self._owners.values() if len(s) > 1)
 
     @property
     def capacity(self) -> int:
         """Allocatable pages (total minus the trash page)."""
         return self.num_pages - 1
 
-    def owned_by(self, owner: int) -> List[int]:
-        return sorted(p for p, o in self._owner.items() if o == owner)
+    def owned_by(self, owner: Hashable) -> List[int]:
+        """Pages this owner holds a reference on — O(pages held), via the
+        per-owner index (not a scan of the whole pool)."""
+        return sorted(self._by_owner.get(owner, ()))
 
-    def alloc(self, n: int, owner: int) -> Optional[List[int]]:
+    def owners_of(self, page: int) -> frozenset:
+        return frozenset(self._owners.get(page, frozenset()))
+
+    def refcount(self, page: int) -> int:
+        return len(self._owners.get(page, ()))
+
+    def pages_in_use(self) -> List[int]:
+        return sorted(self._owners)
+
+    def _grant(self, page: int, owner: Hashable):
+        self._owners.setdefault(page, set()).add(owner)
+        self._by_owner.setdefault(owner, set()).add(page)
+
+    def _revoke(self, page: int, owner: Hashable) -> bool:
+        """Drop one owner's reference; True when the page became free."""
+        owners = self._owners[page]
+        owners.discard(owner)
+        held = self._by_owner.get(owner)
+        if held is not None:
+            held.discard(page)
+            if not held:
+                del self._by_owner[owner]
+        if owners:
+            return False
+        del self._owners[page]
+        self._free.append(page)
+        return True
+
+    def alloc(self, n: int, owner: Hashable) -> Optional[List[int]]:
         """Take ``n`` pages for ``owner`` (a slot index); None if the pool
         cannot satisfy the request — all-or-nothing, no partial grants."""
         if n <= 0:
@@ -75,31 +123,69 @@ class PagePool:
             return None
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
-            self._owner[p] = owner
+            self._grant(p, owner)
         self.allocs += n
         self.peak_in_use = max(self.peak_in_use, self.n_in_use)
         return pages
 
-    def free(self, pages: Sequence[int], owner: Optional[int] = None):
-        """Return pages to the free list. Validates the WHOLE batch before
-        mutating anything, so a bad call (double free, page listed twice,
-        page owned by someone else when ``owner`` is given) raises without
-        corrupting the free list with a partial free."""
-        seen = set()
+    def share(self, pages: Sequence[int], owner: Hashable):
+        """Add ``owner``'s reference to already-allocated pages (prefix
+        sharing). Batch-validated before any mutation: every page must be
+        in use and not already held by this owner."""
+        seen: Set[int] = set()
+        for p in pages:
+            if p in seen:
+                raise ValueError(f"page {p} listed twice in one share()")
+            seen.add(p)
+            owners = self._owners.get(p)
+            if owners is None:
+                raise ValueError(f"share of free/foreign page {p}")
+            if owner in owners:
+                raise ValueError(f"owner {owner!r} already holds page {p}")
+        for p in pages:
+            self._grant(p, owner)
+        self.shares += len(seen)
+
+    def free(self, pages: Sequence[int], owner: Optional[Hashable] = None):
+        """Release ``owner``'s reference on each page; a page returns to
+        the free list only when its refcount hits 0. With ``owner=None``
+        (legacy single-owner call) each page must have exactly one owner.
+        Validates the WHOLE batch before mutating anything, so a bad call
+        (double free, page listed twice, page not held by ``owner``)
+        raises without corrupting the free list with a partial free."""
+        seen: Set[int] = set()
         for p in pages:
             if p in seen:
                 raise ValueError(f"page {p} listed twice in one free()")
             seen.add(p)
-            actual = self._owner.get(p)
-            if actual is None:
+            owners = self._owners.get(p)
+            if owners is None:
                 raise ValueError(f"double free / foreign page {p}")
-            if owner is not None and actual != owner:
+            if owner is None:
+                if len(owners) != 1:
+                    raise ValueError(
+                        f"page {p} is shared by {sorted(map(repr, owners))}; "
+                        f"free() needs an explicit owner")
+            elif owner not in owners:
+                if len(owners) == 1:
+                    raise ValueError(
+                        f"page {p} is owned by slot {next(iter(owners))}, "
+                        f"not {owner!r}")
                 raise ValueError(
-                    f"page {p} is owned by slot {actual}, not {owner}")
+                    f"page {p} is shared by {sorted(map(repr, owners))}; "
+                    f"{owner!r} holds no reference")
         for p in pages:
-            del self._owner[p]
-            self._free.append(p)
-        self.frees += len(pages)
+            o = owner if owner is not None else next(iter(self._owners[p]))
+            if self._revoke(p, o):
+                self.frees += 1
+            else:
+                self.unshares += 1
+
+    def unshare(self, pages: Sequence[int], owner: Hashable):
+        """Drop ``owner``'s reference on shared pages — same release path
+        as :meth:`free` (a page whose last reference drops goes back to
+        the free list), with the owner always explicit."""
+        self.free(pages, owner=owner)
 
     def occupancy(self) -> float:
         return self.n_in_use / max(self.capacity, 1)
@@ -109,7 +195,9 @@ class PagePool:
                 "in_use": self.n_in_use, "free": self.n_free,
                 "occupancy": self.occupancy(),
                 "peak_in_use": self.peak_in_use, "allocs": self.allocs,
-                "frees": self.frees, "alloc_failures": self.alloc_failures}
+                "frees": self.frees, "shares": self.shares,
+                "unshares": self.unshares, "shared_pages": self.n_shared,
+                "alloc_failures": self.alloc_failures}
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
@@ -144,14 +232,20 @@ def _wire_to_rows(wt: WireTensor, cfg, backend: str):
     return packed, scale, zero, False
 
 
-def insert_wires(cache, cfg, items: Sequence[Tuple[KVWire, int, List[int]]],
-                 *, backend: str = "auto"):
+def insert_wires(cache, cfg, items: Sequence[Tuple], *,
+                 backend: str = "auto"):
     """Scatter transferred requests into their allocated pages.
 
     ``items`` = (wire, slot_index, pages) with ``pages`` already allocated
     by the :class:`PagePool` (``len(pages) >= ceil(len/page_size)``; the
-    tail of the last page absorbs decode appends). Updates page-table rows
-    and lengths. Returns (cache, n_zero_copy, n_reencoded) — the counters
+    tail of the last page absorbs decode appends). A 4th element
+    ``prefix_pages`` SPLICES the wire onto a shared, page-aligned prefix
+    chain: the wire carries only the suffix (token 0 of the wire is
+    absolute position ``len(prefix_pages) * page_size``), the page-table
+    row becomes ``prefix_pages + pages``, and lengths cover the whole
+    chain. Prefix pages are never written — only the suffix scatter and
+    decode's tail appends touch pages here. Updates page-table rows and
+    lengths. Returns (cache, n_zero_copy, n_reencoded) — the counters
     feed the bench's zero-dequant claim."""
     int4 = "kp" in cache["slot0"]
     ps = cache_page_size(cache, cfg)
@@ -159,13 +253,16 @@ def insert_wires(cache, cfg, items: Sequence[Tuple[KVWire, int, List[int]]],
     g = paged.page_group(cfg)
     W = cache["page_table"].shape[1]
     n_zero, n_reenc = 0, 0
-    for wire, slot, pages in items:
+    for item in items:
+        wire, slot, pages = item[0], item[1], item[2]
+        prefix = list(item[3]) if len(item) > 3 and item[3] else []
+        prefix_len = len(prefix) * ps
         ln = wire.request_len
         need = pages_needed(ln, ps)
-        if len(pages) < need or need > W:
+        if len(pages) < need or len(prefix) + need > W:
             raise ValueError(
                 f"slot {slot}: {len(pages)} page(s) for a {ln}-token wire "
-                f"(needs {need}, table width {W})")
+                f"(needs {need}, prefix {len(prefix)}, table width {W})")
         tpos = np.arange(ln)
         dst_page = np.asarray(pages, np.int32)[tpos // ps]          # (ln,)
         for name, slot_wire in wire.slots.items():
@@ -195,11 +292,39 @@ def insert_wires(cache, cfg, items: Sequence[Tuple[KVWire, int, List[int]]],
                     cache[name][base] = dst.at[
                         :, dst_page, tpos % ps].set(dense.astype(dst.dtype))
         row = np.zeros((W,), np.int32)                   # rest -> trash
-        row[:len(pages)] = pages
+        chain = prefix + list(pages)
+        row[:len(chain)] = chain
         cache["page_table"] = cache["page_table"].at[slot].set(
             jnp.asarray(row))
-        cache["lengths"] = cache["lengths"].at[slot].set(ln)
+        cache["lengths"] = cache["lengths"].at[slot].set(prefix_len + ln)
     return cache, n_zero, n_reenc
+
+
+def set_page_chain(cache, slot: int, pages: Sequence[int], length: int):
+    """Point a slot's page-table row at an existing page chain (the full
+    prefix-hit admission: every token is already resident, nothing is
+    scattered). Row tail stays at the trash page."""
+    W = cache["page_table"].shape[1]
+    if len(pages) > W:
+        raise ValueError(f"chain of {len(pages)} pages exceeds table "
+                         f"width {W}")
+    row = np.zeros((W,), np.int32)
+    row[:len(pages)] = pages
+    cache["page_table"] = cache["page_table"].at[slot].set(jnp.asarray(row))
+    cache["lengths"] = cache["lengths"].at[slot].set(length)
+    return cache
+
+
+def copy_page(cache, src_page: int, dst_page: int):
+    """Device-copy one page's contents across every layer tensor — the
+    copy-on-write step before a slot appends to a page it shares. Pure
+    data movement; refcount bookkeeping stays in :class:`PagePool`."""
+    for name, buf in cache.items():
+        if name in ("page_table", "lengths"):
+            continue
+        for key, a in buf.items():
+            cache[name][key] = a.at[:, dst_page].set(a[:, src_page])
+    return cache
 
 
 def extract_slot_wire(cache, cfg, ln: int, pages: Sequence[int],

@@ -44,6 +44,7 @@ class WorkloadProfiler:
         self.clock = clock if clock is not None else time.time
         self._records: Deque[Tuple[float, int, int]] = deque(maxlen=window)
         self._arrivals: Deque[float] = deque(maxlen=window)
+        self._prefix: Deque[Tuple[int, int]] = deque(maxlen=window)
         self._baseline: Optional[WindowStats] = None
 
     def record(self, n_in: int, n_out: int, t: Optional[float] = None):
@@ -52,6 +53,24 @@ class WorkloadProfiler:
 
     def record_arrival(self, t: Optional[float] = None):
         self._arrivals.append(t if t is not None else self.clock())
+
+    def record_prefix(self, prompt_len: int, hit_len: int):
+        """Record a prefix-cache probe at SUBMIT time: ``hit_len`` of the
+        ``prompt_len`` prompt tokens were found in the shared radix cache
+        (0 = miss). Probes are recorded at submit rather than completion
+        for the same reason arrivals are — under saturation the hit rate
+        of what is *offered* is what the next plan must be sized for."""
+        self._prefix.append((max(int(prompt_len), 1),
+                             max(int(hit_len), 0)))
+
+    def prefix_hit_rate(self) -> float:
+        """Token-weighted fraction of prompt tokens served from the
+        prefix cache over the window; 0.0 until any probe is recorded."""
+        if not self._prefix:
+            return 0.0
+        tot = sum(p for p, _ in self._prefix)
+        hit = sum(min(h, p) for p, h in self._prefix)
+        return hit / max(tot, 1)
 
     def arrival_rate(self) -> Optional[float]:
         """Offered load over the arrival window; None until 8 arrivals."""
@@ -104,4 +123,5 @@ class WorkloadProfiler:
         if s is None:
             return None
         return Workload(name, mean_in=s.mean_in * self.in_scale,
-                        mean_out=s.mean_out * self.out_scale)
+                        mean_out=s.mean_out * self.out_scale,
+                        prefix_hit_rate=self.prefix_hit_rate())

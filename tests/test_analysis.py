@@ -181,6 +181,28 @@ def test_r005_consumer_must_import_contract():
     assert any(f.rule == "R005" and "import" in f.message for f in found)
 
 
+# -- R006: pool refcount internals --------------------------------------------
+
+
+def test_r006_pool_internal_reach():
+    bad = ("def steal(pool, p):\n"
+           "    pool._owners.pop(p)\n"
+           "    pool._free.append(p)\n")
+    assert rules_of({"src/repro/serving/engine.py": bad}) == ["R006", "R006"]
+    assert rules_of({"benchmarks/bench_x.py": bad}) == ["R006", "R006"]
+    # the pool module itself is the defining site
+    assert rules_of({"src/repro/serving/page_pool.py": bad}) == []
+    # self._owners inside a PagePool subclass (sanitizer pool) is fine
+    ok = ("class SanitizedPagePool:\n"
+          "    def check_empty(self):\n"
+          "        assert not self._owners\n")
+    assert rules_of({"src/repro/analysis/sanitizers.py": ok}) == []
+    # the public API never fires
+    api = ("def audit(pool):\n"
+           "    return pool.owned_by(0), pool.owners_of(1), pool.refcount(1)\n")
+    assert rules_of({"src/repro/serving/engine.py": api}) == []
+
+
 # -- pragmas ------------------------------------------------------------------
 
 

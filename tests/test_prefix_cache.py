@@ -1,0 +1,401 @@
+"""Prefix-sharing KV cache (DESIGN.md §10, ISSUE 8).
+
+Covers: the radix index (page-aligned matching, the generated-token trust
+rule for full hits, LRU eviction that respects outside refcounts), the
+refcounted ``PagePool`` (a shared page never returns to the free list
+while any owner holds it; interleaved alloc/share/free/unshare conserves
+pages — both as a seeded deterministic sweep and under hypothesis when
+available), and the engine-level warm paths: a full prefix hit decodes
+BIT-IDENTICAL tokens to a cold run with copy-on-write never mutating the
+shared pages, the partial-hit suffix prefill splices onto the shared
+chain, and a preempted COW slot migrates to another replica without
+perturbing the stream.
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import build
+from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.page_pool import PagePool, pages_needed
+from repro.serving.prefix_cache import PREFIX_OWNER, PrefixCache
+
+KEY = jax.random.PRNGKey(0)
+PS = 8
+
+
+# -- radix index --------------------------------------------------------------
+
+
+def _donate(cache, pool, tokens, kv_len, gen_from, owner=0):
+    """Alloc a chain under ``owner``, donate it, release the donor ref —
+    exactly the engine's _retire_slot ordering."""
+    pages = pool.alloc(pages_needed(kv_len, PS), owner)
+    cache.insert(tokens, kv_len, pages, gen_from, pool)
+    pool.free(pages, owner=owner)
+    return pages
+
+
+def test_radix_full_hit_needs_generated_continuation():
+    pool = PagePool(32, PS)
+    cache = PrefixCache(PS)
+    prompt = list(range(100, 116))            # 16 tokens = 2 pages exactly
+    out = [7, 8, 9, 10]                       # generated
+    pages = _donate(cache, pool, prompt + out, 19, gen_from=16)
+
+    # full prompt: continuation is the donor's first GENERATED token
+    m = cache.match(prompt)
+    assert m is not None and m.full
+    assert m.length == 16 and m.next_token == 7
+    assert m.pages == pages[:2]
+
+    # a prompt ending mid-page inside the donor's PROMPT region: those
+    # tokens are arbitrary user text, never a trusted continuation —
+    # only a page-aligned partial hit
+    m = cache.match(prompt[:12])
+    assert m is not None and not m.full
+    assert m.length == 8 and m.pages == pages[:1]
+
+    # a prompt ending inside the GENERATED region: full hit mid-page
+    m = cache.match(prompt + out[:2])
+    assert m is not None and m.full and m.next_token == 9
+    assert m.pages == pages[:3]
+
+    # diverging first page: miss
+    assert cache.match([1, 2, 3] + prompt) is None
+    # a one-page prompt with no trusted continuation: partial needs k>=1
+    # AND at least one suffix token, so an exact-page prompt with no
+    # generated child collapses to a miss rather than length==prompt
+    assert cache.match(prompt[:8]) is None or not cache.match(prompt[:8]).full
+
+
+def test_radix_donations_dedupe_and_merge_gen_flags():
+    pool = PagePool(32, PS)
+    cache = PrefixCache(PS)
+    prompt = list(range(16))
+    _donate(cache, pool, prompt + [77], 16, gen_from=16, owner=0)
+    before = pool.n_in_use
+    # a second donor with the same prompt adds no pages (duplicates are
+    # not adopted; its own refs were released by the donor)
+    _donate(cache, pool, prompt + [77], 16, gen_from=16, owner=1)
+    assert pool.n_in_use == before
+    assert cache.stats()["entries"] == 2
+    # the trailing emitted token past the resident KV is a trusted
+    # continuation: the full prompt now scores a FULL hit
+    m = cache.match(prompt)
+    assert m is not None and m.full and m.next_token == 77
+
+
+def test_radix_lru_eviction_respects_external_refs():
+    pool = PagePool(16, PS)
+    cache = PrefixCache(PS)
+    a = _donate(cache, pool, list(range(16)), 16, 16, owner=0)
+    b = _donate(cache, pool, list(range(50, 66)), 16, 16, owner=1)
+    assert pool.n_in_use == 4
+    # chain a was touched less recently -> refresh it, pin b's head page
+    cache.match(list(range(16)))
+    pool.share([b[0]], "pin")
+    # first eviction takes the LRU leaf (b's tail)
+    assert cache.evict(pool, 1) == 1
+    assert pool.refcount(b[1]) == 0
+    # full sweep: b's head survives under the external pin
+    cache.evict(pool, 10)
+    assert pool.pages_in_use() == [b[0]]
+    assert pool.owners_of(b[0]) == {PREFIX_OWNER, "pin"}
+    # once unpinned it becomes evictable
+    pool.unshare([b[0]], "pin")
+    assert cache.evict(pool, 10) == 1
+    assert pool.n_in_use == 0 and cache.stats()["entries"] == 0
+
+
+def test_radix_clear_keeps_externally_shared_pages():
+    pool = PagePool(16, PS)
+    cache = PrefixCache(PS)
+    a = _donate(cache, pool, list(range(16)), 16, 16, owner=0)
+    pool.share(a, 3)                          # a slot decoding off the chain
+    cache.clear(pool)
+    assert cache.stats()["entries"] == 0
+    assert pool.pages_in_use() == sorted(a)   # survive under the slot
+    pool.free(a, owner=3)
+    assert pool.n_in_use == 0
+
+
+# -- refcounted pool invariants -----------------------------------------------
+
+
+def test_shared_page_never_freed_while_referenced():
+    pool = PagePool(6, 4)
+    pages = pool.alloc(2, 0)
+    pool.share(pages, "cache")
+    pool.free(pages, owner=0)                 # one ref down, page stays
+    assert pool.n_in_use == 2
+    # drain the free list: the shared pages are never handed out again
+    rest = pool.alloc(pool.n_free, 1)
+    assert set(rest).isdisjoint(pages)
+    assert pool.alloc(1, 2) is None
+    pool.unshare(pages, "cache")              # last ref: now truly free
+    assert pool.n_free == 2
+    got = pool.alloc(2, 3)
+    assert sorted(got) == sorted(pages)
+
+
+def test_refcount_interleaving_conserves_pages():
+    """Seeded random interleaving of alloc/share/free against a mirror
+    model: the pool's counts must track the mirror exactly, and
+    free + in_use must equal capacity after every operation."""
+    rng = random.Random(0)
+    pool = PagePool(17, 4)
+    refs = {}                                 # page -> set of owners
+    for step in range(3000):
+        r = rng.random()
+        if r < 0.45:
+            n = rng.randint(0, 4)
+            owner = ("o", step)
+            got = pool.alloc(n, owner)
+            if got is not None:
+                for p in got:
+                    assert p not in refs, "allocated a live page"
+                    refs[p] = {owner}
+            else:
+                assert n > pool.n_free
+        elif r < 0.65 and refs:
+            p = rng.choice(sorted(refs))
+            owner = ("s", step)
+            pool.share([p], owner)
+            refs[p].add(owner)
+        elif refs:
+            p = rng.choice(sorted(refs))
+            owner = rng.choice(sorted(refs[p], key=repr))
+            pool.free([p], owner=owner)
+            refs[p].discard(owner)
+            if not refs[p]:
+                del refs[p]
+        assert pool.n_in_use == len(refs)
+        assert pool.n_free == pool.capacity - len(refs)
+        assert pool.n_shared == sum(1 for s in refs.values() if len(s) > 1)
+    for p in sorted(refs):
+        assert pool.refcount(p) == len(refs[p])
+        assert pool.owners_of(p) == frozenset(refs[p])
+
+
+def test_refcount_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 5)),
+                    min_size=1, max_size=80))
+    def scenario(script):
+        pool = PagePool(13, 4)
+        refs = {}
+        for i, (kind, n) in enumerate(script):
+            if kind == 0:
+                got = pool.alloc(n, ("a", i))
+                if got is not None:
+                    for p in got:
+                        refs[p] = {("a", i)}
+            elif kind == 1 and refs:
+                p = sorted(refs)[n % len(refs)]
+                pool.share([p], ("s", i))
+                refs[p].add(("s", i))
+            elif kind == 2 and refs:
+                p = sorted(refs)[n % len(refs)]
+                o = sorted(refs[p], key=repr)[0]
+                pool.free([p], owner=o)
+                refs[p].discard(o)
+                if not refs[p]:
+                    del refs[p]
+            assert pool.n_in_use == len(refs)
+            assert pool.n_free == pool.capacity - len(refs)
+
+    scenario()
+
+
+# -- engine warm paths --------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_reduced("llama-30b")
+    api = build(cfg)
+    params = api.init(KEY)
+    return cfg, api, params
+
+
+def _mk_eng(cfg, params, **kw):
+    base = dict(max_slots=4, max_seq=64, chunk_size=4, paged=True,
+                page_size=PS, prefix_sharing=True)
+    base.update(kw)
+    return DecodeEngine(cfg, params, **base)
+
+
+def _run_cold(cfg, params, pre, prompt, max_new, rid=0):
+    eng = DecodeEngine(cfg, params, max_slots=2, max_seq=64, chunk_size=4,
+                       paged=True, page_size=PS)
+    r = GenRequest(rid, prompt.copy(), max_new_tokens=max_new)
+    (rr, w, f), = pre.run([r], backend="ref")
+    assert eng.admit(rr, w, f, backend="ref")
+    while eng.active:
+        eng.step()
+    return list(r.out_tokens)
+
+
+def _wire_payloads(wire):
+    out = []
+    for name in sorted(wire.slots):
+        for key in sorted(wire.slots[name]):
+            wt = wire.slots[name][key]
+            for k in sorted(wt.payload):
+                out.append(np.asarray(wt.payload[k]).copy())
+    return out
+
+
+def test_full_hit_bit_identical_with_cow(small_model):
+    """A full prefix hit (prefill skipped, decode straight off the shared
+    chain, COW on the mid-page tail) must emit EXACTLY the cold run's
+    tokens, and the shared pages' bytes must be untouched afterwards."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+    cold = _run_cold(cfg, params, pre, prompt, 6)
+
+    eng = _mk_eng(cfg, params)
+    r1 = GenRequest(1, prompt.copy(), max_new_tokens=6)
+    (rr, w, f), = pre.run([r1], backend="ref")
+    assert eng.admit(rr, w, f, backend="ref")
+    while eng.active:
+        eng.step()
+    assert list(r1.out_tokens) == cold        # donor == cold already
+
+    m = eng.prefix_match(prompt)
+    assert m is not None and m.full and m.length == 12
+    assert m.next_token == cold[0]
+    tag = ("prefix-pin", 2)
+    assert eng.prefix_pin(m.pages, tag)
+    before = _wire_payloads(eng.extract_prefix(m.pages, m.length))
+
+    r2 = GenRequest(2, prompt.copy(), max_new_tokens=6)
+    assert eng.admit_prefix(r2, m.pages, m.next_token)
+    eng.prefix_unpin(tag)
+    # prompt ends mid-page (12 into page 1): exactly one COW copy
+    assert eng.cow_copies == 1
+    while eng.active:
+        eng.step()
+    assert list(r2.out_tokens) == cold, "warm full hit must be bit-identical"
+
+    after = _wire_payloads(eng.extract_prefix(m.pages, m.length))
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(a, b)
+    st = eng.page_stats()
+    assert st["leaked_pages"] == 0
+    assert st["prefix_admits"] == 1 and st["cow_copies"] == 1
+
+
+def test_page_aligned_full_hit_needs_no_cow(small_model):
+    """A prompt ending ON a page boundary appends into a fresh page: the
+    chain shares every prefix page and copies nothing."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+    eng = _mk_eng(cfg, params)
+    r1 = GenRequest(1, prompt.copy(), max_new_tokens=5)
+    (rr, w, f), = pre.run([r1], backend="ref")
+    assert eng.admit(rr, w, f, backend="ref")
+    while eng.active:
+        eng.step()
+    cold = list(r1.out_tokens)
+    m = eng.prefix_match(prompt)
+    assert m is not None and m.full and m.pages and len(m.pages) == 2
+    r2 = GenRequest(2, prompt.copy(), max_new_tokens=5)
+    assert eng.admit_prefix(r2, m.pages, m.next_token)
+    assert eng.cow_copies == 0
+    while eng.active:
+        eng.step()
+    assert list(r2.out_tokens) == cold
+
+
+def test_partial_hit_suffix_prefill_splices_shared_chain(small_model):
+    """A partial hit prefills only the suffix against the dequantized
+    shared prefix and splices onto the chain at the page boundary. Token
+    parity with the cold run is checked exactly — the prefix KV bytes the
+    warm path reads are the same int4 pages the cold path would produce
+    for the identical prefix tokens."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    assert pre.supports_suffix
+    rng = np.random.default_rng(11)
+    base = rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+    eng = _mk_eng(cfg, params)
+    r1 = GenRequest(1, base.copy(), max_new_tokens=4)
+    (rr, w, f), = pre.run([r1], backend="ref")
+    assert eng.admit(rr, w, f, backend="ref")
+    while eng.active:
+        eng.step()
+
+    # same 16-token (2-page) prefix, fresh suffix
+    prompt2 = np.concatenate([
+        base[:16], rng.integers(1, cfg.vocab_size, 9).astype(np.int32)])
+    cold = _run_cold(cfg, params, pre, prompt2, 6, rid=9)
+
+    m = eng.prefix_match(prompt2)
+    assert m is not None and not m.full
+    assert m.length == 16 and len(m.pages) == 2
+    tag = ("prefix-pin", 2)
+    assert eng.prefix_pin(m.pages, tag)
+    r2 = GenRequest(2, prompt2.copy(), max_new_tokens=6,
+                    start_pos=m.length, prefix_pages=list(m.pages))
+    r2.prefix_wire = eng.extract_prefix(m.pages, m.length)
+    (rr2, w2, f2), = pre.run([r2], backend="ref")
+    assert w2.request_len == len(prompt2) - 16, "wire covers only the suffix"
+    assert eng.admit(rr2, w2, f2, backend="ref")
+    eng.prefix_unpin(tag)
+    while eng.active:
+        eng.step()
+    assert list(r2.out_tokens) == cold
+    assert eng.page_stats()["leaked_pages"] == 0
+
+
+def test_cow_slot_migrates_bit_identical(small_model):
+    """Preemption drain of a warm (full-hit, COW) slot: the migrated
+    stream finishes on another replica with the cold run's tokens."""
+    cfg, api, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab_size, 12).astype(np.int32)
+    cold = _run_cold(cfg, params, pre, prompt, 8)
+
+    eng_a = _mk_eng(cfg, params, chunk_size=2)
+    r1 = GenRequest(1, prompt.copy(), max_new_tokens=8)
+    (rr, w, f), = pre.run([r1], backend="ref")
+    assert eng_a.admit(rr, w, f, backend="ref")
+    while eng_a.active:
+        eng_a.step()
+    m = eng_a.prefix_match(prompt)
+    assert m is not None and m.full
+    r2 = GenRequest(2, prompt.copy(), max_new_tokens=8)
+    assert eng_a.admit_prefix(r2, m.pages, m.next_token)
+    assert eng_a.cow_copies == 1
+    eng_a.step()                              # mid-stream (2 more tokens)
+    assert 0 < len(r2.out_tokens) < 8
+
+    items = eng_a.extract_resident(backend="ref")
+    assert len(items) == 1
+    slot, req, wire, cur = items[0]
+    eng_b = _mk_eng(cfg, params)
+    rej = eng_b.admit_migrated([(req, wire, cur)], backend="ref")
+    assert not rej
+    eng_a.release(slot)
+    while eng_b.active:
+        eng_b.step()
+    assert list(r2.out_tokens) == cold
+    # source drained clean: slot refs gone, only the prefix index holds on
+    assert eng_a.page_stats()["leaked_pages"] == 0
+    eng_a.clear_prefix()
+    assert eng_a.pool.n_in_use == 0
+    eng_b.clear_prefix()
+    assert eng_b.pool.n_in_use == 0
