@@ -19,13 +19,14 @@ def main() -> None:
                          "throughput suite also writes BENCH_throughput.json)")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import (bench_case_study, bench_fault_tolerance,
-                            bench_kernels, bench_kv_compression,
-                            bench_network_effect, bench_paged_kv,
-                            bench_prefix_cache, bench_ratio_sweep,
-                            bench_rescheduling, bench_scheduling_time,
-                            bench_serving_api, bench_simulator_accuracy,
-                            bench_slo_attainment, bench_throughput)
+    from benchmarks import (bench_case_study, bench_continuous_batching,
+                            bench_fault_tolerance, bench_kernels,
+                            bench_kv_compression, bench_network_effect,
+                            bench_paged_kv, bench_prefix_cache,
+                            bench_ratio_sweep, bench_rescheduling,
+                            bench_scheduling_time, bench_serving_api,
+                            bench_simulator_accuracy, bench_slo_attainment,
+                            bench_throughput)
 
     suites = {
         "slo": (bench_slo_attainment, "Fig 7-8 SLO attainment"),
@@ -40,6 +41,9 @@ def main() -> None:
         "prefix_cache": (bench_prefix_cache,
                          "prefix-sharing KV: Zipf hit rate, warm TTFT, "
                          "capacity vs no-sharing"),
+        "continuous_batching": (bench_continuous_batching,
+                                "chunked prefill vs one-shot: interactive "
+                                "TTFT p99 under a long-prompt burst"),
         "fault_tolerance": (bench_fault_tolerance,
                             "chaos crash+preemption: SLO attainment vs "
                             "no-handling baseline"),

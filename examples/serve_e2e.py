@@ -22,9 +22,9 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.models import build
 from repro.serving.engine import DecodeEngine, PrefillEngine
-from repro.serving.gateway import (DONE, Gateway, ServeRequest,
-                                   drive_open_loop, summarize_handles,
-                                   warmup_engines)
+from repro.serving.gateway import (DONE, Gateway, SchedulerConfig,
+                                   ServeRequest, drive_open_loop,
+                                   summarize_handles, warmup_gateway)
 from repro.serving.transport import InProcessTransport, SimNetworkTransport
 
 
@@ -53,6 +53,16 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the radix prefix cache (refcounted "
                          "copy-on-write page sharing + prefill skip)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="prefill chunk token budget per scheduler tick "
+                         "(0 = one-shot prefill); with chunking, a long "
+                         "prompt no longer head-of-line-blocks the TTFT "
+                         "of short prompts behind it")
+    ap.add_argument("--decode-chunk-steps", type=int, default=0,
+                    help="decode steps per scheduler tick (0 = engine "
+                         "default)")
+    ap.add_argument("--max-prefill-batch", type=int, default=4,
+                    help="max prompts per prefill dispatch/chunk tick")
     ap.add_argument("--chaos", action="store_true",
                     help="inject a decode-replica crash and a spot "
                          "preemption mid-trace (3 decode replicas so a "
@@ -85,12 +95,14 @@ def main():
     else:
         transport = InProcessTransport()
     gw = Gateway([prefill], decodes, transport=transport,
+                 scheduler=SchedulerConfig(
+                     prefill_chunk_tokens=args.chunk_tokens,
+                     max_prefill_batch=args.max_prefill_batch,
+                     decode_chunk_steps=args.decode_chunk_steps),
                  compress=not args.no_compress, backend="ref")
 
     print("warming up jit caches...")
-    warmup_engines([prefill], decodes, cfg.vocab_size,
-                   compress=not args.no_compress, backend="ref",
-                   prompt_lens=(16, 24, 32))
+    warmup_gateway(gw, cfg.vocab_size, prompt_lens=(16, 24, 32))
 
     # open-loop Poisson trace: every prompt opens with a shared 16-token
     # "system prompt" (page-aligned — partial radix hits once the first
@@ -181,6 +193,10 @@ def main():
           f"requeues={c['requeues']} migrations={c['migrations']} "
           f"(tokens={c['migrated_tokens']}) "
           f"preemptions={c['preemptions']} failed={c['failed']}")
+    if args.chunk_tokens > 0:
+        print(f"chunked prefill: {c['chunk_ticks']} chunk ticks, "
+              f"{c['chunked_prefills']} prompts chunked "
+              f"(budget {args.chunk_tokens} tok/tick)")
     if st["page_pool"]:
         print(f"page pool (fleet): "
               f"{st['page_pool']['alloc_failures']:.0f} admission stalls, "

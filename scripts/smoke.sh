@@ -37,6 +37,13 @@ if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
         python -m benchmarks.run --suite prefix_cache --quick
     test -s BENCH_prefix_cache.json
+    echo "== chunked-prefill e2e (token-budget scheduler, sanitizers on) =="
+    REPRO_SANITIZE=1 timeout 600 python examples/serve_e2e.py \
+        --requests 6 --rate 2 --max-new 6 --chunk-tokens 16
+    echo "== continuous_batching bench (chunked vs one-shot TTFT p99) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m benchmarks.run --suite continuous_batching --quick
+    test -s BENCH_continuous_batching.json
     echo "== chaos demo (injected crash + preemption, KV-page migration) =="
     REPRO_SANITIZE=1 timeout 600 python examples/serve_e2e.py \
         --requests 8 --rate 3 --max-new 32 --chaos

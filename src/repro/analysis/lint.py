@@ -17,10 +17,13 @@ session" prose in CHANGES.md (now DESIGN.md §9):
   inside jit-reachable code in ``kernels/`` / ``models/``: ``lax.scan`` /
   ``fori_loop`` / ``while_loop`` bodies, ``jax.jit``-decorated or
   -wrapped functions, pallas kernels, and everything they call locally.
-* **R003** — ``gateway.py`` / ``coordinator.py`` / ``benchmarks/`` touch
-  replicas only through the ``PrefillClient`` / ``DecodeClient`` /
-  ``Transport`` seams: no ``.engine`` / ``._engine`` attribute
-  reach-through (an RPC realization has no engine attribute to reach).
+* **R003** — ``gateway.py`` / ``benchmarks/`` touch replicas only
+  through the ``PrefillClient`` / ``DecodeClient`` / ``Transport``
+  seams: no ``.engine`` / ``._engine`` attribute reach-through (an RPC
+  realization has no engine attribute to reach). Also: the deleted
+  ``Coordinator`` shim stays deleted — no
+  ``repro.serving.coordinator`` imports, no ``Coordinator`` class in
+  ``serving/`` (``Gateway`` is the one public entry point).
 * **R004** — every transition to FAILED / REJECTED carries a ``reason``
   (and request state is never assigned directly — only through
   ``_transition``, which validates the state machine).
@@ -52,7 +55,8 @@ RULES: Dict[str, str] = {
     "R001": "no direct wall-clock reads in serving/ (use the injected "
             "clock)",
     "R002": "no host-sync calls in jit-reachable kernels/models code",
-    "R003": "replicas are reached only through client/transport seams",
+    "R003": "replicas are reached only through client/transport seams "
+            "(and the deleted Coordinator shim stays deleted)",
     "R004": "FAILED/REJECTED transitions must carry a reason",
     "R005": "wire/page quantization layout must not drift (kv_layout is "
             "the single source of truth)",
@@ -335,6 +339,43 @@ class _R003(ast.NodeVisitor):
                 and base.value.id == "self")
 
 
+class _R003Coordinator(ast.NodeVisitor):
+    """The Coordinator shim (PR 2) was deleted: importing its module or
+    redefining the class in ``serving/`` reintroduces a second public
+    entry point and fails ``--strict``."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+
+    def _flag(self, node: ast.AST, what: str):
+        self.findings.append(Finding(
+            "R003", self.path, node.lineno, node.col_offset,
+            f"{what} reintroduces the deleted Coordinator shim",
+            "port to repro.serving.gateway.Gateway (submit/"
+            "run_until_drained accept bare GenRequests)"))
+
+    def visit_Import(self, node: ast.Import):
+        for a in node.names:
+            if a.name.startswith("repro.serving.coordinator"):
+                self._flag(node, f"import {a.name}")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        if mod.startswith("repro.serving.coordinator") or (
+                mod.endswith("serving") and any(
+                    a.name == "coordinator" for a in node.names)):
+            self._flag(node, f"from {mod} import ...")
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        if (node.name == "Coordinator"
+                and self.path.startswith("src/repro/serving/")):
+            self._flag(node, f"class {node.name} in serving/")
+        self.generic_visit(node)
+
+
 # -- R004: FAILED/REJECTED must carry a reason --------------------------------
 
 _TERMINAL_BAD = ("FAILED", "REJECTED")
@@ -540,9 +581,12 @@ def _in_scope(rule: str, path: str) -> bool:
     if rule == "R002":
         return path.startswith(("src/repro/kernels/", "src/repro/models/"))
     if rule == "R003":
-        return path in ("src/repro/serving/gateway.py",
-                        "src/repro/serving/coordinator.py") \
+        return path == "src/repro/serving/gateway.py" \
             or path.startswith("benchmarks/")
+    if rule == "R003ban":
+        # the Coordinator ban applies everywhere the linter looks
+        return path.startswith(("src/repro/", "benchmarks/", "examples/",
+                                "tests/", "launch/"))
     if rule == "R004":
         return path.startswith(("src/repro/", "benchmarks/"))
     if rule == "R006":
@@ -579,6 +623,10 @@ def lint_sources(files: Dict[str, str], *,
             findings.extend(_R002(path).run(tree))
         if _in_scope("R003", path):
             v = _R003(path)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if _in_scope("R003ban", path):
+            v = _R003Coordinator(path)
             v.visit(tree)
             findings.extend(v.findings)
         if _in_scope("R004", path):

@@ -154,6 +154,35 @@ def prefill_latency(cluster: ClusterSpec, cfg: ModelConfig,
     return total
 
 
+def chunked_prefill_latency(cluster: ClusterSpec, cfg: ModelConfig,
+                            pc: ParallelConfig, tokens: int,
+                            chunk_tokens: int) -> float:
+    """Total prefill time for one prompt run as SARATHI-style fixed-token
+    chunks of ``chunk_tokens`` (0 or >= tokens degenerates to one-shot).
+
+    Each chunk pays the normal prefill cost for its own tokens plus the
+    cross-attention of its queries against the KV already resident from
+    earlier chunks (the suffix-prefill path attends over the dequantized
+    prefix). Per-chunk kernel overheads repeat, so the total is strictly
+    above the one-shot latency — the win is scheduling (TTFT of OTHER
+    requests), not this prompt's completion time."""
+    if chunk_tokens <= 0 or chunk_tokens >= tokens:
+        return prefill_latency(cluster, cfg, pc, tokens)
+    total, done = 0.0, 0
+    while done < tokens:
+        take = min(chunk_tokens, tokens - done)
+        total += prefill_latency(cluster, cfg, pc, take)
+        if done > 0:
+            # queries of this chunk x resident prefix KV, across stages
+            extra = 2.0 * cfg.num_layers * take * done * cfg.q_dim
+            peak = sum(sum(dv.chip.peak_flops
+                           for dv in _stage_devices(cluster, stage))
+                       for stage in pc.stages) * MFU
+            total += extra / peak
+        done += take
+    return total
+
+
 def decode_step_latency(cluster: ClusterSpec, cfg: ModelConfig,
                         pc: ParallelConfig, batch: int, ctx: int) -> float:
     """One decode step (one token per sequence, batch sequences).

@@ -68,16 +68,35 @@ def _lognorm_cdf(x: float, mean: float, cv: float) -> float:
 def estimate_pair_slo(cluster: ClusterSpec, cfg: ModelConfig,
                       pre: ReplicaPlan, dec: ReplicaPlan, wl: Workload,
                       rate_i: float, rate_j: float, slo: SloSpec, *,
-                      compress: bool = True) -> float:
-    """Analytic SLO attainment for requests taking path (pre -> dec)."""
+                      compress: bool = True,
+                      chunk_tokens: int = 0) -> float:
+    """Analytic SLO attainment for requests taking path (pre -> dec).
+
+    ``chunk_tokens > 0`` models SARATHI-style chunked prefill: a request's
+    own prefill takes slightly LONGER (per-chunk overheads +
+    cross-attention against the resident prefix), but the head-of-line
+    quantum a queued request waits behind shrinks from a whole prompt to
+    one chunk — the knob the tabu search can now trade off."""
     # prefix-cache credit: only the unshared suffix of the mean prompt is
     # prefilled (full hits skip the prefill stage entirely)
     eff_in = cm.effective_prefill_tokens(wl)
     s_p = cm.prefill_latency(cluster, cfg,
                              pre.pc, max(int(eff_in), 1))
-    rho_p = min(rate_i * s_p, 0.999)
-    wait_p = s_p * rho_p / (1 - rho_p)          # M/M/1-ish queue
-    ttft_mean = wait_p + s_p
+    if chunk_tokens > 0:
+        s_own = cm.chunked_prefill_latency(cluster, cfg, pre.pc,
+                                           max(int(eff_in), 1),
+                                           chunk_tokens)
+        s_chunk = cm.prefill_latency(
+            cluster, cfg, pre.pc, max(min(chunk_tokens, int(eff_in)), 1))
+        # server utilization follows the (slightly inflated) chunked
+        # service time; the HOL quantum in the waiting term is one chunk
+        rho_p = min(rate_i * s_own, 0.999)
+        wait_p = min(s_p, s_chunk) * rho_p / (1 - rho_p)
+        ttft_mean = wait_p + s_own
+    else:
+        rho_p = min(rate_i * s_p, 0.999)
+        wait_p = s_p * rho_p / (1 - rho_p)      # M/M/1-ish queue
+        ttft_mean = wait_p + s_p
 
     # decode: fixed-point on concurrent batch. Shared prefix pages let the
     # same page budget admit more concurrent sequences (capacity credit);
@@ -114,7 +133,7 @@ def estimate_pair_slo(cluster: ClusterSpec, cfg: ModelConfig,
 def build_matrix(cluster: ClusterSpec, cfg: ModelConfig,
                  prefills: List[ReplicaPlan], decodes: List[ReplicaPlan],
                  wl: Workload, rate: float, slo: SloSpec, *,
-                 compress: bool = True) -> np.ndarray:
+                 compress: bool = True, chunk_tokens: int = 0) -> np.ndarray:
     m, n = len(prefills), len(decodes)
     D = np.zeros((m, n))
     cap_p = np.array([p.cost.prefill_tokens_per_s
@@ -128,7 +147,8 @@ def build_matrix(cluster: ClusterSpec, cfg: ModelConfig,
         for j in range(n):
             D[i, j] = estimate_pair_slo(cluster, cfg, prefills[i],
                                         decodes[j], wl, lam_p[i], lam_d[j],
-                                        slo, compress=compress)
+                                        slo, compress=compress,
+                                        chunk_tokens=chunk_tokens)
     return D
 
 
@@ -164,11 +184,12 @@ def solve_tstp(D: np.ndarray, cap_p: np.ndarray, cap_d: np.ndarray,
 def orchestrate(cluster: ClusterSpec, cfg: ModelConfig,
                 prefills: List[ReplicaPlan], decodes: List[ReplicaPlan],
                 wl: Workload, rate: float, slo: SloSpec, *,
-                compress: bool = True) -> Optional[Orchestration]:
+                compress: bool = True,
+                chunk_tokens: int = 0) -> Optional[Orchestration]:
     if not prefills or not decodes:
         return None
     D = build_matrix(cluster, cfg, prefills, decodes, wl, rate, slo,
-                     compress=compress)
+                     compress=compress, chunk_tokens=chunk_tokens)
     cap_p = np.array([p.cost.prefill_tokens_per_s
                       / cm.effective_prefill_tokens(wl)
                       for p in prefills])

@@ -52,10 +52,12 @@ class LowerLevelSolver:
     re-visits the same groups constantly."""
 
     def __init__(self, cluster: ClusterSpec, cfg: ModelConfig, wl: Workload,
-                 rate: float, slo: orch.SloSpec, *, compress: bool = True):
+                 rate: float, slo: orch.SloSpec, *, compress: bool = True,
+                 chunk_tokens: int = 0):
         self.cluster, self.cfg = cluster, cfg
         self.wl, self.rate, self.slo = wl, rate, slo
         self.compress = compress
+        self.chunk_tokens = chunk_tokens
         self._cache: Dict[Tuple, Optional[Tuple]] = {}
 
     def seed(self, plan: "DeploymentPlan") -> None:
@@ -92,7 +94,8 @@ class LowerLevelSolver:
         pre = [r for r in replicas if r.phase == "prefill"]
         dec = [r for r in replicas if r.phase == "decode"]
         o = orch.orchestrate(self.cluster, self.cfg, pre, dec, self.wl,
-                             self.rate, self.slo, compress=self.compress)
+                             self.rate, self.slo, compress=self.compress,
+                             chunk_tokens=self.chunk_tokens)
         if o is None:
             return 0.0, replicas, None
         return o.attainment, replicas, o
@@ -104,10 +107,16 @@ class LowerLevelSolver:
 def schedule(cluster: ClusterSpec, cfg: ModelConfig, wl: Workload,
              rate: float, slo: orch.SloSpec, *, n_step: int = 100,
              n_nghb: int = 10, n_mem: int = 5, seed: int = 0,
-             compress: bool = True, patience: int = 25) -> DeploymentPlan:
-    """Full scheduling from scratch (paper Fig. 3 workflow)."""
+             compress: bool = True, patience: int = 25,
+             chunk_tokens: int = 0) -> DeploymentPlan:
+    """Full scheduling from scratch (paper Fig. 3 workflow).
+
+    ``chunk_tokens`` exposes the serving scheduler's chunked-prefill
+    budget to the cost model, so the tabu search scores phase splits
+    against the TTFT the token-budget gateway will actually deliver."""
     t0 = time.time()
-    solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress)
+    solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress,
+                              chunk_tokens=chunk_tokens)
     res = tabu.tabu_search(cluster, cfg, solver.score, n_step=n_step,
                            n_nghb=n_nghb, n_mem=n_mem, seed=seed,
                            patience=patience)
@@ -122,7 +131,7 @@ def reschedule_lightweight(cluster: ClusterSpec, cfg: ModelConfig,
                            plan: DeploymentPlan, wl: Workload, rate: float,
                            slo: orch.SloSpec, *, n_step: int = 30,
                            n_nghb: int = 8, seed: int = 1,
-                           compress: bool = True,
+                           compress: bool = True, chunk_tokens: int = 0,
                            init_solution: Optional[tabu.Solution] = None
                            ) -> DeploymentPlan:
     """Paper §3.4: flip-only tabu + re-orchestration.
@@ -132,7 +141,8 @@ def reschedule_lightweight(cluster: ClusterSpec, cfg: ModelConfig,
     workload shifts and node failures (pass init_solution = drop_nodes(...)).
     """
     t0 = time.time()
-    solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress)
+    solver = LowerLevelSolver(cluster, cfg, wl, rate, slo, compress=compress,
+                              chunk_tokens=chunk_tokens)
     # freeze parallel configs: seed the deduction cache from the live plan
     solver.seed(plan)
     res = tabu.tabu_search(cluster, cfg, solver.score, n_step=n_step,

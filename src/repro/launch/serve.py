@@ -28,9 +28,9 @@ from repro.core.orchestrator import SloSpec
 from repro.core.workload import WORKLOADS, generate
 from repro.models import build
 from repro.serving.engine import DecodeEngine, PrefillEngine
-from repro.serving.gateway import (Gateway, ServeRequest, drive_open_loop,
-                                   gateway_from_plan, summarize_handles,
-                                   warmup_engines)
+from repro.serving.gateway import (Gateway, SchedulerConfig, ServeRequest,
+                                   drive_open_loop, gateway_from_plan,
+                                   summarize_handles, warmup_engines)
 from repro.serving.profiler import WorkloadProfiler
 from repro.serving.transport import InProcessTransport, SimNetworkTransport
 
@@ -73,6 +73,16 @@ def main():
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable the radix prefix cache (refcounted "
                          "copy-on-write page sharing + prefill skip)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="prefill chunk token budget per scheduler tick "
+                         "(0 = one-shot prefill); SARATHI-style chunking "
+                         "bounds how long any prompt can head-of-line-"
+                         "block TTFT")
+    ap.add_argument("--decode-chunk-steps", type=int, default=0,
+                    help="decode steps per scheduler tick (0 = engine "
+                         "default)")
+    ap.add_argument("--max-prefill-batch", type=int, default=4,
+                    help="max prompts per prefill dispatch/chunk tick")
     ap.add_argument("--live-reschedule", action="store_true",
                     help="shift the workload mid-trace and let the "
                          "control plane apply a lightweight reschedule to "
@@ -110,6 +120,9 @@ def main():
                     num_pages=args.pages or None,
                     prefix_sharing=not (args.no_paged
                                         or args.no_prefix_sharing))
+    sched_cfg = SchedulerConfig(prefill_chunk_tokens=args.chunk_tokens,
+                                max_prefill_batch=args.max_prefill_batch,
+                                decode_chunk_steps=args.decode_chunk_steps)
     if args.live_reschedule:
         # one phase-switchable Replica per plan replica, so the control
         # plane can re-designate the running fleet without a reload; the
@@ -117,7 +130,7 @@ def main():
         # it with the cached engine, params stay resident)
         gw = gateway_from_plan(plan, cfg, params, transport=transport,
                                max_seq=96, max_slots=4,
-                               decode_kw=paged_kw,
+                               decode_kw=paged_kw, scheduler=sched_cfg,
                                profiler=WorkloadProfiler(
                                    in_scale=IN_SCALE, out_scale=OUT_SCALE),
                                compress=not args.no_compress, backend="ref")
@@ -133,6 +146,7 @@ def main():
                 for _ in range(min(n_dec, 4))]
         gw = Gateway(pres, decs, transport=transport,
                      orchestration=plan.orchestration,
+                     scheduler=sched_cfg,
                      compress=not args.no_compress, backend="ref")
 
     print("[3/4] serving the request stream (open loop, "
@@ -223,6 +237,10 @@ def main():
     print(f"  gateway: epoch={st['epoch']} retries={c['retries']} "
           f"requeues={c['requeues']} migrations={c['migrations']} "
           f"preemptions={c['preemptions']} failed={c['failed']}")
+    if args.chunk_tokens > 0:
+        print(f"  chunked prefill: {c['chunk_ticks']} chunk ticks, "
+              f"{c['chunked_prefills']} prompts chunked "
+              f"(budget {args.chunk_tokens} tok/tick)")
     if st["page_pool"]:
         print(f"  page pool (fleet): "
               f"{st['page_pool']['alloc_failures']:.0f} admission stalls, "

@@ -35,9 +35,8 @@ from repro.serving.prefix_cache import PrefixCache, PrefixMatch
 class GenRequest:
     """Engine-level unit of work: prompt in, ``out_tokens`` accumulate.
 
-    Engines never stamp the timestamp fields — they are populated from
-    the owning ``RequestHandle`` (``gateway.py``) by the deprecated
-    ``Coordinator`` shim for legacy callers."""
+    Engines never stamp the timestamp fields — they belong to the owning
+    ``RequestHandle`` (``gateway.py``)."""
     rid: int
     tokens: np.ndarray              # prompt token ids (1D)
     max_new_tokens: int
@@ -53,6 +52,94 @@ class GenRequest:
     prefix_pages: Optional[List[int]] = None
     prefix_wire: Optional[KVWire] = None
     prefix_replica: int = -1
+
+
+# -- unified admission API ----------------------------------------------------
+#
+# Every way a request can reach a decode replica is ONE call —
+# ``DecodeEngine.admit(AdmissionBatch)`` — with a typed per-item source
+# instead of four near-identical entry points (DESIGN.md §5):
+#
+#   FRESH       one-shot prefill wire; ``token`` is the first output
+#   CHUNKED     concatenated chunked-prefill wire; engine-side identical
+#               to FRESH (the wire already covers the whole prompt suffix)
+#   PREFIX_HIT  full prefix-cache hit; no wire — ``pages`` is the resident
+#               chain and ``token`` the known first output
+#   MIGRATED    mid-stream snapshot off a preempted replica; ``token`` is
+#               the RESUME token (already in ``out_tokens`` at the source,
+#               so it is not re-appended)
+
+ADMIT_FRESH = "FRESH"
+ADMIT_CHUNKED = "CHUNKED"
+ADMIT_PREFIX_HIT = "PREFIX_HIT"
+ADMIT_MIGRATED = "MIGRATED"
+
+
+@dataclass
+class AdmissionItem:
+    """One request entering continuous batching, tagged with how its KV
+    arrives. ``wire`` for FRESH/CHUNKED/MIGRATED; ``pages`` for
+    PREFIX_HIT."""
+    req: GenRequest
+    token: int
+    source: str = ADMIT_FRESH
+    wire: Optional[KVWire] = None
+    pages: Optional[List[int]] = None
+
+
+@dataclass
+class AdmissionBatch:
+    """Ordered admission attempt; admission is FIFO and stops at the
+    first item the page/slot budget cannot place — ``admit`` returns the
+    rejected tail as another ``AdmissionBatch``."""
+    items: List[AdmissionItem] = field(default_factory=list)
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    def __iter__(self):
+        return iter(self.items)
+
+    def __bool__(self) -> bool:
+        return bool(self.items)
+
+
+@dataclass
+class PartialPrefill:
+    """Resumable chunked-prefill state (SARATHI-style).
+
+    ``pos`` counts prompt tokens prefilled so far PAST the request's
+    ``start_pos`` (prefix-cache-resident tokens are never re-prefilled);
+    ``wires`` holds one RAW (uncompressed) suffix wire per completed
+    chunk. Chunk N+1 is a suffix prefill attending over the concatenation
+    of the request's prefix wire (if any) and the accumulated chunk wires
+    — the PR-8 machinery. The chunk wires stay raw so the resumable
+    prefix is the EXACT float KV the one-shot prefill would compute
+    (int4 round-tripping it perturbs near-tie logits and breaks token
+    parity); quantization happens ONCE, over the spliced whole, when the
+    job completes — which also makes the ``transport`` wire bit-identical
+    to a one-shot extraction. Once ``done``, ``first`` is the argmax at
+    the prompt's true last position and :meth:`wire` returns the
+    admission wire."""
+    req: GenRequest
+    pos: int = 0
+    wires: List[KVWire] = field(default_factory=list)
+    first: int = -1
+    done: bool = False
+    transport: Optional[KVWire] = None
+
+    @property
+    def next_pos(self) -> int:
+        return self.req.start_pos + self.pos
+
+    @property
+    def remaining(self) -> int:
+        return len(self.req.tokens) - self.next_pos
+
+    def wire(self) -> KVWire:
+        if self.transport is not None:
+            return self.transport
+        return kv_transfer.concat_wires(self.wires)
 
 
 def _next_pow2(n: int) -> int:
@@ -154,6 +241,60 @@ class PrefillEngine:
                 out.extend(self._run_exact(normal, compress=compress,
                                            backend=backend))
         return out
+
+    def prefill_chunk(self, jobs: List[PartialPrefill], budget: int, *,
+                      compress: bool = True, backend: str = "auto"
+                      ) -> List[PartialPrefill]:
+        """Advance chunked prefills by up to ``budget`` prompt tokens
+        TOTAL across ``jobs`` (FIFO), one model call per tick.
+
+        Each job's next chunk is a suffix prefill over the concat of its
+        accumulated RAW chunk wires (plus any prefix-cache wire) — exact
+        float KV, so the suffix attends over the same values a one-shot
+        prefill computes in-cache and greedy decoding after chunking
+        emits the SAME tokens. The admission wire is quantized once,
+        over the spliced whole, when a job completes (``compress=True``),
+        which is bit-identical to compressing a one-shot extraction.
+        Engines that cannot slice state at a position boundary (recurrent
+        state, SWA) run each job to completion in one shot — the budget
+        degrades to an admission hint. Mutates and returns ``jobs``."""
+        left = max(int(budget), 0)
+        work = []                       # (job, clone, take)
+        for job in jobs:
+            if job.done or job.remaining <= 0 or left <= 0:
+                continue
+            take = (min(job.remaining, left) if self.supports_suffix
+                    else job.remaining)
+            left -= min(take, left)
+            req = job.req
+            upto = job.next_pos + take
+            clone = GenRequest(req.rid, np.asarray(req.tokens)[:upto],
+                               req.max_new_tokens, extras=req.extras)
+            if job.next_pos > 0:
+                parts = ([req.prefix_wire]
+                         if req.start_pos > 0 and req.prefix_wire is not None
+                         else []) + job.wires
+                clone.start_pos = job.next_pos
+                clone.prefix_wire = kv_transfer.concat_wires(
+                    parts, backend=backend)
+            work.append((job, clone, take))
+        if not work:
+            return jobs
+        by_clone = {id(c): (job, take) for job, c, take in work}
+        # chunks extract RAW: the resumable prefix must be exact floats
+        for clone, wire, first in self.run([c for _, c, _ in work],
+                                           compress=False,
+                                           backend=backend):
+            job, take = by_clone[id(clone)]
+            job.wires.append(wire)
+            job.pos += take
+            if job.next_pos >= len(job.req.tokens):
+                job.done = True
+                job.first = int(first)
+                full = kv_transfer.concat_wires(job.wires)
+                job.transport = (kv_transfer.compress_wire(
+                    full, backend=backend) if compress else full)
+        return jobs
 
     def _run_exact(self, reqs, *, compress, backend):
         """Group by exact prompt length (no padding ever enters attention);
@@ -399,50 +540,90 @@ class DecodeEngine:
             pages = self.pool.alloc(n, owner)
         return pages
 
-    def admit(self, req: GenRequest, wire: KVWire, first_token: int,
-              *, backend: str = "auto") -> bool:
-        rejected = self.admit_batch([(req, wire, first_token)],
-                                    backend=backend)
-        return not rejected
+    def admit(self, batch, wire: Optional[KVWire] = None,
+              first_token: Optional[int] = None, *,
+              backend: str = "auto"):
+        """Unified admission: one FIFO pass over an :class:`AdmissionBatch`
+        whose items carry a typed source (FRESH | CHUNKED | PREFIX_HIT |
+        MIGRATED); returns the rejected tail as an ``AdmissionBatch``.
+
+        Admission stops at the first item capacity cannot place. Dense:
+        one request per free slot, all wires inserted in ONE batched
+        dequant launch. Paged: ALL-OR-NOTHING per request on the page
+        budget — ``ceil((prompt + max_new)/page_size)`` pages reserved up
+        front so an admitted stream can never die of a mid-decode page
+        fault; PREFIX_HIT items share their resident chain (COW-splitting
+        the boundary page when the prompt ends mid-page) and wire items
+        scatter in one ``insert_wires`` launch.
+
+        DEPRECATED (one-PR shim): ``admit(req, wire, first_token) ->
+        bool`` still admits a single FRESH request."""
+        if not isinstance(batch, AdmissionBatch):
+            rejected = self.admit(AdmissionBatch([AdmissionItem(
+                batch, int(first_token), ADMIT_FRESH, wire=wire)]),
+                backend=backend)
+            return not rejected
+        items = list(batch.items)
+        if _sanitize_enabled() and self.paged:
+            # a migrated wire re-encoding (instead of zero-copy page
+            # scatter) means extract_slot_wire/insert_wires drifted apart
+            from repro.analysis.sanitizers import check_wire_alignment
+            for it in items:
+                if it.source == ADMIT_MIGRATED:
+                    check_wire_alignment(it.wire, self.cfg,
+                                         context=f"admit MIGRATED "
+                                                 f"rid={it.req.rid}")
+        if self.paged:
+            n = self._admit_paged(items, backend=backend)
+        else:
+            n = self._admit_dense(items, backend=backend)
+        return AdmissionBatch(items[n:])
 
     def admit_batch(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
                     *, backend: str = "auto"
                     ) -> List[Tuple[GenRequest, KVWire, int]]:
-        """Admit as many requests as the engine has capacity for. Dense:
-        one per free slot (batched KV insert: one dequant kernel launch
-        per packed shape across ALL admitted wires). Paged: admission is
-        ALL-OR-NOTHING per request on the page budget — each request
-        reserves ``ceil((prompt + max_new)/page_size)`` pages up front, so
-        an admitted stream can never die of a mid-decode page fault.
-        Returns the rejected tail (FIFO order preserved)."""
-        if self.paged:
-            return self._admit_batch_paged(items, backend=backend)
-        free = self.free_slots()
-        take = list(items[:len(free)])
-        if take:
-            self.cache = kv_transfer.insert_batch(
-                self.cache, [(wire, slot) for (_, wire, _), slot
-                             in zip(take, free)], backend=backend)
-            for (req, _, first), slot in zip(take, free):
-                self.slots[slot] = req
-                self.cur_token[slot] = first
-                req.out_tokens.append(first)
-        return list(items[len(free):])
+        """DEPRECATED (one-PR shim): FRESH-source form of :meth:`admit`."""
+        rejected = self.admit(AdmissionBatch(
+            [AdmissionItem(r, int(f), ADMIT_FRESH, wire=w)
+             for r, w, f in items]), backend=backend)
+        return [(it.req, it.wire, it.token) for it in rejected.items]
 
-    def _admit_batch_paged(self, items, *, backend, migrated: bool = False):
-        if migrated and _sanitize_enabled():
-            # a migrated wire re-encoding (instead of zero-copy page
-            # scatter) means extract_slot_wire/insert_wires drifted apart
-            from repro.analysis.sanitizers import check_wire_alignment
-            for req, wire, _ in items:
-                check_wire_alignment(wire, self.cfg,
-                                     context=f"admit_migrated "
-                                             f"rid={req.rid}")
-        free = [i for i, s in enumerate(self.slots) if s is None]
+    def _admit_dense(self, items: List[AdmissionItem], *, backend) -> int:
+        free = self.free_slots()
         placed = []
-        for req, wire, first in items:
+        for it in items:
+            if not free or it.source == ADMIT_PREFIX_HIT:
+                break       # page-handle admission needs the paged pool
+            placed.append((it, free.pop(0)))
+        if placed:
+            self.cache = kv_transfer.insert_batch(
+                self.cache, [(it.wire, slot) for it, slot in placed],
+                backend=backend)
+            for it, slot in placed:
+                self.slots[slot] = it.req
+                self.cur_token[slot] = it.token
+                if it.source != ADMIT_MIGRATED:
+                    it.req.out_tokens.append(it.token)
+        return len(placed)
+
+    def _admit_paged(self, items: List[AdmissionItem], *, backend) -> int:
+        n_taken = 0
+        placed = []                      # wire-carrying placements
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        for it in items:
+            if it.source == ADMIT_PREFIX_HIT:
+                # full hit: chain is resident, prefill was skipped —
+                # placed inline (page copies, no wire insert)
+                if not self._admit_one_prefix(it.req, it.pages or [],
+                                              it.token):
+                    break
+                free = [i for i, s in enumerate(self.slots) if s is None]
+                n_taken += 1
+                continue
             if not free:
                 break
+            req, wire = it.req, it.wire
+            migrated = it.source == ADMIT_MIGRATED
             # partial prefix hit: the wire covers only the suffix; the
             # shared prefix chain is already resident — share it under
             # this slot and splice suffix pages after it
@@ -465,26 +646,27 @@ class DecodeEngine:
                     self.pool.free(pages, owner=free[0])
                     break
             slot = free.pop(0)
-            placed.append((req, wire, first, slot, pages, prefix))
+            placed.append((it, slot, pages, prefix))
+            n_taken += 1
         if placed:
             self.cache, nz, nr = page_pool.insert_wires(
                 self.cache, self.cfg,
-                [(w, s, p, pre) for (_, w, _, s, p, pre) in placed],
+                [(it.wire, s, p, pre) for it, s, p, pre in placed],
                 backend=backend)
             self.zero_copy_inserts += nz
             self.reencoded_inserts += nr
-            for req, _, first, slot, pages, prefix in placed:
-                self.slots[slot] = req
+            for it, slot, pages, prefix in placed:
+                self.slots[slot] = it.req
                 self._slot_pages[slot] = prefix + pages
-                self.cur_token[slot] = first
-                if not migrated:
-                    req.out_tokens.append(first)
+                self.cur_token[slot] = it.token
+                if it.source != ADMIT_MIGRATED:
+                    it.req.out_tokens.append(it.token)
                 # only freshly ALLOCATED pages count toward the per-request
                 # page-need estimate: shared prefixes cost no free pages,
                 # which is exactly the capacity gain free_slots() credits
                 self._need_sum += len(pages)
                 self._need_n += 1
-        return list(items[len(placed):])
+        return n_taken
 
     # -- prefix sharing -----------------------------------------------------
 
@@ -518,6 +700,13 @@ class DecodeEngine:
 
     def admit_prefix(self, req: GenRequest, pages: List[int],
                      next_token: int) -> bool:
+        """DEPRECATED (one-PR shim): PREFIX_HIT form of :meth:`admit`."""
+        rejected = self.admit(AdmissionBatch([AdmissionItem(
+            req, int(next_token), ADMIT_PREFIX_HIT, pages=list(pages))]))
+        return not rejected
+
+    def _admit_one_prefix(self, req: GenRequest, pages: List[int],
+                          next_token: int) -> bool:
         """Admit a FULL prefix hit: every prompt token's KV is already
         resident in ``pages`` and ``next_token`` is the known first
         output, so prefill is skipped entirely — zero transfer, zero
@@ -627,23 +816,13 @@ class DecodeEngine:
     def admit_migrated(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
                        *, backend: str = "auto"
                        ) -> List[Tuple[GenRequest, KVWire, int]]:
-        """Admit mid-stream requests migrated off another decode replica:
-        like ``admit_batch`` but the third element is the *resume* token
-        (``cur_token``) — already in ``out_tokens`` on the source, so it is
-        NOT re-appended. Returns the rejected tail."""
-        if self.paged:
-            return self._admit_batch_paged(items, backend=backend,
-                                           migrated=True)
-        free = self.free_slots()
-        take = list(items[:len(free)])
-        if take:
-            self.cache = kv_transfer.insert_batch(
-                self.cache, [(wire, slot) for (_, wire, _), slot
-                             in zip(take, free)], backend=backend)
-            for (req, _, cur), slot in zip(take, free):
-                self.slots[slot] = req
-                self.cur_token[slot] = cur
-        return list(items[len(free):])
+        """DEPRECATED (one-PR shim): MIGRATED form of :meth:`admit` — the
+        third element is the *resume* token (``cur_token``), already in
+        ``out_tokens`` at the source, so it is NOT re-appended."""
+        rejected = self.admit(AdmissionBatch(
+            [AdmissionItem(r, int(t), ADMIT_MIGRATED, wire=w)
+             for r, w, t in items]), backend=backend)
+        return [(it.req, it.wire, it.token) for it in rejected.items]
 
     def _free_pages_of(self, slot: int):
         pages = self._slot_pages.pop(slot, [])

@@ -34,8 +34,12 @@ realization (each replica = a pod slice driven over the wire) slots in
 without touching routing, heartbeats, or rescheduling logic
 (DESIGN.md §5).
 
-The legacy ``Coordinator`` entry points remain as a thin deprecated shim
-over this class (``repro.serving.coordinator``).
+Scheduling (DESIGN.md §11): each ``pump()`` is one token-budget tick —
+with ``SchedulerConfig.prefill_chunk_tokens > 0`` pending prefill runs
+as fixed-token CHUNKS (SARATHI-style continuous batching: a long prompt
+no longer head-of-line-blocks TTFT for everyone behind it) interleaved
+with one decode chunk per replica, and admissions/evictions happen at
+the chunk boundary in between.
 """
 from __future__ import annotations
 
@@ -52,8 +56,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import scheduler as sched
 from repro.core.orchestrator import Orchestration, SloSpec
-from repro.serving.engine import (DecodeEngine, GenRequest, PrefillEngine,
-                                  Replica)
+from repro.serving.engine import (ADMIT_CHUNKED, ADMIT_FRESH,
+                                  ADMIT_MIGRATED, ADMIT_PREFIX_HIT,
+                                  AdmissionBatch, AdmissionItem,
+                                  DecodeEngine, GenRequest, PartialPrefill,
+                                  PrefillEngine, Replica)
 from repro.serving.faults import (ReplicaCrashError, RetryPolicy,
                                   TransientTransportError)
 from repro.serving.kv_transfer import KVWire
@@ -236,6 +243,35 @@ class RequestHandle:
                             and self.e2e <= r.e2e_deadline_s)}
 
 
+# -- scheduler configuration --------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Token-budget scheduler knobs in ONE place (replaces the scattered
+    ``pump(max_prefill_batch=...)`` kwarg and per-call admission tuning).
+
+    ``prefill_chunk_tokens = 0`` keeps the legacy one-shot prefill; any
+    positive budget turns each pump tick into a SARATHI-style schedule:
+    up to that many prompt tokens of pending prefill run per prefill
+    replica per tick (long prompts split across ticks, short prompts slip
+    in between their chunks), then every decode replica advances one
+    chunk. The dispatch order is ``priority_weight * priority +
+    age_weight * seconds_waited`` (descending; FIFO tiebreak), so the
+    defaults reproduce the old ``(-priority, t_submit)`` sort. Within a
+    chunk tick the SAME key orders the in-flight job set, with
+    shortest-remaining-prefill breaking ties — a freshly injected short
+    prompt finishes inside its first tick instead of queueing its whole
+    budget share behind a long prompt's leftover chunks (raise
+    ``age_weight`` if long prompts must not yield under sustained
+    short-prompt pressure)."""
+    prefill_chunk_tokens: int = 0    # 0 = one-shot prefill (legacy)
+    max_prefill_batch: int = 4       # concurrent prompts per prefill call
+    decode_chunk_steps: int = 0      # 0 = the engine's own chunk_size
+    priority_weight: float = 1.0
+    age_weight: float = 0.0
+
+
 # -- replica clients ----------------------------------------------------------
 
 
@@ -248,15 +284,29 @@ class PrefillClient(Protocol):
                 backend: str) -> List[Tuple[GenRequest, KVWire, int]]:
         ...
 
+    def prefill_chunk(self, jobs: List[PartialPrefill], budget: int, *,
+                      compress: bool, backend: str) -> List[PartialPrefill]:
+        """Advance chunked prefills by up to ``budget`` prompt tokens
+        total; completed jobs come back ``done`` with their first token
+        (RPC realization: jobs are sticky to this replica — the
+        accumulated chunk wires live here)."""
+        ...
+
 
 class DecodeClient(Protocol):
     """Everything the gateway needs from a decode replica."""
 
-    def admit(self, items: Sequence[Tuple[GenRequest, KVWire, int]], *,
-              backend: str) -> List[Tuple[GenRequest, KVWire, int]]:
+    def admit(self, batch: AdmissionBatch, *,
+              backend: str) -> AdmissionBatch:
+        """THE admission call: one FIFO pass over typed items (FRESH |
+        CHUNKED | PREFIX_HIT | MIGRATED — see ``engine.AdmissionItem``);
+        returns the rejected tail. The RPC mapping is one request
+        carrying per-item sources (DESIGN.md §5); the legacy
+        ``admit_batch``/``admit_prefix``/``admit_migrated`` variants are
+        one-PR deprecation shims."""
         ...
 
-    def step(self) -> List[GenRequest]:
+    def step(self, n_steps: Optional[int] = None) -> List[GenRequest]:
         ...
 
     def n_free(self) -> int:
@@ -278,11 +328,8 @@ class DecodeClient(Protocol):
 
     def extract_resident(self, *, compress: bool, backend: str):
         """(slot, req, wire, cur_token) snapshot of every resident request
-        — the migration source side of a preemption drain."""
-        ...
-
-    def admit_migrated(self, items, *, backend: str):
-        """Admit mid-stream migrated requests (no first-token append)."""
+        — the migration source side of a preemption drain (re-admitted on
+        the target as MIGRATED items through :meth:`admit`)."""
         ...
 
     def page_stats(self) -> Optional[Dict[str, float]]:
@@ -296,7 +343,6 @@ class DecodeClient(Protocol):
     #   prefix_match(tokens) -> Optional[PrefixMatch]
     #   prefix_pin(pages, tag) -> bool / prefix_unpin(tag)
     #   extract_prefix(pages, length) -> KVWire
-    #   admit_prefix(req, pages, next_token) -> bool
 
 
 class LocalPrefillClient:
@@ -309,6 +355,10 @@ class LocalPrefillClient:
 
     def prefill(self, reqs, *, compress, backend):
         return self.engine.run(reqs, compress=compress, backend=backend)
+
+    def prefill_chunk(self, jobs, budget, *, compress, backend):
+        return self.engine.prefill_chunk(jobs, budget, compress=compress,
+                                         backend=backend)
 
     def supports_suffix(self) -> bool:
         return self.engine.supports_suffix
@@ -325,11 +375,14 @@ class LocalDecodeClient:
     def __init__(self, engine: DecodeEngine):
         self.engine = engine
 
-    def admit(self, items, *, backend):
-        return self.engine.admit_batch(items, backend=backend)
+    def admit(self, batch, *, backend):
+        if isinstance(batch, AdmissionBatch):
+            return self.engine.admit(batch, backend=backend)
+        # DEPRECATED (one-PR shim): list of (req, wire, first) tuples
+        return self.engine.admit_batch(batch, backend=backend)
 
-    def step(self):
-        return self.engine.step()
+    def step(self, n_steps=None):
+        return self.engine.step(n_steps)
 
     def n_free(self) -> int:
         return len(self.engine.free_slots())
@@ -418,17 +471,25 @@ class LocalReplicaClient:
         return self._require("prefill").run(reqs, compress=compress,
                                             backend=backend)
 
+    def prefill_chunk(self, jobs, budget, *, compress, backend):
+        return self._require("prefill").prefill_chunk(
+            jobs, budget, compress=compress, backend=backend)
+
     def supports_suffix(self) -> bool:
         return (self.replica.phase == "prefill"
                 and self.replica.engine.supports_suffix)
 
     # -- DecodeClient --------------------------------------------------------
 
-    def admit(self, items, *, backend):
-        return self._require("decode").admit_batch(items, backend=backend)
+    def admit(self, batch, *, backend):
+        eng = self._require("decode")
+        if isinstance(batch, AdmissionBatch):
+            return eng.admit(batch, backend=backend)
+        # DEPRECATED (one-PR shim): list of (req, wire, first) tuples
+        return eng.admit_batch(batch, backend=backend)
 
-    def step(self):
-        return self._require("decode").step()
+    def step(self, n_steps=None):
+        return self._require("decode").step(n_steps)
 
     def n_free(self) -> int:
         return len(self._require("decode").free_slots())
@@ -568,6 +629,7 @@ class _Transfer:
     first: int               # first token (normal) / resume token (migrated)
     target: int
     migrated: bool = False   # mid-stream KV migration, not a fresh prefill
+    chunked: bool = False    # wire spliced from prefill chunks
     # full prefix-cache hit: the "wire" is a handle onto pages already
     # resident on ``target`` — admission shares the chain, zero transfer
     prefix_full: bool = False
@@ -579,6 +641,26 @@ class _Transfer:
         (page handles / suffix wires splicing onto pinned pages) — it is
         never rerouted, only requeued through prefill."""
         return self.prefix_full or self.handle.req.start_pos > 0
+
+    def admission_item(self) -> AdmissionItem:
+        """The typed item this transfer becomes at the decode boundary."""
+        if self.prefix_full:
+            return AdmissionItem(self.handle.req, int(self.first),
+                                 ADMIT_PREFIX_HIT,
+                                 pages=list(self.prefix_pages or []))
+        src = (ADMIT_MIGRATED if self.migrated
+               else ADMIT_CHUNKED if self.chunked else ADMIT_FRESH)
+        return AdmissionItem(self.handle.req, int(self.first), src,
+                             wire=self.ticket.wire)
+
+
+@dataclass
+class _ChunkJob:
+    """An in-flight chunked prefill, sticky to the prefill replica whose
+    jit caches (and accumulated chunk wires) it lives on."""
+    handle: RequestHandle
+    partial: PartialPrefill
+    pre: ReplicaHandle
 
 
 @dataclass
@@ -618,8 +700,10 @@ class Gateway:
                  max_restarts: int = 5,
                  suspect_timeout: Optional[float] = None,
                  suspect_latency_factor: float = 4.0,
-                 suspect_probe_s: float = 1.0):
+                 suspect_probe_s: float = 1.0,
+                 scheduler: Optional[SchedulerConfig] = None):
         self.clock = clock               # injectable time source (faults.py)
+        self.scheduler = scheduler or SchedulerConfig()
         self.pre = [ReplicaHandle(i, "prefill", _as_prefill_client(e),
                                   last_heartbeat=clock())
                     for i, e in enumerate(prefills)]
@@ -647,6 +731,9 @@ class Gateway:
         self.profiler = profiler or WorkloadProfiler(clock=clock)
         self.queue: List[RequestHandle] = []
         self.transfer_queue: List[_Transfer] = []
+        self._chunks: List[_ChunkJob] = []   # in-flight chunked prefills
+        self.n_chunk_ticks = 0               # prefill_chunk calls issued
+        self.n_chunked_prefills = 0          # prompts completed chunked
         self.done: List[RequestHandle] = []
         self.events: List[str] = []
         self._by_req: Dict[int, RequestHandle] = {}   # id(GenRequest) -> h
@@ -856,6 +943,7 @@ class Gateway:
                                if t.handle is not h]
         self.retry_queue = [r for r in self.retry_queue
                             if r.handle is not h]
+        self._chunks = [c for c in self._chunks if c.handle is not h]
         if h.state == DECODING:
             for d in self.dec:
                 if d.client.release(h.req):
@@ -909,8 +997,19 @@ class Gateway:
 
     # -- event loop ---------------------------------------------------------
 
-    def pump(self, *, max_prefill_batch: int = 4) -> int:
-        """One gateway iteration; returns #finished this round."""
+    def pump(self, *, max_prefill_batch: Optional[int] = None) -> int:
+        """One token-budget scheduler tick; returns #finished this round.
+
+        With ``scheduler.prefill_chunk_tokens > 0`` each tick packs up to
+        that many prompt tokens of pending prefill per prefill replica
+        (chunked — a long prompt spreads over many ticks while short
+        prompts behind it complete and reach decode in between) plus one
+        decode chunk per decode replica, with transfers admitted and
+        finished slots evicted at the chunk boundary in between. With a
+        zero budget, prefill is one-shot per prompt (legacy behavior).
+
+        ``max_prefill_batch`` is a DEPRECATED one-PR override of
+        ``scheduler.max_prefill_batch``."""
         if self.chaos is not None:
             self.chaos.tick(self.clock())
         if self._pending_failover:
@@ -922,21 +1021,10 @@ class Gateway:
         self._flush_retries(now)
         # 1. dispatch queued prompts: drain EVERY routable prefill replica
         #    this round (the TSTP masses only order who gets fed first)
-        if self.queue:
-            self.queue.sort(key=lambda h: (-h.request.priority, h.t_submit))
-            X = self._X()
-            cand = [i for i in range(len(self.pre))
-                    if self.pre[i].alive and X[i] > 0]
-            if len(cand) > 1:
-                p = X[cand] / X[cand].sum()
-                cand = [int(i) for i in self.rng.choice(
-                    cand, size=len(cand), replace=False, p=p)]
-            for i in cand:
-                if not self.queue:
-                    break
-                batch = self.queue[:max_prefill_batch]
-                self.queue = self.queue[max_prefill_batch:]
-                self._dispatch_prefill(i, batch)
+        batch_cap = (max_prefill_batch if max_prefill_batch is not None
+                     else self.scheduler.max_prefill_batch)
+        if self.queue or self._chunks:
+            self._dispatch_round(batch_cap, now)
         # 2. drain KV transfers whose wires have arrived into decode slots
         #    (prefill-side queueing: wires wait here if the target has no
         #    free slot, cf. Appendix E)
@@ -944,6 +1032,87 @@ class Gateway:
         # 3. advance every decode replica one chunk of steps; stream every
         #    newly emitted token to its handle
         return self._step_decodes()
+
+    def _dispatch_round(self, batch_cap: int, now: float):
+        if self.queue:
+            w_p = self.scheduler.priority_weight
+            w_a = self.scheduler.age_weight
+            self.queue.sort(key=lambda h: (
+                -(w_p * h.request.priority + w_a * (now - h.t_submit)),
+                h.t_submit))
+        X = self._X()
+        cand = [i for i in range(len(self.pre))
+                if self.pre[i].alive and X[i] > 0]
+        if len(cand) > 1:
+            p = X[cand] / X[cand].sum()
+            cand = [int(i) for i in self.rng.choice(
+                cand, size=len(cand), replace=False, p=p)]
+        budget = self.scheduler.prefill_chunk_tokens
+        for i in cand:
+            if not self.queue and not self._chunks:
+                break
+            if budget > 0 and self._suffix_ok(self.pre[i]):
+                self._pump_chunks(self.pre[i], batch_cap, budget)
+            elif self.queue:
+                batch = self.queue[:batch_cap]
+                self.queue = self.queue[batch_cap:]
+                self._dispatch_prefill(i, batch)
+
+    def _pump_chunks(self, pre: ReplicaHandle, batch_cap: int,
+                     budget: int):
+        """One chunked-prefill tick on replica ``pre``: top up its active
+        job set from the queue (injection happens HERE, at a chunk
+        boundary — no prompt waits for another prompt to finish), run one
+        ``prefill_chunk`` call of up to ``budget`` tokens, and ship a
+        spliced wire for every prompt that completed."""
+        mine = [c for c in self._chunks if c.pre is pre]
+        while self.queue and len(mine) < batch_cap:
+            h = self.queue.pop(0)
+            if h.req.start_pos > 0:
+                # stale partial-hit annotation: only honored while the
+                # pinned decode replica still takes work
+                j = h.req.prefix_replica
+                if not (0 <= j < len(self.dec)) \
+                        or not self.dec[j].dispatchable:
+                    self._release_prefix(h)
+            h._transition(PREFILLING, self.clock())
+            c = _ChunkJob(h, PartialPrefill(h.req), pre)
+            self._chunks.append(c)
+            mine.append(c)
+        if not mine:
+            return
+        t0 = self.clock()
+        # budget flows in dispatch-priority order, shortest remaining
+        # prefill first among ties: a short prompt injected this tick
+        # completes NOW, the long prompt soaks up the leftover budget
+        mine.sort(key=lambda c: (
+            -(self.scheduler.priority_weight * c.handle.request.priority
+              + self.scheduler.age_weight * (t0 - c.handle.t_submit)),
+            c.partial.remaining, c.handle.t_submit))
+        try:
+            pre.client.prefill_chunk([c.partial for c in mine], budget,
+                                     compress=self.compress,
+                                     backend=self.backend)
+        except ReplicaCrashError as e:
+            self._confirm_dead(pre, str(e))
+            now = self.clock()
+            for c in mine:
+                if c in self._chunks:
+                    self._chunks.remove(c)
+                self._requeue_handle(c.handle, now,
+                                     f"prefill:{pre.idx} crashed mid-chunk")
+            return
+        t1 = self.clock()
+        self.n_chunk_ticks += 1
+        self._track(pre, t1 - t0, t1)
+        for c in mine:
+            if not c.partial.done:
+                continue
+            self._chunks.remove(c)
+            self.n_chunked_prefills += 1
+            c.handle._transition(TRANSFERRING, t1)
+            self._send_wire(c.handle, c.partial.wire(), c.partial.first,
+                            pre.idx, t1, chunked=True)
 
     def _dispatch_prefill(self, i: int, batch: List[RequestHandle]):
         t0 = self.clock()
@@ -979,7 +1148,8 @@ class Gateway:
     # -- transient-fault retry (bounded backoff + jitter) --------------------
 
     def _send_wire(self, h: RequestHandle, wire: KVWire, first: int,
-                   src: int, now: float, attempt: int = 0):
+                   src: int, now: float, attempt: int = 0,
+                   chunked: bool = False):
         """Ship one wire toward a routable decode replica. A transient
         transport fault schedules a retry instead of losing the request;
         with no alive decode replica the target is a placeholder and
@@ -1002,7 +1172,8 @@ class Gateway:
         except TransientTransportError as e:
             self._schedule_retry(h, wire, first, src, attempt, now, str(e))
             return
-        self.transfer_queue.append(_Transfer(h, ticket, first, j))
+        self.transfer_queue.append(
+            _Transfer(h, ticket, first, j, chunked=chunked))
 
     def _schedule_retry(self, h: RequestHandle, wire: KVWire, first: int,
                         src: int, attempt: int, now: float, why: str):
@@ -1069,87 +1240,41 @@ class Gateway:
             by_target.setdefault(j, []).append(t)
         still = in_flight
         for j, items in by_target.items():
-            mig = [t for t in items if t.migrated]
+            # one admission RPC per target, source-typed per item — the
+            # engine places what fits FIFO and hands back the rejected
+            # tail, which stays queued until capacity frees up (full
+            # prefix hits need no wire: the chain is shared into a fresh
+            # slot, COW if the prompt ends mid-page, so TTFT is pure
+            # queueing)
             pfx = [t for t in items if t.prefix_full]
-            norm = [t for t in items if not t.migrated and not t.prefix_full]
-            if pfx:
-                still.extend(self._admit_prefix_hits(j, pfx))
-            n_free = self.dec[j].client.n_free()
-            take, rest = norm[:n_free], norm[n_free:]
-            if take:
-                try:
-                    rejected = self.dec[j].client.admit(
-                        [(t.handle.req, t.ticket.wire, t.first)
-                         for t in take], backend=self.backend)
-                except ReplicaCrashError as e:
-                    self._confirm_dead(self.dec[j], str(e))
-                    still.extend(rest + take + mig)   # retry next pump
-                    continue
-                rej_reqs = {id(r) for r, _, _ in rejected}
-                t_adm = self.clock()
-                for t in take:
-                    if id(t.handle.req) in rej_reqs:
-                        rest.append(t)
-                        continue
-                    t.handle._transition(DECODING, t_adm)
-                    self._sync_tokens(t.handle, t_adm)
-                    if t.handle.req.start_pos > 0:
-                        # suffix wire spliced: the slot now holds its own
-                        # references on the prefix chain — drop the pin
-                        self._release_prefix(t.handle)
-            if mig:
-                # migrated wires resume mid-stream: admit_migrated does
-                # its own capacity check and never re-appends the resume
-                # token; a rejected wire stays queued until the target
-                # frees capacity (or its target dies -> reroute)
-                try:
-                    rejected = self.dec[j].client.admit_migrated(
-                        [(t.handle.req, t.ticket.wire, t.first)
-                         for t in mig], backend=self.backend)
-                except ReplicaCrashError as e:
-                    self._confirm_dead(self.dec[j], str(e))
-                    still.extend(rest + mig)
-                    continue
-                rej_reqs = {id(r) for r, _, _ in rejected}
-                t_adm = self.clock()
-                for t in mig:
-                    if id(t.handle.req) in rej_reqs:
-                        rest.append(t)
-                        continue
-                    t.handle._transition(DECODING, t_adm)
-            still.extend(rest)
-        self.transfer_queue = still
-
-    def _admit_prefix_hits(self, j: int, items: List[_Transfer]
-                           ) -> List[_Transfer]:
-        """Admit full prefix hits on their pinned replica: the chain is
-        shared into a fresh slot (copy-on-write if the prompt ends
-        mid-page) and decode resumes from the known next token — no wire,
-        no dequant, TTFT is pure queueing. Returns transfers to keep
-        queued (no slot/page headroom yet)."""
-        rest: List[_Transfer] = []
-        ap = getattr(self.dec[j].client, "admit_prefix", None)
-        for k, t in enumerate(items):
-            if not callable(ap):
-                self._requeue_handle(t.handle, self.clock(),
-                                     "(replica lost prefix support)")
-                continue
+            mig = [t for t in items if t.migrated]
+            norm = [t for t in items
+                    if not t.migrated and not t.prefix_full]
+            ordered = pfx + norm + mig
             try:
-                ok = ap(t.handle.req, t.prefix_pages, t.first)
+                rejected = self.dec[j].client.admit(
+                    AdmissionBatch([t.admission_item() for t in ordered]),
+                    backend=self.backend)
             except ReplicaCrashError as e:
                 self._confirm_dead(self.dec[j], str(e))
-                # the dead-target bound-transfer path requeues these on
-                # the next pump
-                rest.extend(items[k:])
-                break
-            if ok:
-                t_adm = self.clock()
+                still.extend(ordered)        # retry next pump
+                continue
+            rej = {id(it.req) for it in rejected.items}
+            t_adm = self.clock()
+            for t in ordered:
+                if id(t.handle.req) in rej:
+                    still.append(t)
+                    continue
                 t.handle._transition(DECODING, t_adm)
-                self._sync_tokens(t.handle, t_adm)
-                self._release_prefix(t.handle)
-            else:
-                rest.append(t)
-        return rest
+                if not t.migrated:
+                    # migrated wires resume mid-stream: the resume token
+                    # is never re-appended, so there is nothing to sync
+                    self._sync_tokens(t.handle, t_adm)
+                if t.prefix_full or t.handle.req.start_pos > 0:
+                    # prefix chain shared/spliced: the slot now holds its
+                    # own references — drop the pin
+                    self._release_prefix(t.handle)
+        self.transfer_queue = still
 
     def _step_decodes(self) -> int:
         n_done = 0
@@ -1157,8 +1282,10 @@ class Gateway:
             if not handle.alive:
                 continue
             t0 = self.clock()
+            ns = self.scheduler.decode_chunk_steps
             try:
-                finished = handle.client.step()
+                finished = (handle.client.step(n_steps=ns) if ns
+                            else handle.client.step())
             except ReplicaCrashError as e:
                 self._confirm_dead(handle, str(e))
                 continue
@@ -1228,12 +1355,13 @@ class Gateway:
         """Drive until every submitted request is terminal (or decode is
         wedged); returns terminal handles in completion order."""
         it = 0
-        while (self.queue or self.transfer_queue or self.retry_queue
+        while (self.queue or self._chunks or self.transfer_queue
+               or self.retry_queue
                or any(d.alive and d.client.active for d in self.dec)) \
                 and it < max_iters:
             n = self.pump()
             it += 1
-            if n == 0 and not self.queue \
+            if n == 0 and not self.queue and not self._chunks \
                     and (self.transfer_queue or self.retry_queue) \
                     and not any(d.alive and d.client.active
                                 for d in self.dec):
@@ -1351,9 +1479,16 @@ class Gateway:
         ``restarts``) and they re-enter the queue for a fresh prefill on a
         surviving replica. A request past ``max_restarts`` FAILs instead
         of looping forever."""
-        if h.phase != "decode":
-            return
         now = self.clock()
+        if h.phase == "prefill":
+            # partially-prefilled chunk jobs lose their accumulated wires
+            # with the replica — back through the queue for a fresh start
+            lost = [c for c in self._chunks if c.pre is h]
+            self._chunks = [c for c in self._chunks if c.pre is not h]
+            for c in lost:
+                self._requeue_handle(c.handle, now,
+                                     f"after prefill:{h.idx} failure")
+            return
         for req in h.client.resident():
             h.client.release(req)
             hd = self._by_req.get(id(req))
@@ -1573,6 +1708,7 @@ class Gateway:
         out = {
             "epoch": self.epoch,
             "queued": len(self.queue),
+            "chunks_in_flight": len(self._chunks),
             "transfers_in_flight": len(self.transfer_queue),
             "retries_pending": len(self.retry_queue),
             "counters": {"retries": self.n_retries,
@@ -1580,6 +1716,8 @@ class Gateway:
                          "migrations": self.n_migrations,
                          "migrated_tokens": self.n_migrated_tokens,
                          "preemptions": self.n_preemptions,
+                         "chunk_ticks": self.n_chunk_ticks,
+                         "chunked_prefills": self.n_chunked_prefills,
                          "failed": self.n_failed},
             "page_pool": pool,
             "prefix": prefix,
@@ -1753,6 +1891,15 @@ class Gateway:
                     self._release_prefix(h)
                 else:
                     r.prefix_replica = j
+        # in-flight chunk jobs are sticky to their prefill replica (the
+        # accumulated KV lives there): if it flipped away or died, restart
+        # through the queue
+        live_pre = {id(p) for p in self.pre if p.dispatchable}
+        for c in list(self._chunks):
+            if id(c.pre) not in live_pre:
+                self._chunks.remove(c)
+                self._requeue_handle(c.handle, now,
+                                     "(chunk prefill replica left the plan)")
         # 5. rebuild the transport link table from the new replica->device
         #    map, then atomically install the new routing masses
         if hasattr(self.transport, "rebind_plan"):
@@ -1863,6 +2010,7 @@ def gateway_from_plan(plan, cfg: ModelConfig, params, *,
                       chunk_size: int = 4, rt=None,
                       prefill_kw: Optional[Dict] = None,
                       decode_kw: Optional[Dict] = None,
+                      scheduler: Optional[SchedulerConfig] = None,
                       **gw_kw) -> Gateway:
     """Instantiate one phase-switchable :class:`Replica` per plan replica
     (all sharing ``params`` — the in-process stand-in for each group's
@@ -1878,7 +2026,8 @@ def gateway_from_plan(plan, cfg: ModelConfig, params, *,
     decs = [Replica(cfg, params, phase="decode", max_seq=max_seq, rt=rt,
                     prefill_kw=prefill_kw, decode_kw=dkw)
             for _ in plan.decode_replicas]
-    return Gateway(pres, decs, transport=transport, plan=plan, **gw_kw)
+    return Gateway(pres, decs, transport=transport, plan=plan,
+                   scheduler=scheduler, **gw_kw)
 
 
 # -- open-loop driving helpers ------------------------------------------------
@@ -1919,15 +2068,28 @@ def warmup_gateway(gw: Gateway, vocab_size: int, *,
     rng = np.random.default_rng(0)
     pres = [h.client for h in gw.pre]
     decs = [h.client for h in gw.dec]
+    budget = gw.scheduler.prefill_chunk_tokens
     for ln in prompt_lens:
         for k in range(max(len(pres), len(decs))):
             pre = pres[k % len(pres)]
             dec = decs[k % len(decs)]
             req = GenRequest(-1, rng.integers(
                 1, vocab_size, int(ln)).astype(np.int32), max_new)
-            items = pre.prefill([req], compress=gw.compress,
-                                backend=gw.backend)
-            rejected = dec.admit(items, backend=gw.backend)
+            sup = getattr(pre, "supports_suffix", None)
+            if budget > 0 and callable(sup) and sup():
+                # prime the chunked path: every suffix bucket the chunk
+                # walk visits for this prompt length compiles here
+                job = PartialPrefill(req)
+                while not job.done:
+                    pre.prefill_chunk([job], budget, compress=gw.compress,
+                                      backend=gw.backend)
+                items = [(req, job.wire(), job.first)]
+            else:
+                items = pre.prefill([req], compress=gw.compress,
+                                    backend=gw.backend)
+            rejected = dec.admit(AdmissionBatch(
+                [AdmissionItem(r, f, ADMIT_FRESH, wire=w)
+                 for r, w, f in items]), backend=gw.backend)
             if rejected:
                 raise RuntimeError(f"warmup request rejected by decode "
                                    f"replica ({len(rejected)} items)")
@@ -1969,8 +2131,8 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
     i = 0
     it = 0
     last_tick = t0
-    while i < len(pending) or gw.queue or gw.transfer_queue \
-            or gw.retry_queue \
+    while i < len(pending) or gw.queue or gw._chunks \
+            or gw.transfer_queue or gw.retry_queue \
             or any(d.alive and d.client.active for d in gw.dec):
         if tick is not None and gw.clock() - last_tick >= tick_interval_s:
             tick(gw)
@@ -1979,11 +2141,12 @@ def drive_open_loop(gw: Gateway, arrivals: Sequence[Tuple[float,
         while i < len(pending) and pending[i][0] * time_scale <= now:
             handles.append(gw.submit(pending[i][1], on_token=on_token))
             i += 1
-        busy = (gw.queue or gw.transfer_queue or gw.retry_queue
+        busy = (gw.queue or gw._chunks or gw.transfer_queue
+                or gw.retry_queue
                 or any(d.alive and d.client.active for d in gw.dec))
         if busy:
             n = gw.pump()
-            if n == 0 and not gw.queue \
+            if n == 0 and not gw.queue and not gw._chunks \
                     and (gw.transfer_queue or gw.retry_queue) \
                     and not any(d.alive and d.client.active
                                 for d in gw.dec):

@@ -243,6 +243,100 @@ def extract_batch(cache, requests: Sequence[Tuple[int, int]], *,
     return wires
 
 
+def compress_wire(wire: KVWire, *, backend: str = "auto") -> KVWire:
+    """int4-quantize a raw wire's positional tensors (one kernel launch
+    per distinct shape), leaving recurrent-state snapshots raw.
+
+    Quantizes with position-aligned groups — the same layout the
+    padded-extract path produces — so the result of compressing a
+    spliced chunked-prefill wire is bit-identical to a one-shot
+    bucketed extraction of the same cache values, and paged decode
+    engines can scatter its rows zero-copy."""
+    slots: Dict[str, Dict[str, WireTensor]] = {}
+    jobs: List[Tuple[str, str, jnp.ndarray]] = []
+    for name, slot_wire in wire.slots.items():
+        out: Dict[str, WireTensor] = {}
+        for key, wt in slot_wire.items():
+            if (wt.kind == "raw" and len(wt.orig_shape) == 4
+                    and _pick_group(int(np.prod(wt.orig_shape[-2:])))):
+                jobs.append((name, key, jnp.asarray(wt.payload["x"])))
+            else:
+                out[key] = wt
+        slots[name] = out
+    by_shape: Dict[Tuple[int, ...], List[int]] = {}
+    for j, (_, _, t) in enumerate(jobs):
+        by_shape.setdefault(tuple(t.shape), []).append(j)
+    for shape, idxs in by_shape.items():
+        group = _pick_group(int(np.prod(shape[-2:])))
+        wts = _quantize_stacked([jobs[j][2] for j in idxs], backend,
+                                group=group)
+        for j, wt in zip(idxs, wts):
+            name, key, _ = jobs[j]
+            slots[name][key] = wt
+    return KVWire(request_len=wire.request_len, slots=slots)
+
+
+def concat_wires(wires: Sequence[KVWire], *,
+                 backend: str = "auto") -> KVWire:
+    """Splice per-chunk wires along the POSITION axis into one wire equal
+    to a single extraction over the union of positions (chunked prefill).
+
+    int4 payloads concatenate WITHOUT dequantizing: the padded-extract
+    path quantizes with position-aligned groups (row ``t*ppr + r`` holds
+    token ``t``'s ``r``-th group — the same layout contract that makes
+    paged wire inserts zero-copy), so chunk boundaries are also group-row
+    boundaries and the packed/scale/zero rows simply stack. Raw
+    attention tensors concatenate on the position axis; a MIXED run
+    (int4 prefix-cache wire + raw chunk wires) dequantizes the int4
+    parts and splices raw — exactly the values a suffix prefill attends
+    over either way. Recurrent-state snapshots are not positional and
+    cannot be spliced (ValueError) — chunked prefill is gated on
+    ``PrefillEngine.supports_suffix``, which excludes them."""
+    wires = list(wires)
+    if not wires:
+        raise ValueError("concat_wires needs at least one wire")
+    if len(wires) == 1:
+        return wires[0]
+    slots: Dict[str, Dict[str, WireTensor]] = {}
+    for name in wires[0].slots:
+        out: Dict[str, WireTensor] = {}
+        for key in wires[0].slots[name]:
+            wts = [w.slots[name][key] for w in wires]
+            kinds = {wt.kind for wt in wts}
+            lens = [wt.orig_shape[1] for wt in wts]
+            if kinds == {"int4"}:
+                L, _, Hkv, hd = wts[0].orig_shape
+                g2 = wts[0].payload["packed"].shape[1]
+                ppr = (Hkv * hd) // (2 * g2)      # quant rows per position
+                payload = {}
+                for pk in wts[0].payload:
+                    parts = []
+                    for wt, ln in zip(wts, lens):
+                        a = jnp.asarray(wt.payload[pk])
+                        parts.append(a.reshape(L, ln, ppr, a.shape[1]))
+                    cat = jnp.concatenate(parts, axis=1)
+                    payload[pk] = cat.reshape(-1, cat.shape[3])
+                out[key] = WireTensor("int4", payload,
+                                      (L, sum(lens), Hkv, hd),
+                                      wts[0].dtype)
+            elif (kinds <= {"raw", "int4"}
+                  and all(len(wt.orig_shape) == 4 for wt in wts)):
+                cat = jnp.concatenate(
+                    [_dequantize(wt, backend) for wt in wts], axis=1)
+                out[key] = WireTensor("raw", {"x": cat}, tuple(cat.shape),
+                                      next(wt.dtype for wt in wts
+                                           if wt.kind == "raw"))
+            else:
+                raise ValueError(
+                    f"cannot splice wire slot {name}/{key}: "
+                    f"kinds={sorted(kinds)}, shapes="
+                    f"{[wt.orig_shape for wt in wts]} (recurrent-state "
+                    f"snapshots are not positional)")
+        slots[name] = out
+    return KVWire(request_len=sum(w.request_len for w in wires),
+                  slots=slots)
+
+
 def dequantize_prefix_batch(wires: Sequence[KVWire], pad_to: int, *,
                             backend: str = "auto"):
     """Stack per-request prefix wires into ``transformer.prefill_suffix``

@@ -11,8 +11,7 @@ Two in-process realizations ship today:
 
 * :class:`InProcessTransport` — device arrays flow straight through;
   zero delay, no host synchronization (optionally ``materialize=True``
-  to force the explicit host hop, the old ``Coordinator.
-  materialize_wires`` behavior).
+  to force the explicit host hop).
 * :class:`SimNetworkTransport` — alpha-beta cost per link
   (``delay = alpha + bytes / bandwidth``) drawn from a
   :class:`~repro.core.cluster.ClusterSpec` bandwidth matrix (or given
@@ -64,8 +63,7 @@ class InProcessTransport:
     """Same-process handoff: the decode side consumes device arrays
     directly and the hop is free. ``materialize=True`` forces the single
     explicit device->host sync (models collocated processes that still
-    serialize, and preserves the deprecated ``materialize_wires``
-    Coordinator flag)."""
+    serialize)."""
 
     def __init__(self, *, materialize: bool = False,
                  clock: Optional[Callable[[], float]] = None):

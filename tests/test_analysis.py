@@ -130,6 +130,20 @@ def test_r003_reach_through():
     assert rules_of({"src/repro/serving/engine.py": bad}) == []
 
 
+def test_r003_coordinator_stays_deleted():
+    imp = "from repro.serving.coordinator import Coordinator\n"
+    assert rules_of({"tests/test_old.py": imp}) == ["R003"]
+    assert rules_of({"src/repro/launchers.py": imp}) == ["R003"]
+    imp2 = "import repro.serving.coordinator as co\n"
+    assert rules_of({"benchmarks/bench_x.py": imp2}) == ["R003"]
+    cls = "class Coordinator:\n    pass\n"
+    assert rules_of({"src/repro/serving/coordinator.py": cls}) == ["R003"]
+    # a Coordinator class OUTSIDE serving/ is somebody else's business
+    assert rules_of({"src/repro/core/foo.py": cls}) == []
+    ok = "from repro.serving.gateway import Gateway\n"
+    assert rules_of({"tests/test_new.py": ok}) == []
+
+
 # -- R004: FAILED/REJECTED must carry a reason --------------------------------
 
 

@@ -1,0 +1,218 @@
+"""Chunked-prefill parity properties (DESIGN.md §11).
+
+Pins the tentpole contract of SARATHI-style continuous batching: running a
+prompt's prefill as fixed-token chunks (each chunk a suffix prefill over
+the previous chunks' resident KV) must produce the SAME greedy tokens as
+the one-shot prefill — dense and paged decode, page-straddling chunk
+budgets, prefix-cache partial hits — and a cancel mid-chunk must free
+every page exactly once (sanitizer-clean)."""
+import jax
+import numpy as np
+import pytest
+
+try:                         # optional dep: property tests sample widely
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # degrade to a fixed grid, don't skip parity
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import get_reduced
+from repro.models import build
+from repro.serving.engine import (DecodeEngine, GenRequest, PartialPrefill,
+                                  PrefillEngine)
+from repro.serving.gateway import (PREFILLING, Gateway, SchedulerConfig,
+                                   ServeRequest)
+
+KEY = jax.random.PRNGKey(0)
+MAX_NEW = 5
+
+
+_MODEL = None
+
+
+def _model():
+    # module-level cache instead of a pytest fixture: hypothesis @given
+    # tests can't take function arguments from fixtures
+    global _MODEL
+    if _MODEL is None:
+        cfg = get_reduced("llama-30b")
+        api = build(cfg)
+        _MODEL = (cfg, api, api.init(KEY))
+    return _MODEL
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    return _model()
+
+
+def _prompt(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+
+
+def _oneshot_tokens(cfg, params, toks, *, paged):
+    pre = PrefillEngine(cfg, params, max_seq=128)
+    dec = DecodeEngine(cfg, params, max_slots=2, max_seq=128, paged=paged)
+    req = GenRequest(0, toks.copy(), MAX_NEW)
+    (r, w, f), = pre.run([req], backend="ref")
+    assert dec.admit(r, w, f, backend="ref")
+    while dec.active:
+        dec.step()
+    return list(req.out_tokens), w
+
+
+def _chunked_tokens(cfg, params, toks, budget, *, paged):
+    pre = PrefillEngine(cfg, params, max_seq=128)
+    dec = DecodeEngine(cfg, params, max_slots=2, max_seq=128, paged=paged)
+    req = GenRequest(1, toks.copy(), MAX_NEW)
+    job = PartialPrefill(req)
+    ticks = 0
+    while not job.done:
+        pre.prefill_chunk([job], budget, backend="ref")
+        ticks += 1
+        assert ticks <= len(toks) + 2, "chunk loop failed to make progress"
+    assert ticks == -(-len(toks) // budget)
+    assert dec.admit(req, job.wire(), job.first, backend="ref")
+    while dec.active:
+        dec.step()
+    return list(req.out_tokens), job
+
+
+# chunk budgets chosen to straddle the 16-token page boundary from both
+# sides (and one that divides it exactly); prompt lengths likewise leave
+# ragged final chunks and mid-page prompt ends
+_BUDGETS, _LENS = [7, 13, 16, 23], [20, 39, 50]
+
+
+def _parity_cases(fn):
+    """hypothesis sweep when available, a fixed straddle grid otherwise."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=6, deadline=None)(given(
+            st.sampled_from(_BUDGETS), st.sampled_from(_LENS),
+            st.integers(0, 2 ** 31 - 1))(fn))
+    return pytest.mark.parametrize(
+        "budget,n,seed",
+        [(7, 20, 0), (13, 39, 1), (16, 50, 2), (23, 39, 3)])(fn)
+
+
+@_parity_cases
+def test_chunked_prefill_token_parity_dense(budget, n, seed):
+    cfg, api, params = _model()
+    toks = _prompt(cfg, n, seed)
+    one, _ = _oneshot_tokens(cfg, params, toks, paged=False)
+    chk, _ = _chunked_tokens(cfg, params, toks, budget, paged=False)
+    assert chk == one, f"budget={budget} n={n}: {chk} != {one}"
+
+
+@_parity_cases
+def test_chunked_prefill_token_parity_paged(budget, n, seed):
+    cfg, api, params = _model()
+    toks = _prompt(cfg, n, seed)
+    one, _ = _oneshot_tokens(cfg, params, toks, paged=True)
+    chk, _ = _chunked_tokens(cfg, params, toks, budget, paged=True)
+    assert chk == one, f"budget={budget} n={n}: {chk} != {one}"
+
+
+def test_chunked_transport_wire_bit_identical_to_oneshot(small_model):
+    """Chunk KV stays RAW until the job completes, then the spliced whole
+    is quantized once with position-aligned groups — so the admission
+    wire's int4 payloads equal a one-shot extraction's BIT-identically
+    (same floats into the same quantizer layout)."""
+    cfg, api, params = small_model
+    toks = _prompt(cfg, 40, seed=11)
+    _, w_one = _oneshot_tokens(cfg, params, toks, paged=False)
+    _, job = _chunked_tokens(cfg, params, toks, 16, paged=False)
+    assert len(job.wires) == 3                   # raw per-chunk wires
+    assert all(wt.kind == "raw" for w in job.wires
+               for s in w.slots.values() for wt in s.values())
+    w_chunk = job.wire()
+    assert w_chunk.request_len == w_one.request_len == 40
+    for name, tens in w_chunk.slots.items():
+        for key, wt in tens.items():
+            ref = w_one.slots[name][key]
+            assert (wt.kind, wt.orig_shape) == (ref.kind, ref.orig_shape)
+            for part, a in wt.payload.items():
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(ref.payload[part]),
+                    err_msg=f"{name}/{key}/{part}")
+
+
+def test_gateway_chunked_prefix_partial_hit_parity(small_model):
+    """Prefix-cache partial hits compose with chunking: the suffix prefill
+    itself runs chunked, and the spliced result decodes the same greedy
+    tokens as a one-shot gateway serving the identical trace."""
+    cfg, api, params = small_model
+
+    def serve(chunk_tokens):
+        gw = Gateway(
+            [PrefillEngine(cfg, params, max_seq=128)],
+            [DecodeEngine(cfg, params, max_slots=4, max_seq=128,
+                          paged=True, prefix_sharing=True)],
+            scheduler=SchedulerConfig(prefill_chunk_tokens=chunk_tokens),
+            backend="ref")
+        shared = _prompt(cfg, 32, seed=21)          # two full pages
+        long_a = np.concatenate([shared, _prompt(cfg, 24, seed=22)])
+        long_b = np.concatenate([shared, _prompt(cfg, 30, seed=23)])
+        h1 = gw.submit(GenRequest(0, long_a.copy(), MAX_NEW))
+        gw.run_until_drained(max_iters=300)         # donate the chain
+        h2 = gw.submit(GenRequest(1, long_b.copy(), MAX_NEW))
+        gw.run_until_drained(max_iters=300)
+        assert gw.n_prefix_partial >= 1, "second prompt must partial-hit"
+        return list(h1.req.out_tokens), list(h2.req.out_tokens), gw
+
+    one_a, one_b, gw1 = serve(0)
+    chk_a, chk_b, gw2 = serve(13)                   # straddles page ends
+    assert gw2.n_chunked_prefills >= 2
+    assert chk_a == one_a
+    assert chk_b == one_b
+
+
+def test_cancel_mid_chunk_frees_pages_exactly_once(small_model, monkeypatch):
+    """A request cancelled between chunk ticks: its job leaves the chunk
+    set, pins are dropped, and after the drain the paged pool holds zero
+    leaked pages (sanitizer-enabled run)."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    cfg, api, params = small_model
+    dec = DecodeEngine(cfg, params, max_slots=4, max_seq=128, paged=True,
+                       prefix_sharing=True)
+    gw = Gateway([PrefillEngine(cfg, params, max_seq=128)], [dec],
+                 scheduler=SchedulerConfig(prefill_chunk_tokens=8),
+                 backend="ref")
+    assert gw.sanitizer is not None
+    victim = gw.submit(GenRequest(0, _prompt(cfg, 60, seed=31), MAX_NEW))
+    rest = [gw.submit(GenRequest(1 + i, _prompt(cfg, 20, seed=32 + i),
+                                 MAX_NEW)) for i in range(2)]
+    gw.pump()                                      # one chunk tick in
+    assert victim.state == PREFILLING and gw._chunks
+    assert gw.cancel(victim)
+    assert all(c.handle is not victim for c in gw._chunks)
+    assert not gw.cancel(victim)                   # idempotent: freed once
+    gw.run_until_drained(max_iters=300)
+    for h in rest:
+        assert len(h.req.out_tokens) == MAX_NEW
+    st_pages = dec.page_stats()
+    assert st_pages["leaked_pages"] == 0
+    assert st_pages["in_use"] == 0 or st_pages["in_use"] == \
+        st_pages["prefix_pages"], "only donated prefix chains may remain"
+    gw.sanitize_check("cancel_mid_chunk")          # raises on violations
+
+
+def test_cancelled_mid_chunk_preempt_requeue(small_model):
+    """Killing the prefill replica mid-chunk requeues the partially
+    prefilled request through the normal path — no token loss, restart
+    counted — once a replacement replica exists."""
+    cfg, api, params = small_model
+    pres = [PrefillEngine(cfg, params, max_seq=128) for _ in range(2)]
+    gw = Gateway(pres,
+                 [DecodeEngine(cfg, params, max_slots=4, max_seq=128)],
+                 scheduler=SchedulerConfig(prefill_chunk_tokens=8),
+                 backend="ref")
+    h = gw.submit(GenRequest(0, _prompt(cfg, 48, seed=41), MAX_NEW))
+    gw.pump()
+    assert gw._chunks
+    busy = gw._chunks[0].pre
+    gw.kill_replica("prefill", busy.idx)
+    assert not gw._chunks and h in gw.queue and h.restarts == 1
+    gw.run_until_drained(max_iters=300)
+    assert len(h.req.out_tokens) == MAX_NEW

@@ -3,7 +3,7 @@
 Covers: token-identical output of the chunked device loop vs the per-step
 reference, steps-per-host-sync accounting, bucketed prefill equivalence and
 bounded jit cache, quantize->dequantize roundtrips across backends/dtypes,
-batched insert equivalence, wire dtype preservation, and the coordinator's
+batched insert equivalence, wire dtype preservation, and the gateway's
 all-decode-replicas-dead guard."""
 import math
 
@@ -15,8 +15,8 @@ import pytest
 from repro.configs import get_reduced
 from repro.models import build, transformer
 from repro.serving import kv_transfer
-from repro.serving.coordinator import Coordinator
 from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.gateway import Gateway
 
 KEY = jax.random.PRNGKey(0)
 LENS = [8, 12, 17, 24, 9, 31]
@@ -306,35 +306,35 @@ def test_release_frees_slot_and_length(small_model):
     assert eng.slots[0] is None and int(eng.cache["lengths"][0]) == 0
 
 
-# -- coordinator guard ------------------------------------------------------
+# -- gateway guard -----------------------------------------------------------
 
 
 def test_all_decode_dead_surfaces_event(small_model):
     cfg, api, params = small_model
-    coord = Coordinator([PrefillEngine(cfg, params, max_seq=64)],
-                        [DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
-                        backend="ref")
+    gw = Gateway([PrefillEngine(cfg, params, max_seq=64)],
+                 [DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
+                 backend="ref")
     for r in _reqs(cfg, lens=[8, 8], max_new=4):
-        coord.submit(r)
-    coord.kill_replica("decode", 0)
-    coord.pump()
-    coord.pump()
-    outage = [e for e in coord.events if "all decode replicas dead" in e]
+        gw.submit(r)
+    gw.kill_replica("decode", 0)
+    gw.pump()
+    gw.pump()
+    outage = [e for e in gw.events if "all decode replicas dead" in e]
     assert len(outage) == 1          # surfaced once, not spammed
-    assert coord.transfer_queue      # wires wait instead of spinning
+    assert gw.transfer_queue         # wires wait instead of spinning
 
 
-def test_coordinator_drains_all_prefill_replicas(small_model):
+def test_gateway_drains_all_prefill_replicas(small_model):
     cfg, api, params = small_model
     pres = [PrefillEngine(cfg, params, max_seq=64) for _ in range(2)]
     decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=64)
             for _ in range(2)]
-    coord = Coordinator(pres, decs, backend="ref")
+    gw = Gateway(pres, decs, backend="ref")
     for r in _reqs(cfg, lens=[8] * 8, max_new=4):
-        coord.submit(r)
-    coord.pump()
+        gw.submit(r)
+    gw.pump()
     # with 8 queued and max_prefill_batch=4, one pump must feed BOTH
     # replicas (the seed path fed one random replica per pump)
-    assert not coord.queue
-    done = coord.run_until_drained(max_iters=200)
+    assert not gw.queue
+    done = gw.run_until_drained(max_iters=200)
     assert len(done) == 8

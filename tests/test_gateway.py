@@ -1,8 +1,8 @@
 """Serving API v2: request lifecycle through the gateway — streaming
 before drain, cancellation freeing decode slots, deadline-based admission
 control, decode-replica failure re-queueing handles (DECODING -> QUEUED),
-transport-delayed TTFT, priority dispatch, and the deprecated Coordinator
-shim's materialize_wires mapping onto the transport layer."""
+transport-delayed TTFT, priority dispatch, and the legacy GenRequest
+submit path."""
 import time
 
 import jax
@@ -11,11 +11,11 @@ import pytest
 
 from repro.configs import get_reduced
 from repro.models import build
-from repro.serving.coordinator import Coordinator
 from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
 from repro.serving.gateway import (CANCELLED, DECODING, DONE, QUEUED,
                                    REJECTED, TRANSFERRING, Gateway,
-                                   RequestHandle, ServeRequest)
+                                   RequestHandle, SchedulerConfig,
+                                   ServeRequest)
 from repro.serving.transport import InProcessTransport, SimNetworkTransport
 
 KEY = jax.random.PRNGKey(0)
@@ -281,24 +281,22 @@ def test_priority_dispatches_first(small_model):
     assert lo.state == DONE and hi.state == DONE
 
 
-# -- deprecated Coordinator shim ---------------------------------------------
+# -- legacy GenRequest submit + scheduler config ------------------------------
 
 
-def test_coordinator_shim_materialize_wires_and_timestamps(small_model):
-    """The old entry points still work: GenRequest in, finished GenRequests
-    out with timestamps copied back from the handles; materialize_wires
-    now swaps the transport."""
+def test_genrequest_submit_path_and_scheduler_config(small_model):
+    """Bare GenRequest submit still works (no deadlines/priority) and the
+    SchedulerConfig defaults reproduce the legacy one-shot behavior."""
     cfg, api, params = small_model
-    coord = Coordinator([PrefillEngine(cfg, params, max_seq=64)],
-                        [DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
-                        backend="ref")
-    assert not coord.materialize_wires
-    coord.materialize_wires = True
-    assert isinstance(coord.transport, InProcessTransport)
-    assert coord.transport.materialize and coord.materialize_wires
+    gw = Gateway([PrefillEngine(cfg, params, max_seq=64)],
+                 [DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
+                 backend="ref")
+    assert gw.scheduler == SchedulerConfig()
+    assert gw.scheduler.prefill_chunk_tokens == 0   # one-shot prefill
     req = GenRequest(0, _prompt(cfg), max_new_tokens=4)
-    coord.submit(req)
-    done = coord.run_until_drained()
-    assert [r.rid for r in done] == [0] and done[0] is req
+    h = gw.submit(req)
+    done = gw.run_until_drained()
+    assert done == [h] and h.req is req
     assert len(req.out_tokens) == 4
-    assert req.t_done >= req.t_first >= req.t_submit > 0
+    assert h.t_done >= h.t_first >= h.t_submit > 0
+    assert gw.stats()["counters"]["chunked_prefills"] == 0

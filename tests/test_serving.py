@@ -1,5 +1,5 @@
 """Serving runtime integration: KV-transfer roundtrip, continuous batching
-invariants, coordinator end-to-end with failure injection, profiler shifts."""
+invariants, gateway end-to-end with failure injection, profiler shifts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,8 +8,8 @@ import pytest
 from repro.configs import get_reduced
 from repro.models import build, transformer
 from repro.serving import kv_transfer
-from repro.serving.coordinator import Coordinator
 from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.gateway import Gateway
 from repro.serving.profiler import WorkloadProfiler
 
 KEY = jax.random.PRNGKey(0)
@@ -84,22 +84,22 @@ def test_continuous_batching_slots(small_model):
     assert eng.admit(r, w, f, backend="ref")
 
 
-def test_coordinator_failure_injection_finishes_all(small_model):
+def test_gateway_failure_injection_finishes_all(small_model):
     cfg, api, params = small_model
     pre = PrefillEngine(cfg, params, max_seq=64)
     decs = [DecodeEngine(cfg, params, max_slots=4, max_seq=64)
             for _ in range(2)]
-    coord = Coordinator([pre], decs, backend="ref")
+    gw = Gateway([pre], decs, backend="ref")
     rng = np.random.default_rng(1)
     for rid in range(6):
-        coord.submit(GenRequest(
+        gw.submit(GenRequest(
             rid, rng.integers(1, cfg.vocab_size, 12).astype(np.int32),
             max_new_tokens=4))
-    coord.pump()
-    coord.kill_replica("decode", 1)  # mid-flight failure
-    done = coord.run_until_drained(max_iters=300)
+    gw.pump()
+    gw.kill_replica("decode", 1)  # mid-flight failure
+    done = gw.run_until_drained(max_iters=300)
     assert len(done) == 6, "all requests must finish despite the failure"
-    assert any("killed" in e for e in coord.events)
+    assert any("killed" in e for e in gw.events)
 
 
 def test_profiler_shift_detection():

@@ -13,8 +13,8 @@ from repro.core.orchestrator import SloSpec
 from repro.core.simulator import simulate
 from repro.core.workload import CODING, CONVERSATION, generate
 from repro.models import build
-from repro.serving.coordinator import Coordinator
 from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.gateway import Gateway
 
 SLO = SloSpec(ttft_s=2.0, tpot_s=0.15, e2e_s=30.0)
 
@@ -41,19 +41,19 @@ def test_full_pipeline_real_models():
     pre = [PrefillEngine(cfg, params, max_seq=64)]
     dec = [DecodeEngine(cfg, params, max_slots=4, max_seq=64),
            DecodeEngine(cfg, params, max_slots=4, max_seq=64)]
-    coord = Coordinator(pre, dec, backend="ref", compress=True)
+    gw = Gateway(pre, dec, backend="ref", compress=True)
     rng = np.random.default_rng(0)
     n = 8
     for rid in range(n):
-        coord.submit(GenRequest(
+        gw.submit(GenRequest(
             rid, rng.integers(1, cfg.vocab_size,
                               int(rng.choice([8, 12, 16]))).astype(np.int32),
             max_new_tokens=5))
-    done = coord.run_until_drained(max_iters=400)
+    done = gw.run_until_drained(max_iters=400)
     assert len(done) == n
-    for r in done:
-        assert len(r.out_tokens) == 5
-        assert r.t_done >= r.t_first >= r.t_submit
+    for h in done:
+        assert len(h.req.out_tokens) == 5
+        assert h.t_done >= h.t_first >= h.t_submit
 
 
 def test_workload_shift_triggers_lightweight_reschedule():
@@ -61,24 +61,23 @@ def test_workload_shift_triggers_lightweight_reschedule():
     cluster = make_paper_cloud()
     plan = scheduler.schedule(cluster, cfg, CODING, 2.0, SLO, n_step=10,
                               seed=0, patience=8)
-    # coordinator with a profiler observing a coding->conversation shift
+    # gateway with a profiler observing a coding->conversation shift
     cfg_small = get_reduced("llama-30b")
     api = build(cfg_small)
     params = api.init(jax.random.PRNGKey(0))
-    coord = Coordinator([PrefillEngine(cfg_small, params, max_seq=64)],
-                        [DecodeEngine(cfg_small, params, max_slots=2,
-                                      max_seq=64)],
-                        orchestration=plan.orchestration, backend="ref")
+    gw = Gateway([PrefillEngine(cfg_small, params, max_seq=64)],
+                 [DecodeEngine(cfg_small, params, max_slots=2, max_seq=64)],
+                 orchestration=plan.orchestration, backend="ref")
     for i in range(16):
-        coord.profiler.record(1024, 16, t=float(i))
-    coord.profiler.set_baseline()
+        gw.profiler.record(1024, 16, t=float(i))
+    gw.profiler.set_baseline()
     for i in range(64):
-        coord.profiler.record(1024, 140, t=float(16 + i))
-    new_plan = coord.maybe_reschedule(cluster, cfg, plan, 2.0, SLO)
+        gw.profiler.record(1024, 140, t=float(16 + i))
+    new_plan = gw.maybe_reschedule(cluster, cfg, plan, 2.0, SLO)
     assert new_plan is not None, "shift must trigger rescheduling"
     # conversation-ward shift: decode share must not shrink
     assert len(new_plan.decode_replicas) >= len(plan.decode_replicas)
-    assert any("lightweight" in e for e in coord.events)
+    assert any("lightweight" in e for e in gw.events)
 
 
 def test_straggler_routing_reweight():
@@ -90,11 +89,11 @@ def test_straggler_routing_reweight():
     o = Orchestration(X=np.array([1.0]), Y=np.array([[0.5, 0.5]]),
                       Z=np.array([[0.5, 0.5]]), D=np.ones((1, 2)),
                       attainment=1.0, served_frac=1.0)
-    coord = Coordinator([PrefillEngine(cfg, params, max_seq=64)],
-                        [DecodeEngine(cfg, params, max_slots=2, max_seq=64),
-                         DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
-                        orchestration=o, backend="ref")
-    coord.dec[0].ema_latency = 0.01   # fast
-    coord.dec[1].ema_latency = 0.10   # straggler
-    coord.refresh_routing_from_latency()
+    gw = Gateway([PrefillEngine(cfg, params, max_seq=64)],
+                 [DecodeEngine(cfg, params, max_slots=2, max_seq=64),
+                  DecodeEngine(cfg, params, max_slots=2, max_seq=64)],
+                 orchestration=o, backend="ref")
+    gw.dec[0].ema_latency = 0.01   # fast
+    gw.dec[1].ema_latency = 0.10   # straggler
+    gw.refresh_routing_from_latency()
     assert o.Y[0, 0] > o.Y[0, 1], "traffic must shift to the fast replica"
