@@ -135,7 +135,8 @@ def _scenario(cfg, params, spec, chunk_tokens):
 
 def _parity(cfg, params, *, paged, budget=13, n=40, seed=3):
     """1.0 iff chunked greedy tokens == one-shot greedy tokens."""
-    from repro.serving.engine import (DecodeEngine, GenRequest,
+    from repro.serving.engine import (AdmissionBatch, AdmissionItem,
+                                     DecodeEngine, GenRequest,
                                      PartialPrefill, PrefillEngine)
 
     toks = np.random.default_rng(seed).integers(
@@ -153,7 +154,10 @@ def _parity(cfg, params, *, paged, budget=13, n=40, seed=3):
             wire, first = job.wire(), job.first
         else:
             (_, wire, first), = pre.run([req], backend="ref")
-        assert dec.admit(req, wire, first, backend="ref")
+        rej = dec.admit(AdmissionBatch([AdmissionItem(req, first,
+                                                      wire=wire)]),
+                        backend="ref")
+        assert not rej
         while dec.active:
             dec.step()
         outs.append(list(req.out_tokens))

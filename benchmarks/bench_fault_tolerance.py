@@ -125,7 +125,7 @@ def run(quick: bool = False):
     state = {"killed": 0, "start": 0.0}
 
     def baseline_tick(g):
-        rel = time.time() - state["start"]
+        rel = time.perf_counter() - state["start"]
         due = (t_crash, t_preempt + grace_s)   # preemption ignored: the
         if state["killed"] >= len(due):        # node just dies at grace end
             return
@@ -136,11 +136,11 @@ def run(quick: bool = False):
             g.kill_replica("decode", vic, recover=False)
             state["killed"] += 1
 
-    state["start"] = time.time()
+    state["start"] = time.perf_counter()
     handles = drive_open_loop(gw, trace, tick=baseline_tick,
                               tick_interval_s=0.05)
     base = _metrics(handles, e2e_deadline, max_new,
-                    time.time() - state["start"])
+                    time.perf_counter() - state["start"])
     base["attainment"] = base.pop("_attain")
     base["n_replicas_killed"] = state["killed"]
 
@@ -158,14 +158,14 @@ def run(quick: bool = False):
 
     def handled_tick(g):
         if ctl.fired and rec["fired_at"] is None:
-            rec["fired_at"] = time.time()
+            rec["fired_at"] = time.perf_counter()
         if g.epoch >= 1 and rec["epoch_at"] is None:
-            rec["epoch_at"] = time.time()
+            rec["epoch_at"] = time.perf_counter()
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     handles = drive_open_loop(gw, trace, tick=handled_tick,
                               tick_interval_s=0.05)
-    hdl = _metrics(handles, e2e_deadline, max_new, time.time() - t0)
+    hdl = _metrics(handles, e2e_deadline, max_new, time.perf_counter() - t0)
     hdl["slo_attainment"] = hdl.pop("_attain")
     st = gw.stats()
     hdl["counters"] = st["counters"]

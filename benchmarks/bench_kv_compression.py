@@ -17,7 +17,8 @@ from repro.core.simulator import simulate
 from repro.core.workload import CODING, CONVERSATION, generate
 from repro.models import build
 from repro.serving import kv_transfer
-from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.engine import (AdmissionBatch, AdmissionItem,
+                                  DecodeEngine, GenRequest, PrefillEngine)
 
 
 def run(quick: bool = False):
@@ -79,7 +80,8 @@ def run(quick: bool = False):
             dec = DecodeEngine(cfg, params, max_slots=1, max_seq=96)
             req = GenRequest(rid, toks, max_new_tokens=n_new)
             (r, w, f), = pre.run([req], compress=mode, backend="ref")
-            dec.admit(r, w, f, backend="ref")
+            dec.admit(AdmissionBatch([AdmissionItem(r, f, wire=w)]),
+                      backend="ref")
             while dec.active:
                 dec.step()
             outs[mode] = list(req.out_tokens)

@@ -42,13 +42,16 @@ def _make_reqs(cfg, lens, max_new, seed=7):
 
 
 def _drain_tokens_per_s(pre, eng, reqs, *, repeats=1):
+    from repro.serving.engine import AdmissionBatch, AdmissionItem
     done, dt_total, toks = [], 0.0, 0
     for rep in range(repeats):
         for i, r in enumerate(reqs):
             r.out_tokens = []
         wires = pre.run(reqs, backend="ref")
         for r, w, f in wires:
-            assert eng.admit(r, w, f, backend="ref"), "admission must fit"
+            rej = eng.admit(AdmissionBatch([AdmissionItem(r, f, wire=w)]),
+                            backend="ref")
+            assert not rej, "admission must fit"
         t0 = time.perf_counter()
         batch_done = []
         while eng.active:
@@ -64,7 +67,8 @@ def run(quick: bool = False):
 
     from repro.configs import get_reduced
     from repro.models import build
-    from repro.serving.engine import DecodeEngine, PrefillEngine
+    from repro.serving.engine import (AdmissionBatch, AdmissionItem,
+                                      DecodeEngine, PrefillEngine)
 
     cfg = get_reduced("llama-30b")
     api = build(cfg)
@@ -122,7 +126,9 @@ def run(quick: bool = False):
     for i in range(0, len(cap_lens), 8):
         reqs = _make_reqs(cfg, cap_lens[i:i + 8], cap_new, seed=i)
         wires = pre.run(reqs, backend="ref")
-        rejected = many.admit_batch(wires, backend="ref")
+        rejected = many.admit(AdmissionBatch(
+            [AdmissionItem(r, f, wire=w) for r, w, f in wires]),
+            backend="ref")
         admitted += len(wires) - len(rejected)
         if rejected:
             break

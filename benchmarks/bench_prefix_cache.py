@@ -80,7 +80,9 @@ def run(quick: bool = False):
 
     from repro.configs import get_reduced
     from repro.models import build
-    from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+    from repro.serving.engine import (ADMIT_PREFIX_HIT, AdmissionBatch,
+                                      AdmissionItem, DecodeEngine,
+                                      GenRequest, PrefillEngine)
     from repro.serving.gateway import Gateway, warmup_engines
 
     cfg = get_reduced("llama-30b")
@@ -156,7 +158,8 @@ def run(quick: bool = False):
     while True:
         req = GenRequest(cold_n, prompt.copy(), max_new_tokens=4)
         (r, w, f), = pre.run([req], backend="ref")
-        if not cold.admit(r, w, f, backend="ref"):
+        if cold.admit(AdmissionBatch([AdmissionItem(r, f, wire=w)]),
+                      backend="ref"):      # rejected tail -> pool is full
             break
         cold_n += 1
 
@@ -165,7 +168,8 @@ def run(quick: bool = False):
                             num_pages=num_pages, prefix_sharing=True)
     donor = GenRequest(999, prompt.copy(), max_new_tokens=2)
     (r, w, f), = pre.run([donor], backend="ref")
-    assert warm_eng.admit(r, w, f, backend="ref")
+    assert not warm_eng.admit(AdmissionBatch([AdmissionItem(r, f, wire=w)]),
+                              backend="ref")
     while warm_eng.active:
         warm_eng.step()                 # donor retires -> donates its chain
     warm_n = 0
@@ -177,7 +181,9 @@ def run(quick: bool = False):
         tag = ("bench-pin", warm_n)
         if not warm_eng.prefix_pin(m.pages, tag):
             break
-        ok = warm_eng.admit_prefix(req, m.pages, int(m.next_token))
+        ok = not warm_eng.admit(AdmissionBatch(
+            [AdmissionItem(req, int(m.next_token), ADMIT_PREFIX_HIT,
+                           pages=list(m.pages))]))
         warm_eng.prefix_unpin(tag)
         if not ok:
             break

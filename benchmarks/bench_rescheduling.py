@@ -147,19 +147,19 @@ def run_live(quick: bool = False):
             max_new_tokens=max_new, e2e_deadline_s=e2e_deadline)))
     t_flip_trace = arrivals[-1][0] * 0.45
     flip = {"done": False, "wall": 0.0, "requeued": 0, "t": 0.0}
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     def tick(g):
-        if flip["done"] or time.time() - t0 < t_flip_trace:
+        if flip["done"] or time.perf_counter() - t0 < t_flip_trace:
             return
-        ta = time.time()
+        ta = time.perf_counter()
         flip["requeued"] = g.apply_plan(delta)
-        flip["wall"] = time.time() - ta
+        flip["wall"] = time.perf_counter() - ta
         flip["t"] = ta - t0
         flip["done"] = True
 
     handles = drive_open_loop(gw, arrivals, tick=tick, tick_interval_s=0.05)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
 
     t_flip = flip["t"]
     # windows by the plan that actually served each request: pure stale

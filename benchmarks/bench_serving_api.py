@@ -95,9 +95,9 @@ def run(quick: bool = False):
         gw = Gateway([prefill], decodes, transport=transport, backend="ref")
         arrivals = _trace(cfg, n_req, rate, max_new,
                           ttft_deadline=ttft_dl, e2e_deadline=30.0)
-        t0 = time.time()
+        t0 = time.perf_counter()
         handles = drive_open_loop(gw, arrivals)
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         s = summarize_handles(handles)
         s["wall_s"] = wall
         s["ttft_deadline_s"] = ttft_dl

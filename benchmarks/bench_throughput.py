@@ -27,7 +27,9 @@ def _engine_bench(quick: bool):
 
     from repro.configs import get_reduced
     from repro.models import build
-    from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+    from repro.serving.engine import (AdmissionBatch, AdmissionItem,
+                                      DecodeEngine, GenRequest,
+                                      PrefillEngine)
 
     cfg = get_reduced("llama-30b")
     api = build(cfg)
@@ -51,7 +53,8 @@ def _engine_bench(quick: bool):
 
         def drain():
             for r, w, f in pre.run(make_reqs(), backend="ref"):
-                eng.admit(r, w, f, backend="ref")
+                eng.admit(AdmissionBatch([AdmissionItem(r, f, wire=w)]),
+                          backend="ref")
             done = []
             t0 = time.perf_counter()
             while eng.active:

@@ -67,11 +67,11 @@ def main() -> None:
     for key, (mod, desc) in suites.items():
         if only and key not in only:
             continue
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             for r in mod.run(quick=args.quick):
                 print(r, flush=True)
-            print(f"# {key} ({desc}): {time.time()-t0:.1f}s", flush=True)
+            print(f"# {key} ({desc}): {time.perf_counter()-t0:.1f}s", flush=True)
         except Exception as e:
             failures += 1
             print(f"# {key} FAILED: {type(e).__name__}: {e}", flush=True)

@@ -12,10 +12,16 @@ if [[ "${SMOKE_TIER1:-1}" == "1" ]]; then
     echo "== invariant lint (repro.analysis, DESIGN.md §9) =="
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m repro.analysis lint --strict
+    echo "== protocol model check, quick (repro.analysis, DESIGN.md §12) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.analysis check --quick
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 fi
 
 if [[ "${SMOKE_E2E:-0}" == "1" ]]; then
+    echo "== protocol model check, full depth + mutation harness (§12) =="
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} timeout 600 \
+        python -m repro.analysis check --depth 12 --mutations --replay
     echo "== open-loop streaming serve_e2e (paged KV cache) =="
     timeout 600 python examples/serve_e2e.py \
         --requests 6 --rate 2 --max-new 6

@@ -1,17 +1,24 @@
-"""Static invariant linter + runtime sanitizers for the serving stack.
+"""Static analysis + model checking + runtime sanitizers for the
+serving stack.
 
-Two halves:
+Three halves:
 
-* ``repro.analysis.lint`` — stdlib-``ast`` rules R001–R005 over
-  ``src/repro`` and ``benchmarks`` (``python -m repro.analysis lint``).
-  Pure stdlib: importable (and runnable) without jax.
+* ``repro.analysis.lint`` (+ ``repro.analysis.dataflow``) — stdlib-
+  ``ast`` rules R001–R008 over ``src/repro``, ``benchmarks`` and
+  ``tests`` (``python -m repro.analysis lint``). Pure stdlib:
+  importable (and runnable) without jax.
+* ``repro.analysis.modelcheck`` — explicit-state model checker for the
+  request-lifecycle / page-pool / chunked-prefill protocols
+  (``python -m repro.analysis check``), with a mutation harness that
+  proves the checker catches planted protocol bugs. Stdlib except
+  lifecycle-counterexample replay through the real gateway.
 * ``repro.analysis.sanitizers`` — opt-in runtime audits gated on
   ``REPRO_SANITIZE=1``: page leak/double-free/use-after-free tracking,
   request state-machine audits, jit retrace counters, migration-wire
   alignment.
 
-This package root imports nothing heavy; sanitizer symbols load lazily
-so the lint CLI works in an image with no accelerator stack.
+This package root imports nothing heavy; symbols load lazily so the
+lint/check CLIs work in an image with no accelerator stack.
 """
 from __future__ import annotations
 
@@ -21,8 +28,14 @@ _SANITIZER_SYMBOLS = (
     "check_wire_alignment", "GatewaySanitizer",
 )
 
+_MODELCHECK_SYMBOLS = (
+    "explore", "run_check", "run_mutations", "replay_trace",
+    "check_table_drift", "Violation", "CheckResult", "MutationResult",
+    "LifecycleModel", "PoolModel", "ChunkModel", "MUTATIONS",
+)
+
 __all__ = ("lint_sources", "run_lint", "Finding", "RULES",
-           ) + _SANITIZER_SYMBOLS
+           ) + _SANITIZER_SYMBOLS + _MODELCHECK_SYMBOLS
 
 
 def __getattr__(name):
@@ -33,4 +46,7 @@ def __getattr__(name):
     if name in _SANITIZER_SYMBOLS:
         from repro.analysis import sanitizers as _san
         return getattr(_san, name)
+    if name in _MODELCHECK_SYMBOLS:
+        from repro.analysis import modelcheck as _mc
+        return getattr(_mc, name)
     raise AttributeError(name)

@@ -38,7 +38,12 @@ session" prose in CHANGES.md (now DESIGN.md §9):
   from anywhere else. Prefix sharing means a page may have several
   owners; a caller that pokes the maps directly can free a page another
   owner still reads (silent KV corruption). Go through
-  ``alloc``/``share``/``free``/``unshare``/``owned_by``/``owners_of``.
+  ``alloc``/``share``/``free``/``unshare``/``owned_by``/``owners_of``
+  (state branching: ``snapshot``/``restore``/``canonicalize``).
+* **R007 / R008** — wire-provenance dataflow rules (quantize once over
+  the spliced whole; wire layout arithmetic stays in the layout
+  modules). Implemented in :mod:`repro.analysis.dataflow`, run and
+  scoped here.
 
 Escape hatch: ``# repro: ignore[Rnnn]`` on the offending line (or the
 line above) suppresses one rule there; ``--strict`` additionally fails on
@@ -62,6 +67,11 @@ RULES: Dict[str, str] = {
             "the single source of truth)",
     "R006": "page refcount/free-list mutation only in serving/page_pool.py "
             "(use the PagePool API, never its internals)",
+    "R007": "quantize once, over the spliced whole: no double "
+            "quantization, no per-chunk quantization, chunk wires stay "
+            "raw until completion",
+    "R008": "wire layout arithmetic (KVWire/WireTensor construction, "
+            "ppr row math, payload splicing) only in the layout modules",
 }
 
 # the ONE module allowed to touch the refcount maps/free list (R006)
@@ -339,14 +349,44 @@ class _R003(ast.NodeVisitor):
                 and base.value.id == "self")
 
 
+# deleted admission shims: DecodeEngine.admit(AdmissionBatch) is the ONE
+# entry point (gateway §"unified admission"); the per-source variants are
+# gone and must not come back
+_DELETED_ADMIT_SHIMS = ("admit_batch", "admit_prefix", "admit_migrated")
+
+
 class _R003Coordinator(ast.NodeVisitor):
-    """The Coordinator shim (PR 2) was deleted: importing its module or
-    redefining the class in ``serving/`` reintroduces a second public
-    entry point and fails ``--strict``."""
+    """Deleted shims stay deleted. The Coordinator class/module (PR 2)
+    and the per-source admission variants (``admit_batch`` /
+    ``admit_prefix`` / ``admit_migrated``, folded into
+    ``admit(AdmissionBatch)``) each reintroduce a second public entry
+    point and fail ``--strict``."""
 
     def __init__(self, path: str):
         self.path = path
         self.findings: List[Finding] = []
+
+    def _flag_admit(self, node: ast.AST, what: str):
+        self.findings.append(Finding(
+            "R003", self.path, node.lineno, node.col_offset,
+            f"{what} reintroduces a deleted admission shim",
+            "wrap the items in AdmissionItem/AdmissionBatch and call "
+            "admit(batch) — ADMIT_FRESH/CHUNKED/PREFIX_HIT/MIGRATED tag "
+            "the source"))
+
+    def visit_Call(self, node: ast.Call):
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in _DELETED_ADMIT_SHIMS):
+            self._flag_admit(node, f"call to .{node.func.attr}(...)")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        if (node.name in _DELETED_ADMIT_SHIMS
+                and self.path.startswith("src/repro/serving/")):
+            self._flag_admit(node, f"def {node.name} in serving/")
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
 
     def _flag(self, node: ast.AST, what: str):
         self.findings.append(Finding(
@@ -575,9 +615,21 @@ def _r005_cross(trees: Dict[str, ast.Module]) -> List[Finding]:
 # -- rule scoping + driver ----------------------------------------------------
 
 
+# R008: the modules that OWN the wire row-layout contract (plus the
+# runtime auditor, which recomputes it on purpose to audit it)
+_R008_BLESSED = ("src/repro/serving/kv_transfer.py",
+                 "src/repro/serving/page_pool.py",
+                 "src/repro/models/paged.py",
+                 "src/repro/analysis/sanitizers.py")
+
+
 def _in_scope(rule: str, path: str) -> bool:
     if rule == "R001":
-        return path.startswith("src/repro/serving/")
+        # chaos/virtual-clock discipline extends to the suites that drive
+        # the gateway: a test or bench reading wall time silently stops
+        # exercising VirtualClock paths
+        return path.startswith(("src/repro/serving/", "tests/",
+                                "benchmarks/"))
     if rule == "R002":
         return path.startswith(("src/repro/kernels/", "src/repro/models/"))
     if rule == "R003":
@@ -592,6 +644,12 @@ def _in_scope(rule: str, path: str) -> bool:
     if rule == "R006":
         return path != POOL_MODULE and path.startswith(
             ("src/repro/", "benchmarks/"))
+    if rule == "R007":
+        return path.startswith(("src/repro/", "benchmarks/", "tests/"))
+    if rule == "R008":
+        return (path.startswith("src/repro/")
+                and not path.startswith("src/repro/kernels/")
+                and path not in _R008_BLESSED)
     return True
 
 
@@ -602,6 +660,8 @@ def lint_sources(files: Dict[str, str], *,
     This is the testable core: the CLI builds the mapping from the tree,
     unit tests feed synthetic snippets. Returns findings with pragmas
     already applied (plus unused-pragma findings under ``strict``)."""
+    from repro.analysis import dataflow  # deferred: dataflow imports Finding
+
     findings: List[Finding] = []
     trees: Dict[str, ast.Module] = {}
     pragmas: Dict[str, Dict[int, Set[str]]] = {}
@@ -637,6 +697,14 @@ def lint_sources(files: Dict[str, str], *,
             v = _R006(path)
             v.visit(tree)
             findings.extend(v.findings)
+        if _in_scope("R007", path):
+            v = dataflow._R007(path)
+            v.visit(tree)
+            findings.extend(v.findings)
+        if _in_scope("R008", path):
+            v = dataflow._R008(path)
+            v.visit(tree)
+            findings.extend(v.findings)
         findings.extend(_r005_file(path, tree))
     findings.extend(_r005_cross(trees))
     # apply pragmas (a pragma on the finding's line or the line above)
@@ -667,7 +735,7 @@ def lint_sources(files: Dict[str, str], *,
     return kept
 
 
-DEFAULT_ROOTS = ("src/repro", "benchmarks")
+DEFAULT_ROOTS = ("src/repro", "benchmarks", "tests")
 
 
 def collect_files(root, paths: Optional[Sequence[str]] = None

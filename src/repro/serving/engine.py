@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import os
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import paged as paged_fmt
 from repro.models import registry
-from repro.serving import kv_transfer, page_pool
+from repro.serving import kv_transfer, page_pool, protocol
 from repro.serving.kv_transfer import KVWire
 from repro.serving.page_pool import PagePool, pages_needed
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
@@ -263,8 +263,8 @@ class PrefillEngine:
         for job in jobs:
             if job.done or job.remaining <= 0 or left <= 0:
                 continue
-            take = (min(job.remaining, left) if self.supports_suffix
-                    else job.remaining)
+            take = protocol.chunk_take(job.remaining, left,
+                                       self.supports_suffix)
             left -= min(take, left)
             req = job.req
             upto = job.next_pos + take
@@ -282,13 +282,15 @@ class PrefillEngine:
             return jobs
         by_clone = {id(c): (job, take) for job, c, take in work}
         # chunks extract RAW: the resumable prefix must be exact floats
-        for clone, wire, first in self.run([c for _, c, _ in work],
-                                           compress=False,
-                                           backend=backend):
+        # (protocol.chunk_extract_compress() is False by contract)
+        for clone, wire, first in self.run(
+                [c for _, c, _ in work],
+                compress=protocol.chunk_extract_compress(),
+                backend=backend):
             job, take = by_clone[id(clone)]
             job.wires.append(wire)
             job.pos += take
-            if job.next_pos >= len(job.req.tokens):
+            if protocol.chunk_complete(job.next_pos, len(job.req.tokens)):
                 job.done = True
                 job.first = int(first)
                 full = kv_transfer.concat_wires(job.wires)
@@ -540,9 +542,8 @@ class DecodeEngine:
             pages = self.pool.alloc(n, owner)
         return pages
 
-    def admit(self, batch, wire: Optional[KVWire] = None,
-              first_token: Optional[int] = None, *,
-              backend: str = "auto"):
+    def admit(self, batch: AdmissionBatch, *,
+              backend: str = "auto") -> AdmissionBatch:
         """Unified admission: one FIFO pass over an :class:`AdmissionBatch`
         whose items carry a typed source (FRESH | CHUNKED | PREFIX_HIT |
         MIGRATED); returns the rejected tail as an ``AdmissionBatch``.
@@ -554,15 +555,13 @@ class DecodeEngine:
         front so an admitted stream can never die of a mid-decode page
         fault; PREFIX_HIT items share their resident chain (COW-splitting
         the boundary page when the prompt ends mid-page) and wire items
-        scatter in one ``insert_wires`` launch.
-
-        DEPRECATED (one-PR shim): ``admit(req, wire, first_token) ->
-        bool`` still admits a single FRESH request."""
+        scatter in one ``insert_wires`` launch."""
         if not isinstance(batch, AdmissionBatch):
-            rejected = self.admit(AdmissionBatch([AdmissionItem(
-                batch, int(first_token), ADMIT_FRESH, wire=wire)]),
-                backend=backend)
-            return not rejected
+            raise TypeError(
+                "admit() takes an AdmissionBatch — the positional "
+                "admit(req, wire, first_token) shim and the "
+                "admit_batch/admit_prefix/admit_migrated variants were "
+                "deleted (wrap items in AdmissionItem/AdmissionBatch)")
         items = list(batch.items)
         if _sanitize_enabled() and self.paged:
             # a migrated wire re-encoding (instead of zero-copy page
@@ -578,15 +577,6 @@ class DecodeEngine:
         else:
             n = self._admit_dense(items, backend=backend)
         return AdmissionBatch(items[n:])
-
-    def admit_batch(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
-                    *, backend: str = "auto"
-                    ) -> List[Tuple[GenRequest, KVWire, int]]:
-        """DEPRECATED (one-PR shim): FRESH-source form of :meth:`admit`."""
-        rejected = self.admit(AdmissionBatch(
-            [AdmissionItem(r, int(f), ADMIT_FRESH, wire=w)
-             for r, w, f in items]), backend=backend)
-        return [(it.req, it.wire, it.token) for it in rejected.items]
 
     def _admit_dense(self, items: List[AdmissionItem], *, backend) -> int:
         free = self.free_slots()
@@ -698,13 +688,6 @@ class DecodeEngine:
         return page_pool.extract_slot_wire(self.cache, self.cfg, length,
                                            pages)
 
-    def admit_prefix(self, req: GenRequest, pages: List[int],
-                     next_token: int) -> bool:
-        """DEPRECATED (one-PR shim): PREFIX_HIT form of :meth:`admit`."""
-        rejected = self.admit(AdmissionBatch([AdmissionItem(
-            req, int(next_token), ADMIT_PREFIX_HIT, pages=list(pages))]))
-        return not rejected
-
     def _admit_one_prefix(self, req: GenRequest, pages: List[int],
                           next_token: int) -> bool:
         """Admit a FULL prefix hit: every prompt token's KV is already
@@ -723,8 +706,12 @@ class DecodeEngine:
         budget = min(ln + req.max_new_tokens, self.max_seq)
         need_total = min(pages_needed(budget, self.page_size), self.table_w)
         n_extra = max(need_total - len(pages), 0)
-        cow_at = min(ln // self.page_size, self.table_w - 1)
-        cow = cow_at < len(pages)       # next append hits a shared page
+        # next append hits a shared page -> that page must be COW-split
+        # (boundary arithmetic is the protocol contract the model checker
+        # explores; see serving/protocol.py)
+        cow_at = protocol.cow_boundary(ln, self.page_size, self.table_w)
+        cow = protocol.cow_needed(ln, self.page_size, self.table_w,
+                                  len(pages))
         alloced = self._alloc_pages(n_extra + int(cow), slot)
         if alloced is None:
             return False
@@ -755,17 +742,23 @@ class DecodeEngine:
     def _retire_slot(self, slot: int, req: GenRequest, kv_len: int):
         """Release a finished slot's pages, first donating the chain to
         the prefix index — donated pages live on under the index's owner
-        tag; the rest return to the free list."""
-        if (self.prefix_cache is not None and req is not None
-                and kv_len > 0):
-            chain = self._slot_pages.get(slot, [])
-            n_used = pages_needed(kv_len, self.page_size)
-            if chain and n_used <= len(chain):
+        tag; the rest return to the free list. The donate-BEFORE-free
+        ordering comes from ``protocol.retire_steps`` (the model checker
+        explores the same sequence; reversing it shares pages that are
+        already on the free list)."""
+        donate = (self.prefix_cache is not None and req is not None
+                  and kv_len > 0)
+        chain = self._slot_pages.get(slot, []) if donate else []
+        n_used = pages_needed(kv_len, self.page_size) if donate else 0
+        donate = bool(donate and chain and n_used <= len(chain))
+        for op in protocol.retire_steps(donate):
+            if op == "donate":
                 toks = [int(t) for t in req.tokens] + \
                     [int(t) for t in req.out_tokens]
                 self.prefix_cache.insert(toks, kv_len, chain[:n_used],
                                          len(req.tokens), self.pool)
-        self._free_pages_of(slot)
+            elif op == "free":
+                self._free_pages_of(slot)
 
     def clear_prefix(self) -> int:
         """Drop the radix index AND any in-flight pins (drain / phase
@@ -812,17 +805,6 @@ class DecodeEngine:
                                            backend=backend)
             out.append((slot, req, wire, int(self.cur_token[slot])))
         return out
-
-    def admit_migrated(self, items: Sequence[Tuple[GenRequest, KVWire, int]],
-                       *, backend: str = "auto"
-                       ) -> List[Tuple[GenRequest, KVWire, int]]:
-        """DEPRECATED (one-PR shim): MIGRATED form of :meth:`admit` — the
-        third element is the *resume* token (``cur_token``), already in
-        ``out_tokens`` at the source, so it is NOT re-appended."""
-        rejected = self.admit(AdmissionBatch(
-            [AdmissionItem(r, int(t), ADMIT_MIGRATED, wire=w)
-             for r, w, t in items]), backend=backend)
-        return [(it.req, it.wire, it.token) for it in rejected.items]
 
     def _free_pages_of(self, slot: int):
         pages = self._slot_pages.pop(slot, [])

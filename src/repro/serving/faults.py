@@ -247,14 +247,14 @@ class ChaosTransport:
 
 class ChaosClient:
     """Wraps a replica client. Heavy calls (``prefill`` / ``step`` /
-    ``admit`` / ``admit_migrated``) raise :class:`ReplicaCrashError`
-    once this client's stable ``cid`` is marked crashed, and stall for
-    scheduled straggler windows. Lightweight recovery calls
-    (``resident``, ``release``) keep working — post-crash recovery uses
-    gateway-side bookkeeping, not the dead engine — and ``n_free``
-    reports 0 so routing steers away."""
+    ``admit`` — the one admission entry point, all sources) raise
+    :class:`ReplicaCrashError` once this client's stable ``cid`` is
+    marked crashed, and stall for scheduled straggler windows.
+    Lightweight recovery calls (``resident``, ``release``) keep working
+    — post-crash recovery uses gateway-side bookkeeping, not the dead
+    engine — and ``n_free`` reports 0 so routing steers away."""
 
-    _HEAVY = ("prefill", "step", "admit", "admit_migrated")
+    _HEAVY = ("prefill", "step", "admit")
 
     def __init__(self, inner, schedule: FaultSchedule, phase: str, idx: int,
                  clock: Callable[[], float] = time.time):
@@ -292,10 +292,6 @@ class ChaosClient:
     def admit(self, *a, **kw):
         self._gate("admit")
         return self.inner.admit(*a, **kw)
-
-    def admit_migrated(self, *a, **kw):
-        self._gate("admit_migrated")
-        return self.inner.admit_migrated(*a, **kw)
 
     def n_free(self, *a, **kw):
         if self.crashed:

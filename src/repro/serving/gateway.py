@@ -69,33 +69,17 @@ from repro.serving.transport import (InProcessTransport, TransferTicket,
                                      Transport)
 
 # -- request lifecycle --------------------------------------------------------
+#
+# The states and the transition table live in ``serving/protocol.py`` (the
+# stdlib-only contract module the model checker binds to); this module
+# re-exports them under their historical names. ``_TRANSITIONS`` is the
+# SAME object the checker explores — no hand-copied table, so the two
+# cannot drift (repro.analysis.modelcheck, DESIGN.md §12).
 
-QUEUED = "QUEUED"
-PREFILLING = "PREFILLING"
-TRANSFERRING = "TRANSFERRING"
-DECODING = "DECODING"
-DONE = "DONE"
-CANCELLED = "CANCELLED"
-REJECTED = "REJECTED"
-FAILED = "FAILED"
-
-TERMINAL_STATES = frozenset({DONE, CANCELLED, REJECTED, FAILED})
-
-_TRANSITIONS: Dict[str, frozenset] = {
-    # QUEUED -> TRANSFERRING: full prefix-cache hit — every prompt
-    # token's KV is already resident on a decode replica, so prefill is
-    # skipped and the "transfer" is a page handle (DESIGN.md §10)
-    QUEUED: frozenset({PREFILLING, TRANSFERRING, CANCELLED, REJECTED,
-                       FAILED}),
-    # PREFILLING -> QUEUED: the prefill replica crashed mid-batch
-    PREFILLING: frozenset({TRANSFERRING, QUEUED, CANCELLED, FAILED}),
-    TRANSFERRING: frozenset({DECODING, QUEUED, CANCELLED, FAILED}),
-    # DECODING -> TRANSFERRING: mid-stream KV migration off a preempted
-    # decode replica (handle_preemption)
-    DECODING: frozenset({DONE, QUEUED, TRANSFERRING, CANCELLED, FAILED}),
-    DONE: frozenset(), CANCELLED: frozenset(),
-    REJECTED: frozenset(), FAILED: frozenset(),
-}
+from repro.serving.protocol import (CANCELLED, DECODING, DONE, FAILED,
+                                    PREFILLING, QUEUED, REJECTED,
+                                    TERMINAL_STATES, TRANSFERRING)
+from repro.serving.protocol import TRANSITIONS as _TRANSITIONS
 
 
 @dataclass
@@ -301,9 +285,9 @@ class DecodeClient(Protocol):
         """THE admission call: one FIFO pass over typed items (FRESH |
         CHUNKED | PREFIX_HIT | MIGRATED — see ``engine.AdmissionItem``);
         returns the rejected tail. The RPC mapping is one request
-        carrying per-item sources (DESIGN.md §5); the legacy
+        carrying per-item sources (DESIGN.md §5). The legacy
         ``admit_batch``/``admit_prefix``/``admit_migrated`` variants are
-        one-PR deprecation shims."""
+        DELETED — lint rule R003 bans reintroducing them."""
         ...
 
     def step(self, n_steps: Optional[int] = None) -> List[GenRequest]:
@@ -376,10 +360,7 @@ class LocalDecodeClient:
         self.engine = engine
 
     def admit(self, batch, *, backend):
-        if isinstance(batch, AdmissionBatch):
-            return self.engine.admit(batch, backend=backend)
-        # DEPRECATED (one-PR shim): list of (req, wire, first) tuples
-        return self.engine.admit_batch(batch, backend=backend)
+        return self.engine.admit(batch, backend=backend)
 
     def step(self, n_steps=None):
         return self.engine.step(n_steps)
@@ -405,9 +386,6 @@ class LocalDecodeClient:
         return self.engine.extract_resident(compress=compress,
                                             backend=backend)
 
-    def admit_migrated(self, items, *, backend):
-        return self.engine.admit_migrated(items, backend=backend)
-
     def page_stats(self):
         ps = getattr(self.engine, "page_stats", None)
         return ps() if callable(ps) else None
@@ -423,9 +401,6 @@ class LocalDecodeClient:
 
     def extract_prefix(self, pages, length):
         return self.engine.extract_prefix(pages, length)
-
-    def admit_prefix(self, req, pages, next_token) -> bool:
-        return self.engine.admit_prefix(req, pages, next_token)
 
     def jit_cache_size(self) -> int:
         return self.engine.jit_cache_size
@@ -482,11 +457,7 @@ class LocalReplicaClient:
     # -- DecodeClient --------------------------------------------------------
 
     def admit(self, batch, *, backend):
-        eng = self._require("decode")
-        if isinstance(batch, AdmissionBatch):
-            return eng.admit(batch, backend=backend)
-        # DEPRECATED (one-PR shim): list of (req, wire, first) tuples
-        return eng.admit_batch(batch, backend=backend)
+        return self._require("decode").admit(batch, backend=backend)
 
     def step(self, n_steps=None):
         return self._require("decode").step(n_steps)
@@ -513,9 +484,6 @@ class LocalReplicaClient:
         return self._require("decode").extract_resident(compress=compress,
                                                         backend=backend)
 
-    def admit_migrated(self, items, *, backend):
-        return self._require("decode").admit_migrated(items, backend=backend)
-
     def page_stats(self):
         ps = getattr(self._require("decode"), "page_stats", None)
         return ps() if callable(ps) else None
@@ -531,9 +499,6 @@ class LocalReplicaClient:
 
     def extract_prefix(self, pages, length):
         return self._require("decode").extract_prefix(pages, length)
-
-    def admit_prefix(self, req, pages, next_token) -> bool:
-        return self._require("decode").admit_prefix(req, pages, next_token)
 
     def jit_cache_size(self) -> int:
         return self.replica.engine.jit_cache_size
@@ -2050,9 +2015,10 @@ def warmup_engines(prefills: Sequence[PrefillEngine],
             dec = decodes[k % len(decodes)]
             req = GenRequest(-1, rng.integers(
                 1, vocab_size, int(ln)).astype(np.int32), max_new)
-            for r, w, f in pre.run([req], compress=compress,
-                                   backend=backend):
-                dec.admit(r, w, f, backend=backend)
+            dec.admit(AdmissionBatch(
+                [AdmissionItem(r, f, ADMIT_FRESH, wire=w)
+                 for r, w, f in pre.run([req], compress=compress,
+                                        backend=backend)]), backend=backend)
             while dec.active:
                 dec.step()
 

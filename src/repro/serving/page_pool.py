@@ -17,17 +17,20 @@ dequant+quant, still never touching the dense cache layout).
 
 Page 0 is reserved as the TRASH page (see ``models/paged.py``); the
 allocator never hands it out.
+
+The :class:`PagePool` allocator itself is PURE PYTHON — the jax/numpy
+imports the insertion/extraction functions need are deferred into those
+functions, so the model checker (``repro.analysis.modelcheck``, tier-1
+CI) can drive the REAL refcount protocol in an image with no accelerator
+stack installed.
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
+from typing import TYPE_CHECKING, Dict, Hashable, List, Optional, \
+    Sequence, Set, Tuple
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.kernels import ops
-from repro.models import paged
-from repro.serving.kv_transfer import KVWire, WireTensor, _dequantize
+if TYPE_CHECKING:       # heavy imports stay lazy (see module docstring)
+    from repro.serving.kv_transfer import KVWire, WireTensor
 
 
 class PagePool:
@@ -187,6 +190,42 @@ class PagePool:
         the free list), with the owner always explicit."""
         self.free(pages, owner=owner)
 
+    def snapshot(self):
+        """Opaque deep copy of the allocator state (free list, refcount
+        maps, counters) — with :meth:`restore`, the ONE sanctioned way to
+        branch/rewind pool state from outside this module (rule R006:
+        the model checker forks states without touching internals)."""
+        return (list(self._free),
+                {p: set(o) for p, o in self._owners.items()},
+                {o: set(p) for o, p in self._by_owner.items()},
+                (self.allocs, self.frees, self.shares, self.unshares,
+                 self.alloc_failures, self.peak_in_use))
+
+    def restore(self, snap):
+        """Rewind to a :meth:`snapshot` (same pool geometry assumed)."""
+        free, owners, by_owner, counters = snap
+        self._free = list(free)
+        self._owners = {p: set(o) for p, o in owners.items()}
+        self._by_owner = {o: set(p) for o, p in by_owner.items()}
+        (self.allocs, self.frees, self.shares, self.unshares,
+         self.alloc_failures, self.peak_in_use) = counters
+
+    def canonicalize(self):
+        """Sort the free list into a fixed order. Free-list order is
+        semantically irrelevant (any free page serves any alloc) but LIFO
+        recycling makes :meth:`state_key` distinguish states that differ
+        only by allocation history — the model checker calls this after
+        every event as a symmetry reduction, collapsing those
+        permutations so its search closes."""
+        self._free.sort()
+
+    def state_key(self) -> Tuple:
+        """Hashable identity of the allocator state (owner tags by repr)
+        — the model checker's visited-state key."""
+        return (tuple(self._free),
+                tuple(sorted((p, tuple(sorted(repr(o) for o in owners)))
+                             for p, owners in self._owners.items())))
+
     def occupancy(self) -> float:
         return self.n_in_use / max(self.capacity, 1)
 
@@ -219,6 +258,11 @@ def _wire_to_rows(wt: WireTensor, cfg, backend: str):
     """Return (packed, scale, zero) rows in page row-order for one wire
     tensor — zero-copy when the wire layout already matches, otherwise
     re-encoded via one dequant+quant (device ops, no host sync)."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.models import paged
+    from repro.serving.kv_transfer import _dequantize
     g = paged.page_group(cfg)
     ppr = paged.groups_per_token(cfg)
     if _wire_rows_aligned(wt, g, ppr):
@@ -247,6 +291,11 @@ def insert_wires(cache, cfg, items: Sequence[Tuple], *,
     decode's tail appends touch pages here. Updates page-table rows and
     lengths. Returns (cache, n_zero_copy, n_reencoded) — the counters
     feed the bench's zero-dequant claim."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import paged
+    from repro.serving.kv_transfer import _dequantize
     int4 = "kp" in cache["slot0"]
     ps = cache_page_size(cache, cfg)
     ppr = paged.groups_per_token(cfg)
@@ -304,6 +353,8 @@ def set_page_chain(cache, slot: int, pages: Sequence[int], length: int):
     """Point a slot's page-table row at an existing page chain (the full
     prefix-hit admission: every token is already resident, nothing is
     scattered). Row tail stays at the trash page."""
+    import jax.numpy as jnp
+    import numpy as np
     W = cache["page_table"].shape[1]
     if len(pages) > W:
         raise ValueError(f"chain of {len(pages)} pages exceeds table "
@@ -340,6 +391,10 @@ def extract_slot_wire(cache, cfg, ln: int, pages: Sequence[int],
     decode quantizer extract bit-identically to wire-inserted ones
     (``models/paged.py`` keeps the two paths on the same kernel math).
     """
+    import numpy as np
+
+    from repro.models import paged
+    from repro.serving.kv_transfer import KVWire, WireTensor
     int4 = "kp" in cache["slot0"]
     ps = cache_page_size(cache, cfg)
     ppr = paged.groups_per_token(cfg)
@@ -386,6 +441,7 @@ def release_slot(cache, slot: int):
 
 def cache_page_size(cache, cfg) -> int:
     """Recover page_size from the cache shapes (token rows per page)."""
+    from repro.models import paged
     slot = cache["slot0"]
     if "kp" in slot:
         return slot["kp"].shape[2] // paged.groups_per_token(cfg)

@@ -1,13 +1,18 @@
-"""repro.analysis: the R001-R005 invariant linter and the REPRO_SANITIZE
-runtime sanitizers (ISSUE 7).
+"""repro.analysis: the R001-R008 invariant linter, the explicit-state
+protocol model checker, and the REPRO_SANITIZE runtime sanitizers
+(ISSUEs 7 and 10).
 
 Lint rules are exercised on synthetic source snippets through the
 ``lint_sources`` core (each rule fires on a bad snippet and stays quiet on
 the fixed version, plus the pragma escape hatch), and the REAL tree must
-lint clean under ``--strict``. Sanitizer tests plant actual faults — a
-leak, a double free, a free under the wrong owner, an illegal transition,
-a misaligned migration wire — and assert each is caught with a message
-that names the offending site.
+lint clean under ``--strict``. The model checker must explore all three
+protocol models violation-free on the clean tree, catch every planted
+mutation with a counterexample that replays on the real code, and flag
+drift between ``protocol.TRANSITIONS`` and the sanitizer's independent
+copy. Sanitizer tests plant actual faults — a leak, a double free
+(including mid-chunk under chunked prefill), a free under the wrong
+owner, an illegal transition, a misaligned migration wire — and assert
+each is caught with a message that names the offending site.
 """
 import math
 from pathlib import Path
@@ -222,15 +227,15 @@ def test_r006_pool_internal_reach():
 
 def test_pragma_suppresses_and_strict_flags_unused():
     bad = ("import time\n"
-           "now = time.time()  # repro: ignore[R001]\n")
+           "now = time.time()  # repro: " "ignore[R001]\n")
     assert rules_of({"src/repro/serving/foo.py": bad}) == []
     above = ("import time\n"
-             "# repro: ignore[R001]\n"
+             "# repro: " "ignore[R001]\n"
              "now = time.time()\n")
     assert rules_of({"src/repro/serving/foo.py": above}) == []
     # wrong rule id does not suppress
     wrong = ("import time\n"
-             "now = time.time()  # repro: ignore[R003]\n")
+             "now = time.time()  # repro: " "ignore[R003]\n")
     assert rules_of({"src/repro/serving/foo.py": wrong},
                     strict=False) == ["R001"]
     # strict: the R003 pragma above suppressed nothing -> W001 (+ the R001)
@@ -500,3 +505,322 @@ def test_virtual_clock_run_touches_wall_clock_zero_times(small_model,
     # every recorded timestamp sits on the virtual timeline
     for h in done:
         assert all(t >= 1000.0 for t, _ in h.history)
+
+
+# -- R007: quantize once, over the spliced whole ------------------------------
+
+
+def test_r007_double_quantization():
+    bad = ("from repro.serving.kv_transfer import compress_wire\n"
+           "def f(x):\n"
+           "    w = compress_wire(x)\n"
+           "    return compress_wire(w)\n")
+    assert rules_of({"src/repro/serving/foo.py": bad}) == ["R007"]
+    ok = ("from repro.serving.kv_transfer import compress_wire\n"
+          "def f(x):\n"
+          "    return compress_wire(x)\n")
+    assert rules_of({"src/repro/serving/foo.py": ok}) == []
+
+
+def test_r007_quantized_run_output_requantized():
+    # pre.run() defaults to compress=True: its wires are already quantized
+    bad = ("def f(pre, reqs):\n"
+           "    for r, w, first in pre.run(reqs, backend='ref'):\n"
+           "        yield compress_wire(w)\n")
+    assert rules_of({"src/repro/serving/foo.py": bad}) == ["R007"]
+    # compress=False marks the wire raw: quantizing it once is the point
+    ok = ("def f(pre, reqs):\n"
+          "    for r, w, first in pre.run(reqs, compress=False):\n"
+          "        yield compress_wire(w)\n")
+    assert rules_of({"src/repro/serving/foo.py": ok}) == []
+
+
+def test_r007_per_chunk_quantization():
+    # quantizing chunk-by-chunk breaks the resumable raw prefix AND pays
+    # a second quantization at splice time — the exact bug the
+    # chunk-per-chunk-quant mutation plants
+    bad = ("def f(job):\n"
+           "    out = []\n"
+           "    for chunk in job.wires:\n"
+           "        out.append(compress_wire(chunk))\n"
+           "    return out\n")
+    fs = lint_sources({"src/repro/serving/foo.py": bad})
+    assert [f.rule for f in fs] == ["R007"]
+    assert "concat_wires" in (fs[0].hint or "")
+    # the sanctioned shape: splice the raw chunks, quantize the whole once
+    ok = ("from repro.serving.kv_transfer import (compress_wire,\n"
+          "                                       concat_wires)\n"
+          "def f(job):\n"
+          "    whole = concat_wires(job.wires)\n"
+          "    return compress_wire(whole)\n")
+    assert rules_of({"src/repro/serving/foo.py": ok}) == []
+
+
+def test_r007_quantized_chunk_appended_to_wire_list():
+    bad = ("def f(job, x):\n"
+           "    job.wires.append(compress_wire(x))\n")
+    assert rules_of({"src/repro/serving/foo.py": bad}) == ["R007"]
+    ok = ("def f(job, x):\n"
+          "    job.wires.append(extract_kv(x, compress=False))\n")
+    assert rules_of({"src/repro/serving/foo.py": ok}) == []
+
+
+def test_r007_protocol_hook_marks_raw():
+    # the engine's real idiom: compression gated on the PROTOCOL hook, so
+    # the model checker and the dataflow rule see the same policy
+    ok = ("from repro.serving import protocol\n"
+          "def f(pre, job, x):\n"
+          "    w = extract_kv(x, compress=protocol.chunk_extract_compress())\n"
+          "    job.wires.append(w)\n")
+    assert rules_of({"src/repro/serving/engine2.py": ok}) == []
+
+
+# -- R008: wire-layout arithmetic only in the layout modules ------------------
+
+
+def test_r008_wire_construction_outside_layout_modules():
+    bad = ("from repro.serving.kv_transfer import KVWire\n"
+           "def f(ln, slots):\n"
+           "    return KVWire(request_len=ln, slots=slots)\n")
+    assert rules_of({"src/repro/serving/gateway2.py": bad}) == ["R008"]
+    # the layout modules themselves are blessed (R005's separate
+    # import-the-contract obligation still applies there, hence `not in`)
+    assert "R008" not in rules_of({"src/repro/serving/kv_transfer.py": bad})
+    assert "R008" not in rules_of({"src/repro/models/paged.py": bad})
+
+
+def test_r008_row_math_and_payload_splices():
+    row_math = ("def f(L, ln, ppr):\n"
+                "    return L * ln * ppr\n")
+    assert rules_of({"src/repro/serving/foo.py": row_math}) == ["R008"]
+    splice = ("import numpy as np\n"
+              "def f(tensors):\n"
+              "    return np.concatenate([t.payload for t in tensors])\n")
+    assert rules_of({"src/repro/serving/foo.py": splice}) == ["R008"]
+    gpt = ("def f(cfg):\n"
+           "    return groups_per_token(cfg)\n")
+    assert rules_of({"src/repro/serving/foo.py": gpt}) == ["R008"]
+    # kernels/ own the layout definition: out of scope by design
+    assert rules_of({"src/repro/kernels/foo.py": row_math}) == []
+    # ordinary arithmetic that never touches layout names is fine
+    ok = ("def f(a, b):\n"
+          "    return a * b + len([a])\n")
+    assert rules_of({"src/repro/serving/foo.py": ok}) == []
+
+
+# -- R003 extension: deleted admission shims stay deleted ---------------------
+
+
+def test_r003_admit_shims_banned():
+    for shim in ("admit_batch", "admit_prefix", "admit_migrated"):
+        call = f"def f(eng, x):\n    return eng.{shim}(x)\n"
+        fs = lint_sources({"benchmarks/bench_x.py": call})
+        assert [f.rule for f in fs] == ["R003"], shim
+        assert "AdmissionBatch" in (fs[0].hint or "")
+        redef = f"class E:\n    def {shim}(self, x):\n        pass\n"
+        assert rules_of(
+            {"src/repro/serving/engine2.py": redef}) == ["R003"], shim
+    # the unified entry point itself is fine everywhere
+    ok = ("def f(eng, batch):\n"
+          "    return eng.admit(batch, backend='ref')\n")
+    assert rules_of({"benchmarks/bench_x.py": ok}) == []
+    assert rules_of({"src/repro/serving/engine2.py": ok}) == []
+
+
+# -- CLI: --format json / github ----------------------------------------------
+
+
+def _violating_repo(tmp_path):
+    d = tmp_path / "src" / "repro" / "serving"
+    d.mkdir(parents=True)
+    (d / "foo.py").write_text("import time\nnow = time.time()\n")
+    return tmp_path
+
+
+def test_cli_format_json(tmp_path, capsys):
+    import json
+    from repro.analysis.__main__ import main
+    root = _violating_repo(tmp_path)
+    rc = main(["lint", "--root", str(root), "--format", "json"])
+    assert rc == 1
+    out = json.loads(capsys.readouterr().out)
+    assert len(out) == 1
+    f = out[0]
+    assert f["rule"] == "R001" and f["line"] == 2
+    assert f["path"].endswith("src/repro/serving/foo.py")
+    assert set(f) == {"rule", "path", "line", "col", "message", "hint"}
+
+
+def test_cli_format_github(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    root = _violating_repo(tmp_path)
+    rc = main(["lint", "--root", str(root), "--format", "github"])
+    assert rc == 1
+    lines = capsys.readouterr().out.strip().splitlines()
+    assert len(lines) == 1
+    assert lines[0].startswith("::error file=")
+    assert "line=2" in lines[0] and "title=R001" in lines[0]
+
+
+def test_cli_format_json_clean_is_empty_list(tmp_path, capsys):
+    import json
+    from repro.analysis.__main__ import main
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    rc = main(["lint", "--root", str(tmp_path), "--format", "json"])
+    assert rc == 0
+    assert json.loads(capsys.readouterr().out) == []
+
+
+# -- model checker: clean tree, mutations, drift, replay ----------------------
+
+
+def test_modelcheck_clean_tree_explores_all_models():
+    from repro.analysis import modelcheck as mc
+    results = mc.run_check(quick=True)
+    assert sorted(r.model for r in results) == \
+        ["chunkedprefill", "lifecycle", "pagepool"]
+    for r in results:
+        assert r.ok, f"{r.model}: {[v.message for v in r.violations]}"
+        assert r.states > 1 and r.transitions > 0
+
+
+def test_modelcheck_mutation_harness_catches_every_planted_bug():
+    from repro.analysis import modelcheck as mc
+    muts = mc.run_mutations(depth=10)
+    assert len(muts) >= 6
+    for m in muts:
+        assert m.caught, f"checker missed planted bug {m.name}"
+        assert m.message, m.name
+        # every counterexample must replay: pool/chunk traces re-execute
+        # against the real PagePool / protocol hooks (stdlib); lifecycle
+        # replay is the jax-gated opt-in exercised separately
+        if m.model in ("pagepool", "chunkedprefill"):
+            assert m.replayed is True, \
+                f"{m.name}: counterexample did not reproduce on real code"
+            assert m.trace, m.name
+        else:
+            assert m.replayed is None
+    # the mutated models must still be restored: the tree checks clean
+    assert all(r.ok for r in mc.run_check(quick=True))
+
+
+def test_modelcheck_lifecycle_replay_through_real_gateway():
+    """Lifecycle counterexamples replay through the REAL RequestHandle
+    under a VirtualClock with REPRO_SANITIZE on — the missing-edge traces
+    found by the model must raise in gateway._transition too."""
+    pytest.importorskip("jax")
+    from repro.analysis import modelcheck as mc
+    muts = mc.run_mutations(depth=8, lifecycle_replay=True)
+    life = [m for m in muts if m.model == "lifecycle"]
+    assert life, "no lifecycle mutations planted"
+    for m in life:
+        assert m.caught and m.replayed is True, \
+            f"{m.name}: trace {m.trace} did not reproduce on RequestHandle"
+
+
+def test_modelcheck_clean_traces_do_not_reproduce():
+    # replay is a real check, not a rubber stamp: on the UNMUTATED tree a
+    # legal trace replays silently (returns None, no violation)
+    from repro.analysis import modelcheck as mc
+    assert mc.replay_trace(
+        "pagepool", ["admit_fresh_mid:0", "retire:0"]) is None
+    assert mc.replay_trace(
+        "chunkedprefill", ["advance", "advance", "advance"]) is None
+
+
+def test_modelcheck_transition_table_drift(monkeypatch):
+    from repro.analysis import modelcheck as mc
+    from repro.analysis import sanitizers as san
+    assert mc.check_table_drift() == []
+    # the sanitizer's independent copy loses an edge -> drift flagged
+    pruned = dict(san._LEGAL)
+    pruned["DECODING"] = tuple(
+        s for s in pruned["DECODING"] if s != "TRANSFERRING")
+    monkeypatch.setattr(san, "_LEGAL", pruned)
+    viols = mc.check_table_drift()
+    assert len(viols) == 1 and "DECODING" in viols[0].message
+
+
+def test_modelcheck_explore_reports_counterexample_trace():
+    # a minimal inline model with a planted unreachable-event bug: the
+    # trace in the violation must be the exact event path to the failure
+    from repro.analysis import modelcheck as mc
+
+    class Toy:
+        name = "toy"
+
+        def initial(self):
+            return 0
+
+        def events(self, s):
+            return ("inc",) if s < 3 else ()
+
+        def apply(self, s, ev):
+            return s + 1
+
+        def invariants(self, s):
+            return ["hit three"] if s == 3 else []
+
+    res = mc.explore(Toy(), depth=5)
+    assert not res.ok
+    assert res.violations[0].trace == ("inc", "inc", "inc")
+
+
+# -- sanitizers under chunked prefill (satellite 4) ---------------------------
+
+
+def _mk_chunked_gw(cfg, params, *, chunk_tokens=8):
+    from repro.serving.engine import DecodeEngine, PrefillEngine
+    from repro.serving.gateway import Gateway, SchedulerConfig
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    dec = DecodeEngine(cfg, params, max_slots=2, chunk_size=2, max_seq=64,
+                       paged=True, page_size=8)
+    return Gateway([pre], [dec], backend="ref",
+                   scheduler=SchedulerConfig(
+                       prefill_chunk_tokens=chunk_tokens))
+
+
+def test_retrace_monitor_quiet_across_chunk_boundaries(small_model,
+                                                       monkeypatch):
+    """Chunked prefill must not churn decode jit caches: prompts long
+    enough to cross several chunk boundaries drain with the retrace
+    monitor armed, and the steady-state check stays silent."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.serving.gateway import warmup_gateway
+    cfg, params = small_model
+    gw = _mk_chunked_gw(cfg, params, chunk_tokens=8)
+    warmup_gateway(gw, cfg.vocab_size, prompt_lens=(24,))
+    for r in _reqs(cfg, 3, plen=24):          # 24 tokens / 8 = 3 chunks
+        gw.submit(r)
+    done = gw.run_until_drained()             # drain runs sanitize_check
+    assert len(done) == 3 and all(h.state == "DONE" for h in done)
+    assert gw.stats()["counters"]["chunked_prefills"] >= 3
+    gw.sanitizer.retrace.check(gw, context="post-chunked-drain")  # no raise
+
+
+def test_mid_chunk_double_free_caught_by_sanitized_pool(small_model,
+                                                        monkeypatch):
+    """A double free planted WHILE a chunked prefill is mid-flight (the
+    job paused between chunks, decode pool live) is caught by the
+    sanitized pool with both sites named — chunking must not open a
+    window where pool bookkeeping goes unaudited."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    from repro.serving.engine import (DecodeEngine, GenRequest,
+                                      PartialPrefill, PrefillEngine)
+    cfg, params = small_model
+    pre = PrefillEngine(cfg, params, max_seq=64)
+    eng = DecodeEngine(cfg, params, max_slots=2, max_seq=64,
+                       paged=True, page_size=8)
+    rng = np.random.default_rng(0)
+    job = PartialPrefill(GenRequest(0, rng.integers(
+        1, cfg.vocab_size, 24).astype(np.int32), 4))
+    pre.prefill_chunk([job], 8, backend="ref")
+    assert not job.done                        # mid-chunk: 8/24 prefilled
+    pages = eng.pool.alloc(2, 0)
+    eng.pool.free(pages, owner=0)
+    with pytest.raises(SanitizerError, match="already freed"):
+        eng.pool.free(pages, owner=0)
+    # the job is still resumable after the refused free
+    while not job.done:
+        pre.prefill_chunk([job], 8, backend="ref")
+    assert job.wire() is not None

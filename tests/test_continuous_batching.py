@@ -16,6 +16,8 @@ try:                         # optional dep: property tests sample widely
 except ImportError:          # degrade to a fixed grid, don't skip parity
     HAVE_HYPOTHESIS = False
 
+from conftest import admit_one
+
 from repro.configs import get_reduced
 from repro.models import build
 from repro.serving.engine import (DecodeEngine, GenRequest, PartialPrefill,
@@ -56,7 +58,7 @@ def _oneshot_tokens(cfg, params, toks, *, paged):
     dec = DecodeEngine(cfg, params, max_slots=2, max_seq=128, paged=paged)
     req = GenRequest(0, toks.copy(), MAX_NEW)
     (r, w, f), = pre.run([req], backend="ref")
-    assert dec.admit(r, w, f, backend="ref")
+    assert admit_one(dec, r, f, wire=w, backend="ref")
     while dec.active:
         dec.step()
     return list(req.out_tokens), w
@@ -73,7 +75,7 @@ def _chunked_tokens(cfg, params, toks, budget, *, paged):
         ticks += 1
         assert ticks <= len(toks) + 2, "chunk loop failed to make progress"
     assert ticks == -(-len(toks) // budget)
-    assert dec.admit(req, job.wire(), job.first, backend="ref")
+    assert admit_one(dec, req, job.first, wire=job.wire(), backend="ref")
     while dec.active:
         dec.step()
     return list(req.out_tokens), job

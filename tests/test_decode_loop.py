@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import admit_one
+
 from repro.configs import get_reduced
 from repro.models import build, transformer
 from repro.serving import kv_transfer
@@ -52,9 +54,9 @@ def test_device_loop_token_identical(small_model):
                            chunk_size=8)
     ref = DecodeEngine(cfg, params, max_slots=len(LENS), max_seq=64)
     for r, w, f in res_a:
-        assert chunked.admit(r, w, f, backend="ref")
+        assert admit_one(chunked, r, f, wire=w, backend="ref")
     for r, w, f in res_b:
-        assert ref.admit(r, w, f, backend="ref")
+        assert admit_one(ref, r, f, wire=w, backend="ref")
     done_c, done_r = [], []
     while chunked.active:
         done_c += chunked.step()
@@ -72,7 +74,7 @@ def test_steps_per_host_sync(small_model):
     eng = DecodeEngine(cfg, params, max_slots=len(LENS), max_seq=64,
                        chunk_size=8)
     for r, w, f in pre.run(_reqs(cfg, max_new=16), backend="ref"):
-        eng.admit(r, w, f, backend="ref")
+        admit_one(eng, r, f, wire=w, backend="ref")
     while eng.active:
         eng.step()
     assert eng.steps_run / eng.host_syncs >= 8
@@ -86,7 +88,7 @@ def test_chunk_respects_max_new_and_eos(small_model):
     eng = DecodeEngine(cfg, params, max_slots=4, max_seq=64, chunk_size=16)
     reqs = _reqs(cfg, lens=[8, 12], max_new=3)
     for r, w, f in pre.run(reqs, backend="ref"):
-        eng.admit(r, w, f, backend="ref")
+        admit_one(eng, r, f, wire=w, backend="ref")
     done = []
     while eng.active:
         done += eng.step()
@@ -274,7 +276,7 @@ def test_chunked_step_releases_lengths_on_finish(small_model):
     eng = DecodeEngine(cfg, params, max_slots=1, max_seq=64, chunk_size=4)
     req_a, req_b = _reqs(cfg, lens=[24, 9], max_new=6)
     (a, wa, fa), = pre.run([req_a], backend="ref")
-    assert eng.admit(a, wa, fa, backend="ref")
+    assert admit_one(eng, a, fa, wire=wa, backend="ref")
     while eng.active:
         eng.step()
     assert int(eng.cache["lengths"][0]) == 0, \
@@ -282,13 +284,13 @@ def test_chunked_step_releases_lengths_on_finish(small_model):
     # recycle the slot: admit -> finish -> admit; tokens must match a
     # fresh engine decoding the same request
     (b, wb, fb), = pre.run([req_b], backend="ref")
-    assert eng.admit(b, wb, fb, backend="ref")
+    assert admit_one(eng, b, fb, wire=wb, backend="ref")
     while eng.active:
         eng.step()
     fresh = DecodeEngine(cfg, params, max_slots=1, max_seq=64, chunk_size=4)
     req_b2 = GenRequest(99, req_b.tokens, max_new_tokens=6)
     (b2, wb2, fb2), = pre.run([req_b2], backend="ref")
-    assert fresh.admit(b2, wb2, fb2, backend="ref")
+    assert admit_one(fresh, b2, fb2, wire=wb2, backend="ref")
     while fresh.active:
         fresh.step()
     assert b.out_tokens == b2.out_tokens, \
@@ -300,7 +302,7 @@ def test_release_frees_slot_and_length(small_model):
     pre = PrefillEngine(cfg, params, max_seq=64)
     eng = DecodeEngine(cfg, params, max_slots=2, max_seq=64)
     (r, w, f), = pre.run(_reqs(cfg, lens=[12], max_new=8), backend="ref")
-    assert eng.admit(r, w, f, backend="ref")
+    assert admit_one(eng, r, f, wire=w, backend="ref")
     assert int(eng.cache["lengths"][0]) == 12
     assert eng.release(0) is r
     assert eng.slots[0] is None and int(eng.cache["lengths"][0]) == 0

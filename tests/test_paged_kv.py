@@ -13,6 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import admit_many, admit_one
+
 from repro.configs import get_reduced
 from repro.kernels import ops, ref
 from repro.models import build, paged
@@ -226,9 +228,9 @@ def test_paged_chunked_matches_paged_reference(small_model):
     a = DecodeEngine(cfg, params, chunk_size=8, **kw)
     b = DecodeEngine(cfg, params, **kw)
     for r, w, f in pre.run(_reqs(cfg, lens, 12), backend="ref"):
-        assert a.admit(r, w, f, backend="ref")
+        assert admit_one(a, r, f, wire=w, backend="ref")
     for r, w, f in pre.run(_reqs(cfg, lens, 12), backend="ref"):
-        assert b.admit(r, w, f, backend="ref")
+        assert admit_one(b, r, f, wire=w, backend="ref")
     done_a, done_b = [], []
     while a.active:
         done_a += a.step()
@@ -247,7 +249,7 @@ def test_paged_finish_returns_all_pages(small_model):
                        paged=True, page_size=8)
     total = eng.pool.n_free
     for r, w, f in pre.run(_reqs(cfg, [8, 17, 24], 6), backend="ref"):
-        assert eng.admit(r, w, f, backend="ref")
+        assert admit_one(eng, r, f, wire=w, backend="ref")
     assert eng.pool.n_in_use > 0
     while eng.active:
         eng.step()
@@ -265,7 +267,7 @@ def test_paged_release_mid_stream_returns_every_page(small_model):
                        paged=True, page_size=8)
     total = eng.pool.n_free
     (r, w, f), = pre.run(_reqs(cfg, [20], max_new=30), backend="ref")
-    assert eng.admit(r, w, f, backend="ref")
+    assert admit_one(eng, r, f, wire=w, backend="ref")
     held = len(eng.pool.owned_by(0))
     assert held == pages_needed(20 + 30, 8)
     eng.step()                              # mid-stream
@@ -275,7 +277,7 @@ def test_paged_release_mid_stream_returns_every_page(small_model):
     # the freed budget is immediately re-admissible
     (r2, w2, f2), = pre.run(_reqs(cfg, [40], max_new=16, seed=3),
                             backend="ref")
-    assert eng.admit(r2, w2, f2, backend="ref")
+    assert admit_one(eng, r2, f2, wire=w2, backend="ref")
 
 
 def test_paged_admission_is_page_budget_gated(small_model):
@@ -287,7 +289,7 @@ def test_paged_admission_is_page_budget_gated(small_model):
     eng = DecodeEngine(cfg, params, max_slots=8, max_seq=64, paged=True,
                        page_size=8, num_pages=7)      # 6 usable pages
     wires = pre.run(_reqs(cfg, [20, 20, 20], max_new=12), backend="ref")
-    rejected = eng.admit_batch(wires, backend="ref")
+    rejected = admit_many(eng, wires, backend="ref")
     # each request needs ceil(32/8) = 4 pages; only one fits in 6
     assert len(rejected) == 2
     assert eng.active == 1
@@ -308,7 +310,7 @@ def test_paged_zero_dequant_inserts_from_bucketed_wire(small_model):
     eng = DecodeEngine(cfg, params, max_slots=4, max_seq=64, paged=True,
                        page_size=8)
     for r, w, f in pre.run(_reqs(cfg, [9, 17], 4), backend="ref"):
-        assert eng.admit(r, w, f, backend="ref")
+        assert admit_one(eng, r, f, wire=w, backend="ref")
     assert eng.zero_copy_inserts > 0
     assert eng.reencoded_inserts == 0
     # raw (uncompressed) wires take the re-encode path instead
@@ -316,7 +318,7 @@ def test_paged_zero_dequant_inserts_from_bucketed_wire(small_model):
                         page_size=8)
     for r, w, f in pre.run(_reqs(cfg, [9], 4), compress=False,
                            backend="ref"):
-        assert eng2.admit(r, w, f, backend="ref")
+        assert admit_one(eng2, r, f, wire=w, backend="ref")
     assert eng2.reencoded_inserts > 0 and eng2.zero_copy_inserts == 0
 
 
@@ -327,7 +329,7 @@ def test_paged_bf16_resident_decodes(small_model):
                        paged=True, page_size=8, kv_resident="bf16")
     done = []
     for r, w, f in pre.run(_reqs(cfg, [8, 12], 6), backend="ref"):
-        assert eng.admit(r, w, f, backend="ref")
+        assert admit_one(eng, r, f, wire=w, backend="ref")
     while eng.active:
         done += eng.step()
     assert sorted(len(r.out_tokens) for r in done) == [6, 6]
@@ -341,7 +343,7 @@ def test_paged_unsupported_arch_falls_back():
     assert not eng.paged and eng.paged_fallback
     pre = PrefillEngine(cfg, params, max_seq=64)
     (r, w, f), = pre.run(_reqs(cfg, [8], 4), backend="ref")
-    assert eng.admit(r, w, f, backend="ref")
+    assert admit_one(eng, r, f, wire=w, backend="ref")
     while eng.active:
         eng.step()
     assert len(r.out_tokens) == 4
@@ -357,7 +359,7 @@ def test_paged_pool_survives_phase_flip(small_model):
     eng = rep.engine
     pool = eng.pool
     for r, w, f in pre.run(_reqs(cfg, [8], 4), backend="ref"):
-        assert eng.admit(r, w, f, backend="ref")
+        assert admit_one(eng, r, f, wire=w, backend="ref")
     with pytest.raises(RuntimeError, match="undrained"):
         rep.switch_phase("prefill")
     while eng.active:

@@ -17,9 +17,13 @@ import jax
 import numpy as np
 import pytest
 
+from conftest import admit_one
+
 from repro.configs import get_reduced
 from repro.models import build
-from repro.serving.engine import DecodeEngine, GenRequest, PrefillEngine
+from repro.serving.engine import (ADMIT_MIGRATED, ADMIT_PREFIX_HIT,
+                                  AdmissionBatch, AdmissionItem,
+                                  DecodeEngine, GenRequest, PrefillEngine)
 from repro.serving.page_pool import PagePool, pages_needed
 from repro.serving.prefix_cache import PREFIX_OWNER, PrefixCache
 
@@ -237,7 +241,7 @@ def _run_cold(cfg, params, pre, prompt, max_new, rid=0):
                        paged=True, page_size=PS)
     r = GenRequest(rid, prompt.copy(), max_new_tokens=max_new)
     (rr, w, f), = pre.run([r], backend="ref")
-    assert eng.admit(rr, w, f, backend="ref")
+    assert admit_one(eng, rr, f, wire=w, backend="ref")
     while eng.active:
         eng.step()
     return list(r.out_tokens)
@@ -266,7 +270,7 @@ def test_full_hit_bit_identical_with_cow(small_model):
     eng = _mk_eng(cfg, params)
     r1 = GenRequest(1, prompt.copy(), max_new_tokens=6)
     (rr, w, f), = pre.run([r1], backend="ref")
-    assert eng.admit(rr, w, f, backend="ref")
+    assert admit_one(eng, rr, f, wire=w, backend="ref")
     while eng.active:
         eng.step()
     assert list(r1.out_tokens) == cold        # donor == cold already
@@ -279,7 +283,8 @@ def test_full_hit_bit_identical_with_cow(small_model):
     before = _wire_payloads(eng.extract_prefix(m.pages, m.length))
 
     r2 = GenRequest(2, prompt.copy(), max_new_tokens=6)
-    assert eng.admit_prefix(r2, m.pages, m.next_token)
+    assert admit_one(eng, r2, m.next_token, pages=list(m.pages),
+                 source=ADMIT_PREFIX_HIT)
     eng.prefix_unpin(tag)
     # prompt ends mid-page (12 into page 1): exactly one COW copy
     assert eng.cow_copies == 1
@@ -305,14 +310,15 @@ def test_page_aligned_full_hit_needs_no_cow(small_model):
     eng = _mk_eng(cfg, params)
     r1 = GenRequest(1, prompt.copy(), max_new_tokens=5)
     (rr, w, f), = pre.run([r1], backend="ref")
-    assert eng.admit(rr, w, f, backend="ref")
+    assert admit_one(eng, rr, f, wire=w, backend="ref")
     while eng.active:
         eng.step()
     cold = list(r1.out_tokens)
     m = eng.prefix_match(prompt)
     assert m is not None and m.full and m.pages and len(m.pages) == 2
     r2 = GenRequest(2, prompt.copy(), max_new_tokens=5)
-    assert eng.admit_prefix(r2, m.pages, m.next_token)
+    assert admit_one(eng, r2, m.next_token, pages=list(m.pages),
+                 source=ADMIT_PREFIX_HIT)
     assert eng.cow_copies == 0
     while eng.active:
         eng.step()
@@ -333,7 +339,7 @@ def test_partial_hit_suffix_prefill_splices_shared_chain(small_model):
     eng = _mk_eng(cfg, params)
     r1 = GenRequest(1, base.copy(), max_new_tokens=4)
     (rr, w, f), = pre.run([r1], backend="ref")
-    assert eng.admit(rr, w, f, backend="ref")
+    assert admit_one(eng, rr, f, wire=w, backend="ref")
     while eng.active:
         eng.step()
 
@@ -352,7 +358,7 @@ def test_partial_hit_suffix_prefill_splices_shared_chain(small_model):
     r2.prefix_wire = eng.extract_prefix(m.pages, m.length)
     (rr2, w2, f2), = pre.run([r2], backend="ref")
     assert w2.request_len == len(prompt2) - 16, "wire covers only the suffix"
-    assert eng.admit(rr2, w2, f2, backend="ref")
+    assert admit_one(eng, rr2, f2, wire=w2, backend="ref")
     eng.prefix_unpin(tag)
     while eng.active:
         eng.step()
@@ -372,13 +378,14 @@ def test_cow_slot_migrates_bit_identical(small_model):
     eng_a = _mk_eng(cfg, params, chunk_size=2)
     r1 = GenRequest(1, prompt.copy(), max_new_tokens=8)
     (rr, w, f), = pre.run([r1], backend="ref")
-    assert eng_a.admit(rr, w, f, backend="ref")
+    assert admit_one(eng_a, rr, f, wire=w, backend="ref")
     while eng_a.active:
         eng_a.step()
     m = eng_a.prefix_match(prompt)
     assert m is not None and m.full
     r2 = GenRequest(2, prompt.copy(), max_new_tokens=8)
-    assert eng_a.admit_prefix(r2, m.pages, m.next_token)
+    assert admit_one(eng_a, r2, m.next_token, pages=list(m.pages),
+                 source=ADMIT_PREFIX_HIT)
     assert eng_a.cow_copies == 1
     eng_a.step()                              # mid-stream (2 more tokens)
     assert 0 < len(r2.out_tokens) < 8
@@ -387,7 +394,9 @@ def test_cow_slot_migrates_bit_identical(small_model):
     assert len(items) == 1
     slot, req, wire, cur = items[0]
     eng_b = _mk_eng(cfg, params)
-    rej = eng_b.admit_migrated([(req, wire, cur)], backend="ref")
+    rej = eng_b.admit(AdmissionBatch(
+        [AdmissionItem(req, cur, ADMIT_MIGRATED, wire=wire)]),
+        backend="ref")
     assert not rej
     eng_a.release(slot)
     while eng_b.active:

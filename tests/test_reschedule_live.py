@@ -12,6 +12,8 @@ import jax
 import numpy as np
 import pytest
 
+from conftest import admit_one
+
 from repro.configs import get_config, get_reduced
 from repro.core import parallel as par
 from repro.core import scheduler, tabu
@@ -164,7 +166,7 @@ def test_replica_refuses_undrained_flip(small_model):
     pre = PrefillEngine(cfg, params, max_seq=64)
     req = GenRequest(0, _prompt(cfg), max_new_tokens=8)
     for r, w, f in pre.run([req], compress=True, backend="ref"):
-        assert rep.engine.admit(r, w, f, backend="ref")
+        assert admit_one(rep.engine, r, f, wire=w, backend="ref")
     assert not rep.drained
     with pytest.raises(RuntimeError, match="undrained"):
         rep.switch_phase()

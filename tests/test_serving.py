@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import admit_one
+
 from repro.configs import get_reduced
 from repro.models import build, transformer
 from repro.serving import kv_transfer
@@ -72,7 +74,7 @@ def test_continuous_batching_slots(small_model):
     results = pre.run(reqs, backend="ref")
     admitted = 0
     for r, w, f in results:
-        if eng.admit(r, w, f, backend="ref"):
+        if admit_one(eng, r, f, wire=w, backend="ref"):
             admitted += 1
     assert admitted == 2, "third request must wait for a free slot"
     done = []
@@ -81,7 +83,7 @@ def test_continuous_batching_slots(small_model):
     assert len(done) == 2
     # now the third fits
     r, w, f = results[2]
-    assert eng.admit(r, w, f, backend="ref")
+    assert admit_one(eng, r, f, wire=w, backend="ref")
 
 
 def test_gateway_failure_injection_finishes_all(small_model):
